@@ -1,0 +1,40 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import (ClusterCfg, InstanceCfg, ModelSpec, NetworkCfg,
+                        PrefixCacheCfg, RouterCfg, SchedulerCfg, TraceRegistry)
+from repro.core.config import RTX3090, HardwareSpec
+from repro.profiler import model_spec_from_arch
+from repro.configs import get_config
+
+ENGINE_HW = HardwareSpec(    # matches the CPU engine environment
+    name="cpu-engine", peak_flops=5e10, hbm_bw=20e9, hbm_capacity=8e9,
+    link_bw=8e9, host_bw=8e9)
+
+DENSE_TINY = "llama3.1-8b-tiny"
+MOE_TINY = "phimini-moe-tiny"
+
+
+def engine_matched_instance(name: str, arch: str, *, role: str = "unified",
+                            max_batch: int = 4, prefix_cache: bool = False,
+                            trace_name: Optional[str] = None) -> InstanceCfg:
+    """Sim instance configured to mirror a ServingEngine(max_batch, 512)."""
+    spec = model_spec_from_arch(get_config(arch))
+    return InstanceCfg(
+        name=name, hw=ENGINE_HW, model=spec, n_devices=1, role=role,
+        scheduler=SchedulerCfg(
+            max_batch_size=max_batch, max_batch_tokens=1 << 16,
+            chunked_prefill=False, prefill_exclusive=True,
+            bucket_prefill=True, decode_pad_to=max_batch),
+        prefix_cache=PrefixCacheCfg(enabled=prefix_cache, block_tokens=16,
+                                    capacity_fraction=0.5),
+        trace_name=trace_name or arch)
+
+
+def pct_err(sim: float, real: float) -> float:
+    if real is None or sim is None or real == 0:
+        return float("nan")
+    return 100.0 * abs(sim - real) / abs(real)

@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run records (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_baseline.jsonl")
+
+
+def load(path: str = RESULTS):
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except Exception:
+                pass
+    # dedupe: keep the last record per cell
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r["multi_pod"],
+              r.get("attn_impl", "flash"))] = r
+    return list(seen.values())
+
+
+def table(recs, multi_pod: bool = False):
+    rows = []
+    for r in recs:
+        if r["status"] != "ok" or r["multi_pod"] != multi_pod:
+            continue
+        roof = r["roofline"]
+        terms = {"compute": roof["t_compute_s"],
+                 "memory": roof["t_memory_s"],
+                 "collective": roof["t_collective_s"]}
+        dominant = max(terms, key=terms.get)
+        bound = max(terms.values())
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute_s": roof["t_compute_s"],
+            "t_memory_s": roof["t_memory_s"],
+            "t_collective_s": roof["t_collective_s"],
+            "bottleneck": dominant,
+            "roofline_frac": roof["t_compute_s"] / max(bound, 1e-30),
+            "useful_flops_frac": r.get("useful_flops_frac"),
+            "temp_gb": r.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+            "compile_s": r.get("compile_s"),
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def run():
+    recs = load()
+    rows = table(recs, multi_pod=False)
+    for r in rows:
+        print(f"roofline,{r['arch']},{r['shape']},bottleneck={r['bottleneck']},"
+              f"frac={r['roofline_frac']:.3f},useful={r['useful_flops_frac']:.2f}",
+              flush=True)
+    n_ok = len(rows)
+    n_skip = sum(1 for r in recs if r["status"] == "skipped"
+                 and not r["multi_pod"])
+    worst = sorted(rows, key=lambda r: r["roofline_frac"])[:3]
+    return {"rows": rows, "n_ok": n_ok, "n_skipped": n_skip,
+            "worst_cells": [(w["arch"], w["shape"]) for w in worst]}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1, default=float))

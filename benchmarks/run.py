@@ -1,0 +1,71 @@
+"""Benchmark harness: one function per paper table/figure.
+
+  python -m benchmarks.run [--quick]
+
+Prints ``name,metric=value`` CSV lines per benchmark and writes the full
+JSON to results/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: capabilities,table3,fig2,"
+                         "fig3,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    out = {}
+    t_total = time.time()
+
+    def want(name):
+        return only is None or name in only
+
+    if want("capabilities"):
+        from benchmarks.capabilities import run as caps
+        t0 = time.time()
+        out["capabilities"] = caps()
+        print(f"capabilities,elapsed_s={time.time()-t0:.1f}", flush=True)
+
+    if want("fig3"):
+        from benchmarks.fig3_simtime import run as fig3
+        t0 = time.time()
+        out["fig3_simtime"] = fig3(n_requests=100)
+        print(f"fig3,elapsed_s={time.time()-t0:.1f}", flush=True)
+
+    if want("table3"):
+        from benchmarks.table3_integration import run as table3
+        t0 = time.time()
+        out["table3_integration"] = table3()
+        print(f"table3,elapsed_s={time.time()-t0:.1f}", flush=True)
+
+    if want("fig2"):
+        from benchmarks.fig2_fidelity import run as fig2
+        t0 = time.time()
+        out["fig2_fidelity"] = fig2(quick=args.quick)
+        print(f"fig2,elapsed_s={time.time()-t0:.1f},"
+              f"mean_err={out['fig2_fidelity']['mean_err_pct']:.2f}%",
+              flush=True)
+
+    if want("roofline"):
+        from benchmarks.roofline_report import run as roofline
+        out["roofline"] = roofline()
+
+    out["total_elapsed_s"] = time.time() - t_total
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench_results.json", "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"bench,total_s={out['total_elapsed_s']:.1f},"
+          f"wrote=results/bench_results.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

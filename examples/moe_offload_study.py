@@ -1,0 +1,42 @@
+"""MoE expert-offloading exploration (paper §II-C): sweep offload target
+(host vs PIM) x fraction x prefetch and report latency/throughput.
+
+  PYTHONPATH=src python examples/moe_offload_study.py
+"""
+from repro.core import (ClusterCfg, InstanceCfg, MoECfg, ParallelismCfg,
+                        SchedulerCfg, simulate)
+from repro.core.config import TPU_V5E
+from repro.profiler import model_spec_from_arch
+from repro.configs import get_config
+from repro.workload import ShareGPTConfig, generate
+
+
+def main():
+    model = model_spec_from_arch(get_config("granite-moe-3b-a800m"))
+    reqs = generate(ShareGPTConfig(n_requests=100, rate=15.0, vocab=32000))
+
+    rows = []
+    for offload, frac, prefetch in [
+            ("none", 0.0, False),
+            ("host", 0.25, False), ("host", 0.25, True),
+            ("host", 0.5, False), ("host", 0.5, True),
+            ("pim", 0.5, True), ("pim", 0.75, True)]:
+        icfg = InstanceCfg(
+            name="i0", hw=TPU_V5E, model=model, n_devices=8,
+            parallelism=ParallelismCfg(tp=8, ep=8),
+            scheduler=SchedulerCfg(max_batch_size=48),
+            moe=MoECfg(offload=offload, offload_fraction=frac,
+                       prefetch=prefetch, routing="zipf"))
+        m = simulate(ClusterCfg((icfg,)), reqs)
+        rows.append((offload, frac, prefetch, m))
+
+    print(f"{'target':7s} {'frac':>5s} {'prefetch':>8s} {'TPOT(ms)':>9s} "
+          f"{'TTFT(ms)':>9s} {'tok/s':>8s}")
+    for off, frac, pre, m in rows:
+        print(f"{off:7s} {frac:5.2f} {str(pre):>8s} "
+              f"{m['tpot_mean_s']*1e3:9.2f} {m['ttft_mean_s']*1e3:9.1f} "
+              f"{m['throughput_tok_s']:8.0f}")
+
+
+if __name__ == "__main__":
+    main()

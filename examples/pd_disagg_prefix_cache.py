@@ -1,0 +1,50 @@
+"""Design-space study: P/D disaggregation x prefix caching x KV-transfer
+policy — the kind of exploration LLMServingSim2.0 exists for.
+
+  PYTHONPATH=src python examples/pd_disagg_prefix_cache.py
+"""
+import json
+
+from repro.core import (ClusterCfg, InstanceCfg, NetworkCfg, ParallelismCfg,
+                        PrefixCacheCfg, RouterCfg, simulate)
+from repro.core.config import TPU_V5E
+from repro.profiler import model_spec_from_arch
+from repro.configs import get_config
+from repro.workload import ShareGPTConfig, generate
+
+
+def main():
+    model = model_spec_from_arch(get_config("llama3.1-8b"))
+    reqs = generate(ShareGPTConfig(n_requests=100, rate=12.0, vocab=32000,
+                                   share_fraction=0.5, n_conversations=10))
+
+    def inst(name, role="unified", pc=False):
+        return InstanceCfg(name=name, hw=TPU_V5E, model=model, n_devices=8,
+                           parallelism=ParallelismCfg(tp=8), role=role,
+                           prefix_cache=PrefixCacheCfg(enabled=pc))
+
+    rows = []
+    for pc in (False, True):
+        # unified 2-instance baseline
+        m = simulate(ClusterCfg((inst("u0", pc=pc), inst("u1", pc=pc)),
+                                router=RouterCfg("least_loaded")), reqs)
+        rows.append(("unified", pc, "-", m))
+        # P/D with blocking vs layerwise-overlapped KV transfer
+        for policy in ("full_blocking", "layerwise_overlap"):
+            m = simulate(ClusterCfg(
+                (inst("p0", role="prefill", pc=pc),
+                 inst("d0", role="decode")),
+                pd_map={"p0": ("d0",)},
+                network=NetworkCfg(kv_transfer_policy=policy)), reqs)
+            rows.append(("pd", pc, policy, m))
+
+    print(f"{'topology':8s} {'PC':5s} {'kv-policy':18s} {'TTFT(ms)':>9s} "
+          f"{'TPOT(ms)':>9s} {'ITLp99(ms)':>10s} {'tok/s':>8s}")
+    for topo, pc, pol, m in rows:
+        print(f"{topo:8s} {str(pc):5s} {pol:18s} "
+              f"{m['ttft_mean_s']*1e3:9.1f} {m['tpot_mean_s']*1e3:9.2f} "
+              f"{m['itl_p99_s']*1e3:10.2f} {m['throughput_tok_s']:8.0f}")
+
+
+if __name__ == "__main__":
+    main()

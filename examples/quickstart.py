@@ -1,0 +1,52 @@
+"""Quickstart: simulate a heterogeneous multi-instance cluster serving
+ShareGPT-like traffic, with a failure + elastic scale-out mid-run.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import json
+
+from repro.core import (Cluster, ClusterCfg, InstanceCfg, ParallelismCfg,
+                        PrefixCacheCfg, RouterCfg, SchedulerCfg)
+from repro.core.config import RTX3090, TPU_V5E
+from repro.profiler import model_spec_from_arch
+from repro.configs import get_config
+from repro.workload import ShareGPTConfig, generate
+
+
+def main():
+    llama = model_spec_from_arch(get_config("llama3.1-8b"))
+    qwen = model_spec_from_arch(get_config("qwen3-8b"))
+
+    cluster_cfg = ClusterCfg(
+        instances=(
+            # a TPU pod slice with prefix caching
+            InstanceCfg(name="tpu0", hw=TPU_V5E, model=llama, n_devices=8,
+                        parallelism=ParallelismCfg(tp=8),
+                        prefix_cache=PrefixCacheCfg(enabled=True)),
+            # a GPU box serving a different model (heterogeneous!)
+            InstanceCfg(name="gpu0", hw=RTX3090, model=qwen, n_devices=4,
+                        parallelism=ParallelismCfg(tp=4),
+                        scheduler=SchedulerCfg(max_batch_size=16)),
+            InstanceCfg(name="tpu1", hw=TPU_V5E, model=llama, n_devices=8,
+                        parallelism=ParallelismCfg(tp=8)),
+        ),
+        router=RouterCfg("least_loaded", model_affinity=False),
+    )
+    reqs = generate(ShareGPTConfig(n_requests=100, rate=10.0, vocab=32000,
+                                   share_fraction=0.4))
+    cluster = Cluster(cluster_cfg)
+    cluster.submit_workload(reqs)
+    # inject a node failure at t=2s (recovers at t=6s) and scale out at t=4s
+    cluster.inject_failure(2.0, "tpu1", recover_after=4.0)
+    cluster.add_instance(4.0, InstanceCfg(
+        name="tpu2", hw=TPU_V5E, model=llama, n_devices=8,
+        parallelism=ParallelismCfg(tp=8)))
+    metrics = cluster.run()
+    print(json.dumps({k: v for k, v in metrics.items()
+                      if not isinstance(v, dict)}, indent=1, default=float))
+    print("per-instance:", json.dumps(metrics["instances"], indent=1,
+                                      default=float))
+
+
+if __name__ == "__main__":
+    main()

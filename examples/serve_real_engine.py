@@ -1,0 +1,45 @@
+"""End-to-end driver: serve a small model with batched requests on the REAL
+JAX engine (continuous batching + paged slots + radix prefix cache), then
+replay the identical workload in the simulator and print both.
+
+  PYTHONPATH=src python examples/serve_real_engine.py
+"""
+import json
+
+from repro.configs import get_config
+from repro.core import ClusterCfg, RouterCfg, TraceRegistry, simulate
+from repro.profiler.engine_profiler import engine_trace
+from repro.serve import DriverCfg, ServeDriver, ServingEngine
+from repro.workload import ShareGPTConfig, generate
+
+ARCH = "llama3.1-8b-tiny"
+
+
+def main():
+    cfg = get_config(ARCH)
+    reqs = generate(ShareGPTConfig(
+        n_requests=24, rate=10.0, vocab=cfg.vocab, mean_prompt=90,
+        mean_output=24, max_prompt=230, max_output=40,
+        share_fraction=0.5, n_conversations=4))
+
+    print("== real engine (prefix cache on) ==")
+    eng = ServingEngine(cfg, max_batch=4, max_len=512, prefix_cache=True)
+    real = ServeDriver([eng]).run(reqs)
+    print(json.dumps(real, indent=1, default=float))
+
+    print("== simulator replay (trace-driven) ==")
+    registry = TraceRegistry()
+    registry.register(ARCH, engine_trace(ARCH, max_batch=4, max_len=512))
+    import sys
+    sys.path.insert(0, "benchmarks")
+    from benchmarks.common import engine_matched_instance
+    ccfg = ClusterCfg(
+        (engine_matched_instance("e0", ARCH, prefix_cache=True),),
+        router=RouterCfg("round_robin"))
+    sim = simulate(ccfg, reqs, traces=registry)
+    print(json.dumps({k: v for k, v in sim.items()
+                      if not isinstance(v, dict)}, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import lower_cell
+
+CELLS = [
+    # (arch, shape, variant-name, kwargs)
+    ("granite-moe-3b-a800m", "train_4k", "v1-shard-experts",
+     dict(microbatches=8, zero1=True, shard_experts=True)),
+    ("granite-moe-3b-a800m", "train_4k", "v2-shard+fuseqkv",
+     dict(microbatches=8, zero1=True, shard_experts=True, fuse_qkv=True)),
+    ("starcoder2-7b", "train_4k", "v1-fuse-qkv",
+     dict(microbatches=8, zero1=True, fuse_qkv=True)),
+    ("chameleon-34b", "decode_32k", "v1-seq-shard-cache",
+     dict(seq_shard_cache=True)),
+    ("chameleon-34b", "decode_32k", "v2-seqshard+fuseqkv",
+     dict(seq_shard_cache=True, fuse_qkv=True)),
+    ("starcoder2-7b", "train_4k", "v2-fuseqkv-chunked",
+     dict(microbatches=8, zero1=True, fuse_qkv=True, attn_impl="chunked")),
+]
+with open("results/hillclimb.jsonl", "a") as f:
+    for arch, shape, name, kw in CELLS:
+        print(f"=== {arch} {shape} {name} ===", flush=True)
+        try:
+            rec, comp = lower_cell(arch, shape, unroll=False,
+                                   variant=name, **kw)
+            del comp
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "variant": name,
+                   "status": "error", "error": str(e)[:1500]}
+        r = rec.get("roofline", {})
+        print(json.dumps({k: rec.get(k) for k in
+                          ("variant", "status", "compile_s")} |
+                         {k: r.get(k) for k in
+                          ("t_compute_s", "t_memory_s", "t_collective_s",
+                           "bottleneck")} |
+                         {"temp_gb": rec.get("memory", {}).get(
+                              "temp_size_in_bytes", 0)/1e9,
+                          "useful": rec.get("useful_flops_frac")}),
+              flush=True)
+        f.write(json.dumps(rec) + "\n")
+        f.flush()
+print("DONE")

@@ -1,0 +1,22 @@
+"""LLMServingSim2.0 core: the paper's primary contribution.
+
+A discrete-event simulator for heterogeneous multi-instance LLM serving:
+trace-driven perf modeling, global request routing, P/D disaggregation,
+MoE expert parallelism/offloading, and radix-tree prefix caching.
+"""
+from repro.core.cluster import Cluster, simulate
+from repro.core.config import (CPU_HOST, PIM_DEVICE, RTX3090, TPU_V5E,
+                               TPU_V6E, ClusterCfg, HardwareSpec, InstanceCfg,
+                               MoECfg, ModelSpec, NetworkCfg, ParallelismCfg,
+                               PrefixCacheCfg, RouterCfg, SchedulerCfg)
+from repro.core.metrics import aggregate
+from repro.core.request import SimRequest
+from repro.core.trace import Trace, TraceRegistry
+
+__all__ = [
+    "Cluster", "simulate", "ClusterCfg", "HardwareSpec", "InstanceCfg",
+    "MoECfg", "ModelSpec", "NetworkCfg", "ParallelismCfg", "PrefixCacheCfg",
+    "RouterCfg", "SchedulerCfg", "aggregate", "SimRequest", "Trace",
+    "TraceRegistry", "RTX3090", "TPU_V5E", "TPU_V6E", "PIM_DEVICE",
+    "CPU_HOST",
+]

@@ -1,0 +1,185 @@
+"""Simulator configuration: hardware, instance, cluster, policies.
+
+Mirrors the paper's Fig. 1: a cluster is a *global request router* plus a set
+of heterogeneous *instances*; each instance has its own compute devices,
+memory model, (optional) prefix cache, parallelism scheme and network links.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-device compute/memory spec (profiler hw registry feeds this)."""
+    name: str
+    peak_flops: float            # FLOP/s (bf16)
+    hbm_bw: float                # bytes/s
+    hbm_capacity: float          # bytes
+    link_bw: float               # bytes/s per inter-device link
+    host_bw: float = 16e9        # device<->host (PCIe-class)
+    host_capacity: float = 512e9
+    ssd_bw: float = 3e9
+    ssd_capacity: float = 8e12
+    mmu_efficiency: float = 0.85  # achievable fraction of peak on matmuls
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelismCfg:
+    tp: int = 1                  # tensor parallel degree (within instance)
+    pp: int = 1                  # pipeline parallel degree
+    ep: int = 1                  # expert parallel degree
+    dp: int = 1                  # replicas *inside* the instance
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """What the simulator needs to know about a served model."""
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_expert: int = 0
+    mlp_gated: bool = True
+    param_bytes: float = 0.0     # total weight bytes (computed if 0)
+    dtype_bytes: int = 2
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    @property
+    def kv_bytes_per_token(self) -> float:
+        return (2 * self.n_layers * self.n_kv_heads * self.d_head
+                * self.dtype_bytes)
+
+    def weight_bytes(self) -> float:
+        if self.param_bytes:
+            return self.param_bytes
+        d = self.d_model
+        attn = d * self.n_heads * self.d_head * 2 \
+            + d * self.n_kv_heads * self.d_head * 2
+        if self.is_moe:
+            ff = 3 * d * self.moe_d_expert * self.moe_experts \
+                + d * self.moe_experts
+        else:
+            ff = (3 if self.mlp_gated else 2) * d * self.d_ff
+        emb = 2 * self.vocab * d
+        return (self.n_layers * (attn + ff) + emb) * self.dtype_bytes
+
+    def expert_bytes(self) -> float:
+        return 3 * self.d_model * self.moe_d_expert * self.dtype_bytes
+
+    def flops_per_token(self, context: int = 0) -> float:
+        """Dense fwd FLOPs per token (+ attention O(context) part)."""
+        d = self.d_model
+        attn_w = 2 * d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+        if self.is_moe:
+            ff = 2 * 3 * d * self.moe_d_expert * self.moe_top_k
+        else:
+            ff = 2 * (3 if self.mlp_gated else 2) * d * self.d_ff
+        attn_ctx = 4 * self.n_heads * self.d_head * context
+        head = 2 * d * self.vocab
+        return self.n_layers * (attn_w + ff + attn_ctx) + head
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerCfg:
+    policy: str = "fcfs"             # fcfs | priority | sjf
+    max_batch_size: int = 256        # max concurrent sequences
+    max_batch_tokens: int = 8192     # per-iteration token budget
+    chunked_prefill: bool = True
+    prefill_chunk: int = 2048
+    straggler_backup_ms: float = 0.0  # >0: re-dispatch if iteration exceeds
+    # engine-matching semantics (mirrors repro.serve.ServingEngine):
+    # prefill runs alone (one request, whole prompt), decode pads to the
+    # slot count, prefill lengths round up to power-of-2 buckets
+    prefill_exclusive: bool = False
+    decode_pad_to: int = 0
+    bucket_prefill: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheCfg:
+    enabled: bool = False
+    block_tokens: int = 16           # radix-tree block granularity
+    capacity_fraction: float = 0.5   # fraction of free HBM usable for cache
+    host_spill: bool = True
+    scope: str = "instance"          # instance | global
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    expert_parallel: bool = True
+    offload: str = "none"            # none | host | pim
+    offload_fraction: float = 0.0    # fraction of experts offloaded
+    prefetch: bool = True            # overlap expert fetch with compute
+    routing: str = "uniform"         # uniform | zipf | correlated
+    zipf_a: float = 1.1
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceCfg:
+    name: str
+    hw: HardwareSpec
+    model: ModelSpec
+    n_devices: int = 1
+    parallelism: ParallelismCfg = ParallelismCfg()
+    scheduler: SchedulerCfg = SchedulerCfg()
+    prefix_cache: PrefixCacheCfg = PrefixCacheCfg()
+    moe: MoECfg = MoECfg()
+    role: str = "unified"            # unified | prefill | decode
+    kv_block_tokens: int = 16        # PagedAttention block size
+    trace_name: Optional[str] = None  # perf-model trace to use
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterCfg:
+    policy: str = "round_robin"      # round_robin | least_loaded | prefix_aware
+    model_affinity: bool = True      # requests route to instances serving their model
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkCfg:
+    inter_instance_bw: float = 25e9  # bytes/s between instances (DCN/PCIe)
+    inter_instance_latency: float = 10e-6
+    kv_transfer_policy: str = "full_blocking"  # full_blocking | layerwise_overlap
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterCfg:
+    instances: Tuple[InstanceCfg, ...]
+    router: RouterCfg = RouterCfg()
+    network: NetworkCfg = NetworkCfg()
+    # P/D disaggregation: map prefill-instance name -> decode-instance names
+    pd_map: Optional[Dict[str, Tuple[str, ...]]] = None
+
+
+# --- hardware presets -------------------------------------------------------
+
+RTX3090 = HardwareSpec(
+    name="rtx3090", peak_flops=71e12, hbm_bw=936e9, hbm_capacity=24e9,
+    link_bw=16e9)   # paper's GPU baseline: PCIe 4.0 x16 interconnect
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, hbm_capacity=16e9,
+    link_bw=50e9)
+
+TPU_V6E = HardwareSpec(
+    name="tpu-v6e", peak_flops=918e12, hbm_bw=1.6e12, hbm_capacity=32e9,
+    link_bw=100e9)  # paper's Colab TPU integration case study
+
+PIM_DEVICE = HardwareSpec(
+    name="pim", peak_flops=8e12, hbm_bw=2.0e12, hbm_capacity=16e9,
+    link_bw=25e9)   # memory-side accelerator for expert offloading [7,8]
+
+CPU_HOST = HardwareSpec(
+    name="cpu-host", peak_flops=2e12, hbm_bw=80e9, hbm_capacity=256e9,
+    link_bw=16e9)

@@ -1,0 +1,58 @@
+"""Discrete-event simulation engine (heapq-based)."""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Optional
+
+
+class Event:
+    __slots__ = ("time", "seq", "fn", "cancelled", "tag")
+
+    def __init__(self, time: float, seq: int, fn: Callable, tag: str = ""):
+        self.time = time
+        self.seq = seq
+        self.fn = fn
+        self.cancelled = False
+        self.tag = tag
+
+    def __lt__(self, other):
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class EventQueue:
+    def __init__(self):
+        self._heap = []
+        self._counter = itertools.count()
+        self.now = 0.0
+        self.n_processed = 0
+
+    def schedule(self, delay: float, fn: Callable, tag: str = "") -> Event:
+        ev = Event(self.now + max(delay, 0.0), next(self._counter), fn, tag)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def schedule_at(self, t: float, fn: Callable, tag: str = "") -> Event:
+        ev = Event(max(t, self.now), next(self._counter), fn, tag)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def cancel(self, ev: Event):
+        ev.cancelled = True
+
+    def run(self, until: Optional[float] = None, max_events: int = 50_000_000):
+        while self._heap and self.n_processed < max_events:
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            if until is not None and ev.time > until:
+                heapq.heappush(self._heap, ev)
+                self.now = until
+                return
+            self.now = ev.time
+            self.n_processed += 1
+            ev.fn()
+
+    @property
+    def empty(self) -> bool:
+        return not any(not e.cancelled for e in self._heap)

@@ -1,0 +1,34 @@
+"""Serving metric aggregation: TTFT / TPOT / ITL / throughput (paper Fig 2)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.request import FINISHED, SimRequest
+
+
+def aggregate(requests: List[SimRequest]) -> Dict:
+    done = [r for r in requests if r.state == FINISHED]
+    if not done:
+        return {"finished": 0}
+    ttft = np.array([r.ttft() for r in done if r.ttft() is not None])
+    tpot = np.array([r.tpot() for r in done if r.tpot() is not None])
+    itls = np.concatenate([np.array(r.itl()) for r in done
+                           if len(r.itl())]) if any(
+        len(r.itl()) for r in done) else np.array([0.0])
+    t_end = max(r.t_finish for r in done)
+    t_start = min(r.arrival for r in done)
+    out_tokens = sum(r.generated for r in done)
+    return {
+        "finished": len(done),
+        "ttft_mean_s": float(ttft.mean()) if ttft.size else None,
+        "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft.size else None,
+        "tpot_mean_s": float(tpot.mean()) if tpot.size else None,
+        "itl_mean_s": float(itls.mean()),
+        "itl_p99_s": float(np.percentile(itls, 99)),
+        "throughput_tok_s": out_tokens / max(t_end - t_start, 1e-9),
+        "makespan_s": t_end - t_start,
+        "preemptions": sum(r.n_preemptions for r in done),
+        "restarts": sum(r.n_restarts for r in done),
+    }

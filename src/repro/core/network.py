@@ -1,0 +1,72 @@
+"""Network model: intra-instance collectives + inter-instance transfers.
+
+Intra-instance (TP all-reduce, EP all-to-all) is bandwidth-modeled from the
+device link bandwidth with ring/all-to-all factors. Inter-instance transfers
+(P/D KV moves, global prefix cache) go through shared ``Link`` objects that
+serialize: concurrent transfers queue, which is how network contention shows
+up in multi-instance simulations (paper §III-C attributes multi-instance
+error to exactly this effect).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.config import NetworkCfg
+
+
+def allreduce_time(nbytes: float, n: int, link_bw: float) -> float:
+    if n <= 1:
+        return 0.0
+    return 2.0 * nbytes * (n - 1) / n / link_bw
+
+
+def allgather_time(nbytes: float, n: int, link_bw: float) -> float:
+    if n <= 1:
+        return 0.0
+    return nbytes * (n - 1) / n / link_bw
+
+
+def alltoall_time(nbytes: float, n: int, link_bw: float) -> float:
+    if n <= 1:
+        return 0.0
+    return nbytes * (n - 1) / n / link_bw
+
+
+class Link:
+    """A serialized shared link: transfers occupy it back-to-back."""
+
+    def __init__(self, bw: float, latency: float = 10e-6):
+        self.bw = bw
+        self.latency = latency
+        self.busy_until = 0.0
+        self.bytes_moved = 0.0
+
+    def transfer(self, now: float, nbytes: float) -> float:
+        """Returns completion time, accounting for queueing."""
+        start = max(now, self.busy_until)
+        done = start + self.latency + nbytes / self.bw
+        self.busy_until = done
+        self.bytes_moved += nbytes
+        return done
+
+
+class NetworkModel:
+    def __init__(self, cfg: NetworkCfg):
+        self.cfg = cfg
+        self._links: Dict[tuple, Link] = {}
+
+    def link(self, a: str, b: str) -> Link:
+        key = (min(a, b), max(a, b))
+        if key not in self._links:
+            self._links[key] = Link(self.cfg.inter_instance_bw,
+                                    self.cfg.inter_instance_latency)
+        return self._links[key]
+
+    def kv_transfer_done(self, now: float, src: str, dst: str,
+                         nbytes: float) -> float:
+        return self.link(src, dst).transfer(now, nbytes)
+
+    def stats(self) -> dict:
+        return {f"{a}<->{b}": l.bytes_moved
+                for (a, b), l in self._links.items()}

@@ -1,0 +1,183 @@
+"""Trace-driven performance model with analytical roofline fallback.
+
+``iteration_latency`` prices one engine iteration (a batch of prefill chunks
++ decode steps). When a profiler trace is registered for the instance, each
+operator class is interpolated from measured points (paper §II-A); ops not
+covered fall back to an analytical roofline from the hardware spec. The
+analytical path is also what the TPU "one-command integration" produces
+before any measurement exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.config import InstanceCfg
+from repro.core.expert import ExpertExecutionModel, ExpertRouter
+from repro.core.network import allreduce_time
+from repro.core.trace import Trace
+
+
+@dataclasses.dataclass
+class BatchItem:
+    tokens: int          # tokens processed for this request this iteration
+    context: int         # total context length (for attention cost)
+    phase: str           # prefill | decode
+
+
+@dataclasses.dataclass
+class IterationCost:
+    total_s: float
+    breakdown: dict
+
+
+class PerfModel:
+    def __init__(self, cfg: InstanceCfg, trace: Optional[Trace] = None,
+                 expert_model: Optional[ExpertExecutionModel] = None):
+        self.cfg = cfg
+        self.trace = trace
+        self.m = cfg.model
+        self.hw = cfg.hw
+        self.tp = max(cfg.parallelism.tp, 1)
+        self.pp = max(cfg.parallelism.pp, 1)
+        self.expert_model = expert_model
+        if self.m.is_moe and expert_model is None:
+            self.expert_model = ExpertExecutionModel(
+                cfg, ExpertRouter(cfg.moe, self.m))
+
+    # ---- analytical op costs (per layer-stack, per device) ----
+    def _roof(self, flops: float, nbytes: float) -> float:
+        return max(flops / (self.hw.peak_flops * self.hw.mmu_efficiency),
+                   nbytes / self.hw.hbm_bw)
+
+    def _linear_cost(self, tokens: int, d_in: int, d_out: int) -> float:
+        flops = 2.0 * tokens * d_in * d_out / self.tp
+        nbytes = (d_in * d_out / self.tp + tokens * (d_in + d_out)) \
+            * self.m.dtype_bytes
+        return self._roof(flops, nbytes)
+
+    def _attn_context_cost(self, items: List[BatchItem]) -> float:
+        m = self.m
+        flops = 0.0
+        nbytes = 0.0
+        for it in items:
+            if it.phase == "prefill":
+                # causal: tokens x (context) / 2 average
+                span = it.tokens * max(it.context, 1) / 2
+            else:
+                span = it.context
+            flops += 4.0 * span * m.n_heads * m.d_head / self.tp
+            nbytes += span * m.kv_bytes_per_token / self.tp \
+                + it.tokens * m.n_heads * m.d_head * m.dtype_bytes * 3
+        return self._roof(flops, nbytes)
+
+    # ---- trace lookup with analytical fallback ----
+    def _op(self, op: str, phase: str, tokens: int, context: int,
+            analytical: float) -> float:
+        if self.trace is not None:
+            v = self.trace.interpolate(op, phase, tokens, context)
+            if v is not None:
+                return v
+        return analytical
+
+    @staticmethod
+    def _bucket(n: int, lo: int = 16) -> int:
+        b = lo
+        while b < n:
+            b *= 2
+        return b
+
+    def _iter_level(self, items: List[BatchItem]) -> Optional[IterationCost]:
+        """Iteration-granularity trace lookup (engine_profiler points)."""
+        if self.trace is None:
+            return None
+        pre = [i for i in items if i.phase == "prefill"]
+        dec = [i for i in items if i.phase == "decode"]
+        total = 0.0
+        if pre:
+            T = sum(i.tokens for i in pre)
+            if self.cfg.scheduler.bucket_prefill:
+                T = self._bucket(T)
+            v = self.trace.interpolate("iter", "prefill", T, T)
+            if v is None:
+                return None
+            total += v
+            if self.cfg.role == "prefill" or self.cfg.prefix_cache.enabled:
+                # P/D export, or radix-cache insert (same slot copy-out)
+                ex = self.trace.interpolate("kv_export", "prefill", T, T)
+                if ex is not None:
+                    total += ex
+        if dec:
+            B = len(dec)
+            if self.cfg.scheduler.decode_pad_to:
+                B = max(B, 1)
+            ctx = sum(i.context for i in dec) / len(dec)
+            v = self.trace.interpolate("iter", "decode", B, int(ctx))
+            if v is None:
+                return None
+            total += v
+        return IterationCost(total, {"iter": total})
+
+    def kv_copy_cost(self, tokens: int) -> float:
+        """Slot copy cost (export/restore) for ``tokens`` of KV, from the
+        measured kv_export trace; 0 when unprofiled."""
+        if self.trace is None or tokens <= 0:
+            return 0.0
+        v = self.trace.interpolate("kv_export", "prefill",
+                                   self._bucket(tokens), self._bucket(tokens))
+        return v or 0.0
+
+    def iteration_latency(self, items: List[BatchItem]) -> IterationCost:
+        if not items:
+            return IterationCost(0.0, {})
+        lvl = self._iter_level(items)
+        if lvl is not None:
+            return lvl
+        m = self.m
+        L = m.n_layers
+        T = sum(it.tokens for it in items)
+        phase = "prefill" if any(i.phase == "prefill" for i in items) \
+            else "decode"
+        ctx = max(it.context for it in items)
+
+        qkv_d = (m.n_heads + 2 * m.n_kv_heads) * m.d_head
+        t_qkv = L * self._op(
+            "attn_qkv", phase, T, ctx,
+            self._linear_cost(T, m.d_model, qkv_d)
+            + self._linear_cost(T, m.n_heads * m.d_head, m.d_model))
+        t_attn = L * self._op(
+            "attn_score", phase, T, ctx, self._attn_context_cost(items))
+        if m.is_moe:
+            c = self.expert_model.layer_cost(T)
+            t_ffn = L * self._op("moe_ffn", phase, T, ctx, c.total)
+        else:
+            mults = 3 if m.mlp_gated else 2
+            t_ffn = L * self._op(
+                "mlp", phase, T, ctx,
+                self._linear_cost(T, m.d_model, m.d_ff) * mults / 2
+                + self._linear_cost(T, m.d_ff, m.d_model) / 2
+                + self._linear_cost(T, m.d_model, m.d_ff) * (mults - 2))
+        t_norm = L * self._op(
+            "norm", phase, T, ctx,
+            self._roof(10.0 * T * m.d_model,
+                       4.0 * T * m.d_model * m.dtype_bytes))
+        t_head = self._op(
+            "head", phase, T, ctx,
+            self._linear_cost(sum(1 for i in items) if phase == "decode"
+                              else T, m.d_model, m.vocab))
+        t_embed = self._op(
+            "embed", phase, T, ctx,
+            self._roof(0.0, T * m.d_model * m.dtype_bytes * 2))
+        # TP all-reduce: 2 per layer on the activations
+        ar_bytes = T * m.d_model * m.dtype_bytes
+        t_coll = 2 * L * allreduce_time(ar_bytes, self.tp, self.hw.link_bw)
+        total = t_qkv + t_attn + t_ffn + t_norm + t_head + t_embed + t_coll
+        # pipeline parallelism: per-iteration inter-stage activation hops
+        # (throughput overlap across iterations is handled by the scheduler
+        # running pp iterations in flight)
+        if self.pp > 1:
+            hop = T * m.d_model * m.dtype_bytes / self.hw.link_bw + 5e-6
+            total = total + (self.pp - 1) * hop
+        return IterationCost(total, {
+            "qkv": t_qkv, "attn": t_attn, "ffn": t_ffn, "norm": t_norm,
+            "head": t_head, "embed": t_embed, "collective": t_coll})

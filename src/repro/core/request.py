@@ -1,0 +1,65 @@
+"""Simulated request lifecycle + per-request metrics."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+QUEUED = "queued"
+PREFILLING = "prefilling"
+TRANSFERRING = "transferring"   # P/D disaggregation KV move
+DECODING = "decoding"
+PREEMPTED = "preempted"
+FINISHED = "finished"
+FAILED = "failed"
+
+
+@dataclasses.dataclass
+class SimRequest:
+    req_id: int
+    arrival: float
+    prompt_tokens: Sequence[int]
+    output_len: int
+    model: str = "default"
+
+    state: str = QUEUED
+    instance: Optional[str] = None
+    decode_instance: Optional[str] = None
+
+    prefill_done_tokens: int = 0     # chunked prefill progress
+    cached_prefix: int = 0           # tokens served from prefix cache
+    generated: int = 0
+
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    n_preemptions: int = 0
+    n_restarts: int = 0              # node-failure recoveries
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt_tokens)
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + self.generated
+
+    @property
+    def remaining_prefill(self) -> int:
+        return max(0, self.prompt_len - self.cached_prefix
+                   - self.prefill_done_tokens)
+
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+    def tpot(self) -> Optional[float]:
+        """Time per output token after the first (paper Fig 2a)."""
+        if self.t_finish is None or self.t_first_token is None \
+                or self.output_len <= 1:
+            return None
+        return (self.t_finish - self.t_first_token) / (self.output_len - 1)
+
+    def itl(self) -> List[float]:
+        return [t2 - t1 for t1, t2 in zip(self.token_times,
+                                          self.token_times[1:])]

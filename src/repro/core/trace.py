@@ -1,0 +1,119 @@
+"""Operator-latency trace format (the contract between profiler and sim).
+
+A trace is a set of measured operator latencies for one (model, hardware,
+parallelism) triple, keyed by operator kind and phase, over a grid of
+(tokens, context) points. The perf model interpolates this grid; anything
+outside the grid falls back to the analytical model. This is LLMServingSim
+2.0's central abstraction: integrating new hardware == producing one trace
+file with the operator-level profiler (paper §II-A, Table III).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Dict, List, Optional, Tuple
+
+# operator kinds the profiler emits and the sim consumes
+OP_KINDS = (
+    "embed", "attn_qkv", "attn_score", "attn_out", "mlp", "moe_ffn",
+    "moe_router", "norm", "head", "mamba", "xlstm", "sampler",
+)
+
+
+@dataclasses.dataclass
+class OpPoint:
+    op: str
+    phase: str          # prefill | decode
+    tokens: int         # batch tokens processed this iteration
+    context: int        # KV/context length (decode) or seq len (prefill)
+    latency_s: float
+
+
+@dataclasses.dataclass
+class Trace:
+    model: str
+    hardware: str
+    tp: int
+    points: List[OpPoint] = dataclasses.field(default_factory=list)
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def add(self, op, phase, tokens, context, latency_s):
+        self.points.append(OpPoint(op, phase, int(tokens), int(context),
+                                   float(latency_s)))
+
+    # ---- lookup ----
+    def _grid(self, op: str, phase: str):
+        pts = [p for p in self.points if p.op == op and p.phase == phase]
+        return pts
+
+    def interpolate(self, op: str, phase: str, tokens: int,
+                    context: int) -> Optional[float]:
+        """Log-space bilinear interpolation over the (tokens, context) grid;
+        nearest-edge clamp outside; None when no points exist."""
+        pts = self._grid(op, phase)
+        if not pts:
+            return None
+        if len(pts) == 1:
+            p = pts[0]
+            # linear scaling in tokens as last resort
+            return p.latency_s * max(tokens, 1) / max(p.tokens, 1)
+        lt = math.log(max(tokens, 1))
+        lc = math.log(max(context, 1))
+
+        def key(p):
+            return (math.log(max(p.tokens, 1)) - lt) ** 2 + \
+                   0.25 * (math.log(max(p.context, 1)) - lc) ** 2
+
+        pts_sorted = sorted(pts, key=key)
+        nearest = pts_sorted[: 4]
+        # inverse-distance weighting in log space (simple + robust for
+        # monotone latency surfaces)
+        num, den = 0.0, 0.0
+        for p in nearest:
+            d = key(p)
+            if d < 1e-12:
+                return p.latency_s
+            w = 1.0 / d
+            num += w * math.log(p.latency_s)
+            den += w
+        return math.exp(num / den)
+
+    # ---- io ----
+    def save(self, path: str):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({
+                "model": self.model, "hardware": self.hardware, "tp": self.tp,
+                "meta": self.meta,
+                "points": [dataclasses.asdict(p) for p in self.points],
+            }, f)
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        with open(path) as f:
+            d = json.load(f)
+        t = cls(model=d["model"], hardware=d["hardware"], tp=d.get("tp", 1),
+                meta=d.get("meta", {}))
+        for p in d["points"]:
+            t.points.append(OpPoint(**p))
+        return t
+
+
+class TraceRegistry:
+    """Named traces; instances reference them by ``trace_name``."""
+
+    def __init__(self):
+        self._traces: Dict[str, Trace] = {}
+
+    def register(self, name: str, trace: Trace):
+        self._traces[name] = trace
+
+    def get(self, name: str) -> Optional[Trace]:
+        return self._traces.get(name)
+
+    def load_dir(self, path: str):
+        for fn in os.listdir(path):
+            if fn.endswith(".json"):
+                self.register(fn[:-5], Trace.load(os.path.join(path, fn)))

@@ -1,0 +1,3 @@
+from repro.kernels.ops import flash_attention, moe_gmm, paged_attention
+
+__all__ = ["flash_attention", "moe_gmm", "paged_attention"]

@@ -1,0 +1,90 @@
+"""Pallas TPU flash attention (prefill, causal, GQA).
+
+Grid (B, H, nQ): each program owns one (batch, head, query-block) tile with
+the query block in VMEM; K/V for the matching KV head stream through VMEM.
+The causal schedule skips KV blocks beyond the diagonal via the fori upper
+bound — the exact constant-work schedule the pure-XLA path can only
+approximate (see models/layers.folded_causal_attention).
+
+MXU alignment: bq/bkv multiples of 128 in production (tests sweep smaller
+shapes in interpret mode, where alignment is not enforced).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int,
+                  causal: bool):
+    # q_ref: (1, bq, 1, dh); k_ref/v_ref: (1, S, 1, dh); o_ref like q_ref
+    qi = pl.program_id(2)
+    dh = q_ref.shape[-1]
+    S = k_ref.shape[1]
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * dh ** -0.5
+    nkv = S // bkv
+    if causal:
+        upper = (qi * bq + bq + bkv - 1) // bkv
+    else:
+        upper = nkv
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (0, pl.dslice(j * bkv, bkv), 0,
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(j * bkv, bkv), 0,
+                            slice(None))).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (bq, bkv), 0)
+            kv_pos = j * bkv + jax.lax.broadcasted_iota(jnp.int32,
+                                                        (bq, bkv), 1)
+            s = jnp.where(q_pos >= kv_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    o_ref[0, :, 0, :] = (acc / jnp.maximum(l, 1e-20)[:, None]
+                         ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, bq: int = 128, bkv: int = 128,
+                           causal: bool = True, interpret: bool = True):
+    """q: (B,S,H,dh); k/v: (B,S,KV,dh) -> (B,S,H,dh)."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(bq, S)
+    bkv = min(bkv, S)
+    assert S % bq == 0 and S % bkv == 0
+    nq = S // bq
+    grid = (B, H, nq)
+    kernel = functools.partial(_flash_kernel, bq=bq, bkv=bkv, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, S, 1, dh), lambda b, h, i: (b, 0, h // G, 0)),
+            pl.BlockSpec((1, S, 1, dh), lambda b, h, i: (b, 0, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh), lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,59 @@
+"""Pallas TPU grouped expert matmul (MegaBlocks-style, dense-padded groups).
+
+Computes out[e] = x[e] @ w[e] for E experts with per-expert valid row counts
+(``group_sizes``): rows past a group's size produce zeros and — on real
+TPU — their tiles are skipped via @pl.when (compute proportional to actual
+load, which is what makes top-k MoE cheap). Grid (E, nC): one (expert,
+row-block) tile per program; d and f stay resident in VMEM per expert.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gmm_kernel(x_ref, w_ref, gs_ref, o_ref, *, bc: int):
+    # x_ref: (1, bc, d); w_ref: (1, d, f); gs_ref: (1,); o_ref: (1, bc, f)
+    ci = pl.program_id(1)
+    size = gs_ref[0]
+    start = ci * bc
+
+    @pl.when(start < size)
+    def _():
+        x = x_ref[0].astype(jnp.float32)
+        w = w_ref[0].astype(jnp.float32)
+        out = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        rows = start + jax.lax.broadcasted_iota(jnp.int32, out.shape, 0)
+        out = jnp.where(rows < size, out, 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+    @pl.when(start >= size)
+    def _():
+        o_ref[0] = jnp.zeros(o_ref.shape[1:], o_ref.dtype)
+
+
+def moe_gmm_pallas(x, w, group_sizes, *, bc: int = 128,
+                   interpret: bool = True):
+    """x: (E,C,d); w: (E,d,f); group_sizes: (E,) -> (E,C,f)."""
+    E, C, d = x.shape
+    f = w.shape[-1]
+    bc = min(bc, C)
+    assert C % bc == 0
+    grid = (E, C // bc)
+    kernel = functools.partial(_gmm_kernel, bc=bc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, c: (e, c, 0)),
+            pl.BlockSpec((1, d, f), lambda e, c: (e, 0, 0)),
+            pl.BlockSpec((1,), lambda e, c: (e,)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, f), lambda e, c: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), x.dtype),
+        interpret=interpret,
+    )(x, w, group_sizes)

@@ -1,0 +1,39 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (validation) and False on TPU
+(production). Interfaces mirror the pure-JAX twins in repro.models.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.moe_gmm import moe_gmm_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal"))
+def flash_attention(q, k, v, *, bq: int = 128, bkv: int = 128,
+                    causal: bool = True):
+    return flash_attention_pallas(q, k, v, bq=bq, bkv=bkv, causal=causal,
+                                  interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                    page_size: int):
+    return paged_attention_pallas(q, k_pages, v_pages, block_table, lengths,
+                                  page_size=page_size,
+                                  interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bc",))
+def moe_gmm(x, w, group_sizes, *, bc: int = 128):
+    return moe_gmm_pallas(x, w, group_sizes, bc=bc,
+                          interpret=_default_interpret())

@@ -1,0 +1,82 @@
+"""Pallas TPU paged attention (decode with block-table indirection).
+
+The serving engine's KV lives in fixed-size pages (PagedAttention [9]); a
+per-sequence block table maps logical positions to pages. Grid (B, KV):
+each program owns one (sequence, kv-head) pair, walking its block table
+with online softmax. Page loads are dynamic gathers (on real TPU these are
+HBM->VMEM DMAs; ``interpret=True`` validates semantics on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def paged_attention_pallas(q, k_pages, v_pages, block_table, lengths, *,
+                           page_size: int, interpret: bool = True):
+    """q: (B,H,dh); k_pages/v_pages: (P,ps,KV,dh);
+    block_table: (B,maxp) int32; lengths: (B,) -> (B,H,dh)."""
+    B, H, dh = q.shape
+    P, ps, KV, _ = k_pages.shape
+    assert ps == page_size
+    G = H // KV
+    maxp = block_table.shape[1]
+    qr = q.reshape(B, KV, G, dh)
+    grid = (B, KV)
+    kernel = functools.partial(_paged_two_kernel, page_size=page_size)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, kv: (b, kv, 0, 0)),
+            pl.BlockSpec((P, ps, 1, dh), lambda b, kv: (0, 0, kv, 0)),
+            pl.BlockSpec((P, ps, 1, dh), lambda b, kv: (0, 0, kv, 0)),
+            pl.BlockSpec((1, maxp), lambda b, kv: (b, 0)),
+            pl.BlockSpec((1,), lambda b, kv: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, kv: (b, kv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, dh), q.dtype),
+        interpret=interpret,
+    )(qr, k_pages, v_pages, block_table, lengths)
+    return out.reshape(B, H, dh)
+
+
+def _paged_two_kernel(q_ref, kp_ref, vp_ref, table_ref, len_ref, o_ref, *,
+                      page_size: int):
+    """Like _paged_kernel but with separate K/V page pools."""
+    G, dh = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32) * dh ** -0.5
+    length = len_ref[0]
+    n_used = (length + page_size - 1) // page_size
+
+    def body(j, carry):
+        acc, m, l = carry
+        page = table_ref[0, j]
+        k = pl.load(kp_ref, (page, slice(None), 0,
+                             slice(None))).astype(jnp.float32)
+        v = pl.load(vp_ref, (page, slice(None), 0,
+                             slice(None))).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (G, page_size), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((G, dh), jnp.float32)
+    m0 = jnp.full((G,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((G,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_used, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,S,H,dh); k/v: (B,S,KV,dh) -> (B,S,H,dh)."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, S, KV, G, dh) * dh ** -0.5
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qr.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqj,bjkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, lengths, *,
+                        page_size: int):
+    """q: (B,H,dh); k/v_pages: (P,ps,KV,dh); block_table: (B,maxp) int32;
+    lengths: (B,) -> (B,H,dh)."""
+    B, H, dh = q.shape
+    P, ps, KV, _ = k_pages.shape
+    G = H // KV
+    maxp = block_table.shape[1]
+    kg = k_pages[block_table.reshape(-1)].reshape(B, maxp * ps, KV, dh)
+    vg = v_pages[block_table.reshape(-1)].reshape(B, maxp * ps, KV, dh)
+    qr = q.reshape(B, KV, G, dh).astype(jnp.float32) * dh ** -0.5
+    s = jnp.einsum("bkgd,bjkd->bkgj", qr, kg.astype(jnp.float32))
+    pos = jnp.arange(maxp * ps)
+    mask = pos[None] < lengths[:, None]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p, vg.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(q.dtype)
+
+
+def moe_gmm_ref(x, w, group_sizes):
+    """Grouped matmul: x: (E,C,d); w: (E,d,f); rows >= group_sizes[e] give 0."""
+    E, C, d = x.shape
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    mask = jnp.arange(C)[None, :] < group_sizes[:, None]
+    return (out * mask[..., None]).astype(x.dtype)

@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct inputs (no allocation),
+  3. ``jax.jit(step, in_shardings=..., out_shardings=...).lower().compile()``,
+  4. records memory_analysis / cost_analysis / collective schedule,
+  5. appends a JSON record consumed by EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ASSIGNED, cell_is_runnable, get_config, get_shape,
+                           ALL_SHAPES)
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.launch import sharding as shd
+from repro.launch.specs import input_specs
+from repro.models import Model
+from repro.roofline import analysis as ra
+from repro.train.optimizer import AdamW
+from repro.train.train_step import make_train_step
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               attn_impl: str = "flash", donate: bool = True,
+               unroll: bool = True, microbatches: int = 1,
+               zero1: bool = False, fuse_qkv: bool = False,
+               shard_experts: bool = False, seq_shard_cache: bool = False,
+               norm_ct16: bool = False, variant: str = "baseline"):
+    """Lower+compile one cell; returns (record, compiled).
+
+    ``unroll=True`` removes every while loop from the HLO so that
+    cost_analysis / collective parsing count per-layer work correctly
+    (XLA does not multiply loop bodies by trip count).
+    """
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not cell_is_runnable(cfg.subquadratic, shape):
+        return {"arch": arch, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skipped",
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(DESIGN.md §5)"}, None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes(mesh)
+    n_dev = mesh.size
+    model = Model(cfg, attn_impl=attn_impl, unroll=unroll,
+                  fuse_qkv=fuse_qkv, shard_experts=shard_experts,
+                  norm_ct16=norm_ct16)
+    t0 = time.time()
+    specs = input_specs(cfg, shape, model)
+
+    with mesh:
+        if shape.step == "train":
+            optimizer = AdamW()
+            from repro.train.train_step import TrainStepConfig
+            step_fn = make_train_step(
+                model, optimizer,
+                TrainStepConfig(microbatches=microbatches, dp_axes=dp))
+            state_sp = shd.fit_to_mesh(
+                shd.state_pspecs(specs["state"], zero1=zero1),
+                specs["state"], mesh)
+            batch_sp = shd.fit_to_mesh(
+                shd.batch_pspecs(specs["batch"], dp), specs["batch"], mesh)
+            metrics_sp = jax.tree_util.tree_map(
+                lambda _: P(),
+                jax.eval_shape(step_fn, specs["state"], specs["batch"])[1])
+            jf = jax.jit(step_fn,
+                         in_shardings=(_ns(mesh, state_sp), _ns(mesh, batch_sp)),
+                         out_shardings=(_ns(mesh, state_sp),
+                                        _ns(mesh, metrics_sp)),
+                         donate_argnums=(0,) if donate else ())
+            lowered = jf.lower(specs["state"], specs["batch"])
+        elif shape.step == "prefill":
+            param_sp = shd.fit_to_mesh(shd.param_pspecs(specs["params"]),
+                                       specs["params"], mesh)
+            tok_sp = shd.fit_to_mesh(
+                shd.batch_pspecs({"t": specs["tokens"]}, dp)["t"],
+                specs["tokens"], mesh)
+            out_shape = jax.eval_shape(model.prefill, specs["params"],
+                                       specs["tokens"])
+            logits_sp = shd.fit_to_mesh(
+                shd.logits_pspec(out_shape[0].ndim, dp, shape.global_batch),
+                out_shape[0], mesh)
+            cache_sp = shd.fit_to_mesh(
+                shd.cache_pspecs(out_shape[1], dp, shape.global_batch),
+                out_shape[1], mesh)
+            jf = jax.jit(model.prefill,
+                         in_shardings=(_ns(mesh, param_sp), _ns(mesh, tok_sp)),
+                         out_shardings=(_ns(mesh, logits_sp),
+                                        _ns(mesh, cache_sp)))
+            lowered = jf.lower(specs["params"], specs["tokens"])
+        else:  # decode
+            param_sp = shd.fit_to_mesh(shd.param_pspecs(specs["params"]),
+                                       specs["params"], mesh)
+            cache_sp = shd.fit_to_mesh(
+                shd.cache_pspecs(specs["cache"], dp, shape.global_batch,
+                                 seq_shard=seq_shard_cache),
+                specs["cache"], mesh)
+            tok_sp = shd.fit_to_mesh(
+                shd.batch_pspecs({"t": specs["tokens"]}, dp)["t"],
+                specs["tokens"], mesh)
+            out_shape = jax.eval_shape(model.decode, specs["params"],
+                                       specs["cache"], specs["tokens"])
+            logits_sp = shd.fit_to_mesh(
+                shd.logits_pspec(out_shape[0].ndim, dp, shape.global_batch),
+                out_shape[0], mesh)
+            out_cache_sp = shd.fit_to_mesh(
+                shd.cache_pspecs(out_shape[1], dp, shape.global_batch,
+                                 seq_shard=seq_shard_cache),
+                out_shape[1], mesh)
+            jf = jax.jit(model.decode,
+                         in_shardings=(_ns(mesh, param_sp),
+                                       _ns(mesh, cache_sp),
+                                       _ns(mesh, tok_sp)),
+                         out_shardings=(_ns(mesh, logits_sp),
+                                        _ns(mesh, out_cache_sp)),
+                         donate_argnums=(1,) if donate else ())
+            lowered = jf.lower(specs["params"], specs["cache"],
+                               specs["tokens"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+
+    roof = ra.from_compiled(compiled, n_dev)
+    mf = ra.model_flops(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mesh": list(mesh.devices.shape), "n_devices": n_dev,
+        "status": "ok", "attn_impl": attn_impl, "unroll": unroll,
+        "microbatches": microbatches, "zero1": zero1, "variant": variant,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "roofline": roof.summary(),
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_frac": (mf / n_dev) / max(roof.flops, 1.0),
+    }
+    return rec, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--attn-impl", default="flash")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--no-unroll", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = auto (8 for train, 1 otherwise)")
+    ap.add_argument("--zero1", action="store_true")
+    args = ap.parse_args()
+
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["multi_pod"],
+                              r.get("attn_impl", "flash")))
+                except Exception:
+                    pass
+
+    cells = []
+    archs = ASSIGNED if args.all or not args.arch else [args.arch]
+    shapes = [s.name for s in ALL_SHAPES] if args.all or not args.shape \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    with open(args.out, "a") as f:
+        for arch, shape, mp in cells:
+            key = (arch, shape, mp, args.attn_impl)
+            if key in done:
+                print(f"skip (done): {key}")
+                continue
+            print(f"=== {arch} x {shape} multi_pod={mp} ===", flush=True)
+            # big-model training needs grad accumulation to fit HBM
+            mb = args.microbatches
+            if shape == "train_4k" and mb == 0:
+                mb = 8      # auto default for the baseline table
+            elif mb == 0:
+                mb = 1
+            try:
+                rec, compiled = lower_cell(
+                    arch, shape, multi_pod=mp, attn_impl=args.attn_impl,
+                    unroll=not args.no_unroll,
+                    microbatches=mb, zero1=args.zero1)
+                del compiled
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                       "status": "error", "error": str(e)[:2000],
+                       "attn_impl": args.attn_impl,
+                       "traceback": traceback.format_exc()[-4000:]}
+            print(json.dumps({k: v for k, v in rec.items()
+                              if k != "traceback"}, indent=None),
+                  flush=True)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Serving driver: real JAX engine(s) with batched requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.1-8b-tiny \
+      --n 32 --rate 10 [--pd] [--prefix-cache] [--instances 2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.serve import DriverCfg, ServeDriver, ServingEngine
+from repro.workload import ShareGPTConfig, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.1-8b-tiny")
+    ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=10.0)
+    ap.add_argument("--instances", type=int, default=1)
+    ap.add_argument("--pd", action="store_true")
+    ap.add_argument("--prefix-cache", action="store_true")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=512)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    reqs = generate(ShareGPTConfig(
+        n_requests=args.n, rate=args.rate, vocab=cfg.vocab,
+        mean_prompt=90, mean_output=24, max_prompt=args.max_len // 2,
+        max_output=48, share_fraction=0.5 if args.prefix_cache else 0.0))
+    kw = dict(max_batch=args.max_batch, max_len=args.max_len,
+              prefix_cache=args.prefix_cache)
+    if args.pd:
+        p0 = ServingEngine(cfg, name="p0", role="prefill", **kw)
+        engines = [p0, ServingEngine(cfg, params=p0.params, name="d0",
+                                     role="decode", **kw)]
+        pd = {"p0": ("d0",)}
+    else:
+        e0 = ServingEngine(cfg, name="e0", **kw)
+        engines = [e0] + [
+            ServingEngine(cfg, params=e0.params, name=f"e{i}", **kw)
+            for i in range(1, args.instances)]
+        pd = None
+    drv = ServeDriver(engines, DriverCfg(), pd_map=pd)
+    m = drv.run(reqs)
+    print(json.dumps(m, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+shardable, no device allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeCfg
+from repro.models import Model
+from repro.train.optimizer import AdamW
+from repro.train.train_step import TrainState
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embed_inputs:
+        inputs = SDS((B, S), jnp.int32)
+    else:
+        inputs = SDS((B, S, cfg.d_model), jnp.bfloat16)
+    if cfg.n_codebooks:
+        labels = SDS((B, S, cfg.n_codebooks), jnp.int32)
+    else:
+        labels = SDS((B, S), jnp.int32)
+    return {"inputs": inputs, "labels": labels}
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeCfg):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embed_inputs:
+        return SDS((B, S), jnp.int32)
+    return SDS((B, S, cfg.d_model), jnp.bfloat16)
+
+
+def decode_token_specs(cfg: ArchConfig, shape: ShapeCfg):
+    B = shape.global_batch
+    if cfg.embed_inputs:
+        return SDS((B, 1), jnp.int32)
+    return SDS((B, 1, cfg.d_model), jnp.bfloat16)
+
+
+def cache_specs(model: Model, shape: ShapeCfg):
+    """Shape-only cache pytree via eval_shape (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: model.init_cache(B, S))
+
+
+def params_specs(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def state_specs(model: Model, optimizer: AdamW) -> TrainState:
+    params = params_specs(model)
+    opt = jax.eval_shape(optimizer.init, params)
+    return TrainState(params, opt)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg, model: Model,
+                optimizer: AdamW | None = None):
+    """All inputs for the step kind of ``shape``: the dry-run entry point."""
+    if shape.step == "train":
+        opt = optimizer or AdamW()
+        return {"state": state_specs(model, opt),
+                "batch": train_batch_specs(cfg, shape)}
+    if shape.step == "prefill":
+        return {"params": params_specs(model),
+                "tokens": prefill_specs(cfg, shape)}
+    if shape.step == "decode":
+        return {"params": params_specs(model),
+                "cache": cache_specs(model, shape),
+                "tokens": decode_token_specs(cfg, shape)}
+    raise ValueError(shape.step)

@@ -1,0 +1,3 @@
+from repro.models.transformer import Model
+
+__all__ = ["Model"]

@@ -1,0 +1,149 @@
+"""Flash attention with a block-recomputing custom VJP (pure JAX).
+
+The naive differentiable ``chunked_attention`` lets JAX save the per-block
+probability tensors for backward — O(S²) residual memory, defeating the
+point of flash. This version implements the FlashAttention-2 backward:
+forward saves only (q, k, v, out, lse); backward recomputes P per KV block
+and accumulates dq (carry) / dk, dv (per-block outputs) in one scan.
+
+Supports GQA, per-sequence lengths, and (possibly traced) sliding windows —
+the same masking semantics as ``chunked_attention``. This is the default
+train/prefill attention; the Pallas kernel in ``repro/kernels`` is the
+TPU-production twin with an identical interface.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_for(q_pos, kv_pos, lengths, window, B):
+    mask = q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+    if lengths is not None:
+        mask = mask[None] & (kv_pos[None, None, :] < lengths[:, None, None])
+        return mask[:, None, None]          # (B,1,1,S,bkv)
+    return mask[None, None, None]           # (1,1,1,S,bkv)
+
+
+def _fwd_scan(q, k, v, lengths, window, bkv, unroll):
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    nk = S // bkv
+    scale = dh ** -0.5
+    qr = (q * scale).reshape(B, S, KV, G, dh)
+    kb = jnp.moveaxis(k.reshape(B, nk, bkv, KV, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bkv, KV, dh), 1, 0)
+    q_pos = jnp.arange(S)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        j, kj, vj = xs
+        s = jnp.einsum("bqkgd,bjkd->bkgqj", qr, kj,
+                       preferred_element_type=jnp.float32)
+        kv_pos = j * bkv + jnp.arange(bkv)
+        s = jnp.where(_mask_for(q_pos, kv_pos, lengths, window, B), s,
+                      NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, KV, G, S, dh), jnp.float32)
+    m0 = jnp.full((B, KV, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (jnp.arange(nk), kb, vb),
+                                  unroll=nk if unroll else 1)
+    l = jnp.maximum(l, 1e-20)
+    out = (acc / l[..., None])
+    lse = m + jnp.log(l)                       # (B,KV,G,S)
+    out_b = jnp.moveaxis(out, 3, 1).reshape(B, S, H, dh).astype(q.dtype)
+    return out_b, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def flash_attention(q, k, v, lengths=None, window=None, bkv: int = 1024,
+                    unroll: bool = False):
+    """q: (B,S,H,dh); k/v: (B,S,KV,dh); causal GQA flash attention."""
+    bkv = min(bkv, q.shape[1])
+    out, _ = _fwd_scan(q, k, v, lengths, window, bkv, unroll)
+    return out
+
+
+def _flash_fwd(q, k, v, lengths, window, bkv, unroll):
+    bkv = min(bkv, q.shape[1])
+    out, lse = _fwd_scan(q, k, v, lengths, window, bkv, unroll)
+    return out, (q, k, v, out, lse, lengths, window)
+
+
+def _flash_bwd(bkv, unroll, res, dout):
+    q, k, v, out, lse, lengths, window = res
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bkv = min(bkv, S)
+    nk = S // bkv
+    scale = dh ** -0.5
+    qr = (q * scale).reshape(B, S, KV, G, dh)
+    do = dout.reshape(B, S, KV, G, dh)
+    ob = out.reshape(B, S, KV, G, dh)
+    # delta_i = sum_d do_i * out_i   (B,KV,G,S)
+    delta = jnp.einsum("bskgd,bskgd->bkgs", do.astype(jnp.float32),
+                       ob.astype(jnp.float32))
+    kb = jnp.moveaxis(k.reshape(B, nk, bkv, KV, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bkv, KV, dh), 1, 0)
+    q_pos = jnp.arange(S)
+
+    def body(dq_acc, xs):
+        j, kj, vj = xs
+        s = jnp.einsum("bqkgd,bjkd->bkgqj", qr, kj,
+                       preferred_element_type=jnp.float32)
+        kv_pos = j * bkv + jnp.arange(bkv)
+        s = jnp.where(_mask_for(q_pos, kv_pos, lengths, window, B), s,
+                      NEG_INF)
+        p = jnp.exp(s - lse[..., None])                    # (B,KV,G,S,bkv)
+        # dv_j = sum_q p * do
+        dv = jnp.einsum("bkgqj,bqkgd->bjkd", p.astype(do.dtype), do,
+                        preferred_element_type=jnp.float32)
+        # dp = do . v_j
+        dp = jnp.einsum("bqkgd,bjkd->bkgqj", do, vj,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])                   # (B,KV,G,S,bkv)
+        dsb = ds.astype(q.dtype)
+        # dq += ds @ k_j (scaled)
+        dq_blk = jnp.einsum("bkgqj,bjkd->bqkgd", dsb, kj,
+                            preferred_element_type=jnp.float32)
+        dq_acc = dq_acc + dq_blk
+        # dk_j = ds^T @ q (scaled q already in qr)
+        dk = jnp.einsum("bkgqj,bqkgd->bjkd", dsb, qr,
+                        preferred_element_type=jnp.float32)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, S, KV, G, dh), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (jnp.arange(nk), kb, vb),
+                                  unroll=nk if unroll else 1)
+    dq = (dq * scale).reshape(B, S, H, dh).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, S, KV, dh).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, S, KV, dh).astype(v.dtype)
+    def zero_ct(x):
+        if x is None:
+            return None
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.zeros_like(x)
+        return jnp.zeros(x.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, zero_ct(lengths), zero_ct(window)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

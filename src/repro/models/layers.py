@@ -1,0 +1,315 @@
+"""Core layers: norms, RoPE, GQA attention (chunked-flash prefill, cached
+decode, banded local), gated/plain MLPs.
+
+Attention comes in three implementations selected by the model:
+  * ``chunked_attention`` — online-softmax over KV blocks via ``lax.scan``;
+    O(S·bkv) live memory instead of O(S²); the pure-JAX analogue of a flash
+    kernel and the default for train/prefill. Computes the full rectangle
+    with causal masking (2x FLOP waste vs perfect causal skip — see
+    EXPERIMENTS.md §Perf for the folded schedule that removes it).
+  * ``folded_causal_attention`` — the load-balanced causal schedule: query
+    blocks are paired (i, n-1-i) so every scan step touches a constant number
+    of KV blocks; removes the rectangle waste.
+  * ``decode_attention`` — single-query attention against a KV cache with
+    per-sequence lengths and optional sliding window.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+@jax.custom_vjp
+def _bf16_ct_boundary(x):
+    """Identity with optimization barriers on both the primal and the
+    cotangent, placed at the residual-stream entry of each norm: XLA
+    otherwise hoists the norm's f32 convert above the TP all-reduce on both
+    the forward (residual add) and backward (dx) paths, doubling every
+    activation collective (§Perf starcoder2 iterations 1/4)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _bf16_ct_fwd(x):
+    return (jax.lax.optimization_barrier(x),
+            jnp.zeros((0,), x.dtype))    # dtype token (dtypes aren't pytrees)
+
+
+def _bf16_ct_bwd(token, dy):
+    dy = jax.lax.optimization_barrier(dy.astype(token.dtype))
+    return (dy,)
+
+
+_bf16_ct_boundary.defvjp(_bf16_ct_fwd, _bf16_ct_bwd)
+
+
+def rmsnorm_ct16(x, scale, eps: float = 1e-5):
+    """rmsnorm with a compute-dtype cotangent boundary (see above)."""
+    return rmsnorm(_bf16_ct_boundary(x), scale, eps)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding. x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _gqa_scores(qb, kb):
+    """qb: (B, bq, KV, G, dh); kb: (B, bkv, KV, dh) -> (B, KV, G, bq, bkv)."""
+    return jnp.einsum("bqkgd,bjkd->bkgqj", qb, kb,
+                      preferred_element_type=jnp.float32)
+
+
+def chunked_attention(q, k, v, *, lengths=None, window=None,
+                      causal: bool = True, bkv: int = 1024,
+                      unroll: bool = False):
+    """Online-softmax attention over KV blocks.
+
+    q: (B, S, H, dh), k/v: (B, S, KV, dh). Returns (B, S, H, dh).
+    ``lengths``: (B,) valid token counts (None = all valid).
+    ``window``: sliding window size; None = full causal. May be a traced
+    scalar (per-layer local/global selection inside a layer scan).
+    """
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bkv = min(bkv, S)
+    nk = S // bkv
+    assert S % bkv == 0, (S, bkv)
+    scale = dh ** -0.5
+    qr = (q * scale).reshape(B, S, KV, G, dh)
+    kb = jnp.moveaxis(k.reshape(B, nk, bkv, KV, dh), 1, 0)  # (nk, B, bkv, KV, dh)
+    vb = jnp.moveaxis(v.reshape(B, nk, bkv, KV, dh), 1, 0)
+
+    q_pos = jnp.arange(S)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        j, kj, vj = xs
+        s = _gqa_scores(qr, kj)  # (B, KV, G, S, bkv)
+        kv_pos = j * bkv + jnp.arange(bkv)
+        mask = jnp.ones((S, bkv), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - kv_pos[None, :] < window
+        if lengths is not None:
+            mask = mask[None] & (kv_pos[None, None, :] < lengths[:, None, None])
+            mask = mask[:, None, None]
+        else:
+            mask = mask[None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, KV, G, S, dh), jnp.float32)
+    m0 = jnp.full((B, KV, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(nk), kb, vb),
+        unroll=nk if unroll else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, dh)  # (B,S,KV,G,dh)->(B,S,H,dh)
+    return out.astype(q.dtype)
+
+
+def folded_causal_attention(q, k, v, *, lengths=None, bkv: int = 1024,
+                            depth: int = 3, unroll: bool = False):
+    """Recursive-halving causal attention (removes most rectangle waste).
+
+    The full-rectangle scan computes S² score entries for causal attention
+    that only needs S²/2. Split queries in half: the lower half only ever
+    attends the lower half of keys (recurse), the upper half attends all keys
+    (rectangle, ~half of it useful). Cost -> S²/2 · (1 + 1/4 + 1/16 + ...)
+    ≈ 0.67·S² at depth 3 vs 1.0·S² for the naive rectangle. The exact
+    constant-cost folded schedule lands in the Pallas flash kernel where the
+    grid is explicit; this is the best pure-XLA schedule we found (§Perf).
+    """
+    B, S, H, dh = q.shape
+    if depth <= 0 or S // 2 < bkv or (S // 2) % bkv != 0:
+        return chunked_attention(q, k, v, lengths=lengths, bkv=min(bkv, S),
+                                 unroll=unroll)
+    half = S // 2
+    out_lo = folded_causal_attention(
+        q[:, :half], k[:, :half], v[:, :half],
+        lengths=lengths, bkv=bkv, depth=depth - 1, unroll=unroll)
+    out_hi = _hi_half_causal(q, k, v, lengths=lengths, bkv=bkv,
+                             unroll=unroll)
+    return jnp.concatenate([out_lo, out_hi], axis=1)
+
+
+def _hi_half_causal(q, k, v, *, lengths, bkv, unroll: bool = False):
+    """Causal attention for the upper-half queries over all S keys."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    half = S // 2
+    scale = dh ** -0.5
+    qr = (q[:, half:] * scale).reshape(B, half, KV, G, dh)
+    nk = S // bkv
+    kb = jnp.moveaxis(k.reshape(B, nk, bkv, KV, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bkv, KV, dh), 1, 0)
+    q_pos = jnp.arange(half) + half
+
+    def body(carry, xs):
+        acc, m, l = carry
+        j, kj, vj = xs
+        s = _gqa_scores(qr, kj)
+        kv_pos = j * bkv + jnp.arange(bkv)
+        mask = q_pos[:, None] >= kv_pos[None, :]
+        if lengths is not None:
+            mask = mask[None] & (kv_pos[None, None, :] < lengths[:, None, None])
+            mask = mask[:, None, None]
+        else:
+            mask = mask[None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, KV, G, half, dh), jnp.float32)
+    m0 = jnp.full((B, KV, G, half), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, half), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (jnp.arange(nk), kb, vb),
+                                  unroll=nk if unroll else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, half, H, dh)
+    return out.astype(q.dtype)
+
+
+def local_banded_attention(q, k, v, *, window: int, lengths=None):
+    """Sliding-window attention computing only the diagonal band.
+
+    Query block i (size w) attends KV blocks {i-1, i} -> FLOPs 2·S·w instead
+    of S². Used by gemma3-style local layers when ``gemma_superblock`` is on.
+    """
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    w = window
+    assert S % w == 0, (S, w)
+    nb = S // w
+    scale = dh ** -0.5
+    qr = (q * scale).reshape(B, nb, w, KV, G, dh)
+    kb = k.reshape(B, nb, w, KV, dh)
+    vb = v.reshape(B, nb, w, KV, dh)
+    # previous block (block -1 = zeros, masked out)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    kband = jnp.concatenate([kprev, kb], axis=2)  # (B, nb, 2w, KV, dh)
+    vband = jnp.concatenate([vprev, vb], axis=2)
+    s = jnp.einsum("bnqkgd,bnjkd->bnkgqj", qr, kband,
+                   preferred_element_type=jnp.float32)  # (B,nb,KV,G,w,2w)
+    q_pos = (jnp.arange(nb)[:, None] * w + jnp.arange(w)[None, :])  # (nb, w)
+    kv_pos = (jnp.arange(nb)[:, None] - 1) * w + jnp.arange(2 * w)[None, :]
+    mask = (q_pos[:, :, None] >= kv_pos[:, None, :])
+    mask &= (q_pos[:, :, None] - kv_pos[:, None, :] < w)
+    mask &= (kv_pos >= 0)[:, None, :]
+    if lengths is not None:
+        mask = mask[None] & (kv_pos[None, :, None, :] < lengths[:, None, None, None])
+        mask = mask[:, :, None, None]
+    else:
+        mask = mask[None, :, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnkgqj,bnjkd->bnqkgd", p.astype(vband.dtype), vband,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, lengths, window=None):
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, dh); caches: (B, S, KV, dh); lengths: (B,) tokens valid in
+    cache *including* the current one (query position = lengths-1).
+    ``window`` may be a traced scalar; None = full.
+    """
+    B, _, H, dh = q.shape
+    S = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qr = (q[:, 0] * scale).reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qr, k_cache,
+                   preferred_element_type=jnp.float32)  # (B,KV,G,S)
+    kv_pos = jnp.arange(S)
+    mask = kv_pos[None, :] < lengths[:, None]
+    if window is not None:
+        mask &= kv_pos[None, :] >= (lengths[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def extend_attention(q, k_cache, v_cache, *, start, lengths, window=None):
+    """Multi-token attention against a cache that already holds ``start``
+    tokens per sequence (chunked/cached prefill). q: (B,S,H,dh); caches:
+    (B,S_max,KV,dh) with the new chunk already written at
+    [start, start+S). ``lengths`` = start + S (total tokens after chunk).
+    Dense masked attention — engine-side path for modest S_max.
+    """
+    B, S, H, dh = q.shape
+    S_max = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qr = (q * scale).reshape(B, S, KV, G, dh)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qr, k_cache,
+                   preferred_element_type=jnp.float32)  # (B,KV,G,S,S_max)
+    kv_pos = jnp.arange(S_max)
+    q_pos = start[:, None] + jnp.arange(S)[None, :]      # (B,S)
+    mask = kv_pos[None, None, :] <= q_pos[..., None]     # causal incl. cache
+    mask &= (kv_pos[None, None, :] < lengths[:, None, None])
+    if window is not None:
+        mask &= kv_pos[None, None, :] > (q_pos[..., None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, dh)
+    return out.astype(q.dtype)
+
+
+def gelu_mlp(x, w_in, w_out):
+    h = jax.nn.gelu(x @ w_in.astype(x.dtype))
+    return h @ w_out.astype(x.dtype)
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down):
+    g = jax.nn.silu(x @ w_gate.astype(x.dtype))
+    h = g * (x @ w_up.astype(x.dtype))
+    return h @ w_down.astype(x.dtype)

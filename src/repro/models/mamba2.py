@@ -1,0 +1,229 @@
+"""Mamba2 (SSD) block — TPU-adapted chunked implementation.
+
+The GPU reference (state-spaces/mamba) uses a fused CUDA scan; the
+TPU-native formulation is the *chunked SSD* algorithm from the Mamba2 paper
+[arXiv:2405.21060]: within-chunk quadratic (MXU-friendly matmuls of shape
+Q×Q, Q=256) + an inter-chunk linear recurrence over chunk states via
+``lax.scan``. This turns a bandwidth-bound elementwise scan into
+matmul-dominated compute — exactly the hardware adaptation DESIGN.md §3
+describes.
+
+Single-token decode keeps (conv_state, ssd_state) and costs O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as m
+
+
+class MambaParams(NamedTuple):
+    w_zx: jax.Array      # (d, 2*d_in)
+    w_bc: jax.Array      # (d, 2*ds)   -- B and C projections (n_groups=1)
+    w_dt: jax.Array      # (d, nh)
+    dt_bias: jax.Array   # (nh,)
+    conv_w: jax.Array    # (k, conv_dim)  depthwise causal conv
+    conv_b: jax.Array    # (conv_dim,)
+    A_log: jax.Array     # (nh,)
+    D: jax.Array         # (nh,)
+    norm_scale: jax.Array  # (d_in,)
+    w_out: jax.Array     # (d_in, d)
+
+
+def init_mamba(key, d: int, ssm) -> dict:
+    d_in = ssm.expand * d
+    nh = ssm.n_heads or d_in // ssm.head_dim
+    ds = ssm.d_state
+    conv_dim = d_in + 2 * ds
+    ks = jax.random.split(key, 6)
+    return {
+        "w_zx": m.dense_init(ks[0], d, 2 * d_in),
+        "w_bc": m.dense_init(ks[1], d, 2 * ds),
+        "w_dt": m.dense_init(ks[2], d, nh),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[3], (nh,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))),
+        "conv_w": m.dense_init(ks[4], ssm.d_conv, conv_dim) * ssm.d_conv ** 0.5,
+        "conv_b": m.zeros((conv_dim,)),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": m.ones((nh,)),
+        "norm_scale": m.zeros((d_in,)),
+        "w_out": m.dense_init(ks[5], d_in, d),
+    }
+
+
+def _segsum(a):
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-tri pairwise sums."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]   # sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xs, a, B, C, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xs: (b, s, h, p) inputs (already dt-scaled); a: (b, s, h) log decay
+    (dt * A, negative); B, C: (b, s, n). Returns (y (b,s,h,p), h_final
+    (b,h,p,n)).
+    """
+    b, s, nh, p = xs.shape
+    n = B.shape[-1]
+    Q = min(chunk, s)
+    s_orig = s
+    if s % Q:
+        # zero-pad the tail: xs=0 (no input), a=0 (decay 1 -> state
+        # preserved), B=C=0. Outputs at padded positions are sliced off.
+        pad = Q - s % Q
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // Q
+    xs = xs.reshape(b, nc, Q, nh, p)
+    a = a.reshape(b, nc, Q, nh).transpose(0, 3, 1, 2)   # (b, h, c, l)
+    B_ = B.reshape(b, nc, Q, n)
+    C_ = C.reshape(b, nc, Q, n)
+
+    A_cum = jnp.cumsum(a, axis=-1)                      # (b,h,c,l)
+    L = jnp.exp(_segsum(a))                             # (b,h,c,l,l)
+    # within-chunk (diagonal blocks)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", C_, B_, L, xs,
+                        preferred_element_type=jnp.float32)
+    # chunk states: contribution of each chunk to its final state
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)     # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", B_, decay_states, xs,
+                        preferred_element_type=jnp.float32)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cum[..., -1])               # (b,h,c)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, p, n), jnp.float32)
+
+    def step(h, inp):
+        st_c, dec_c = inp                               # (b,h,p,n), (b,h)
+        h_new = dec_c[..., None, None] * h + st_c
+        return h_new, h                                 # emit state *before* chunk
+
+    states_c = jnp.moveaxis(states, 1, 0)               # states: (b,c,h,p,n) -> (c,b,h,p,n)
+    decay_c = jnp.moveaxis(chunk_decay, 2, 0)           # (c,b,h)
+    h_final, h_prevs = jax.lax.scan(step, h0, (states_c, decay_c))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)               # (c,b,h,p,n) -> (b,c,h,p,n)
+    # off-diagonal contribution: C_i · h_prev, decayed to position i
+    state_decay = jnp.exp(A_cum)                        # (b,h,c,l)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", C_, h_prevs, state_decay,
+                       preferred_element_type=jnp.float32)
+    y = (Y_diag + Y_off).reshape(b, s, nh, p)[:, :s_orig]
+    return y, h_final
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B,S,C); w: (k,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i: i + x.shape[1]] * w[i]
+    return out + b
+
+
+def mamba_forward(params, x, cfg, state: Optional[dict] = None,
+                  return_state: bool = False):
+    """Full-sequence Mamba2 block. x: (B,S,d) -> (B,S,d)."""
+    ssm = cfg.ssm
+    B_, S, d = x.shape
+    d_in = ssm.expand * d
+    nh = ssm.n_heads or d_in // ssm.head_dim
+    hd = d_in // nh
+    ds = ssm.d_state
+
+    zx = x @ params["w_zx"].astype(x.dtype)
+    z, xc = jnp.split(zx, 2, axis=-1)
+    bc = x @ params["w_bc"].astype(x.dtype)
+    xbc = jnp.concatenate([xc, bc], axis=-1)            # (B,S,d_in+2ds)
+    if state is not None:
+        # continue from a previous chunk: conv sees its last k-1 inputs
+        full = jnp.concatenate([state["conv"].astype(x.dtype), xbc], axis=1)
+    else:
+        full = xbc
+    if full.shape[1] < ssm.d_conv - 1:     # very short first chunk
+        full = jnp.pad(full, ((0, 0), (ssm.d_conv - 1 - full.shape[1], 0),
+                              (0, 0)))
+    conv_tail = full[:, full.shape[1] - (ssm.d_conv - 1):, :]
+    conv_out = _causal_conv(full, params["conv_w"].astype(x.dtype),
+                            params["conv_b"].astype(x.dtype))
+    xbc = jax.nn.silu(conv_out[:, full.shape[1] - S:, :])
+    xc2, Bm, Cm = jnp.split(xbc, [d_in, d_in + ds], axis=-1)
+    dt = jax.nn.softplus(
+        (x @ params["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + params["dt_bias"])                            # (B,S,nh)
+    A = -jnp.exp(params["A_log"])                       # (nh,)
+    xh = xc2.reshape(B_, S, nh, hd).astype(jnp.float32)
+    xs = xh * dt[..., None]
+    a = dt * A                                          # (B,S,nh)
+    h0 = state["ssd"] if state is not None else None
+    y, h_final = ssd_chunked(xs, a, Bm.astype(jnp.float32),
+                             Cm.astype(jnp.float32), ssm.chunk, h0=h0)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(x.dtype)
+    if return_state:
+        new_state = {"ssd": h_final, "conv": conv_tail}
+        return out, new_state
+    return out
+
+
+def mamba_decode(params, x, cfg, state):
+    """Single-token decode. x: (B,1,d); state: {ssd (B,nh,hd,ds), conv (B,k-1,cd)}."""
+    ssm = cfg.ssm
+    B_, _, d = x.shape
+    d_in = ssm.expand * d
+    nh = ssm.n_heads or d_in // ssm.head_dim
+    hd = d_in // nh
+    ds = ssm.d_state
+    k = ssm.d_conv
+
+    zx = x @ params["w_zx"].astype(x.dtype)
+    z, xc = jnp.split(zx, 2, axis=-1)
+    bc = x @ params["w_bc"].astype(x.dtype)
+    xbc = jnp.concatenate([xc, bc], axis=-1)            # (B,1,cd)
+    conv_buf = jnp.concatenate([state["conv"], xbc], axis=1)  # (B,k,cd)
+    conv_out = (conv_buf * params["conv_w"].astype(x.dtype)).sum(axis=1) \
+        + params["conv_b"].astype(x.dtype)              # (B,cd)
+    xbc1 = jax.nn.silu(conv_out)
+    xc2, Bm, Cm = jnp.split(xbc1, [d_in, d_in + ds], axis=-1)
+    dt = jax.nn.softplus(
+        (x[:, 0] @ params["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + params["dt_bias"])                            # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                # (B,nh)
+    xh = xc2.reshape(B_, nh, hd).astype(jnp.float32)
+    h = state["ssd"]                                    # (B,nh,hd,ds)
+    h = dA[..., None, None] * h + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, Bm.astype(jnp.float32), dt)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B_, 1, d_in).astype(x.dtype)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(x.dtype)
+    new_state = {"ssd": h, "conv": conv_buf[:, 1:]}
+    return out, new_state
+
+
+def init_mamba_state(batch: int, d: int, ssm, dtype=jnp.float32) -> dict:
+    d_in = ssm.expand * d
+    nh = ssm.n_heads or d_in // ssm.head_dim
+    hd = d_in // nh
+    conv_dim = d_in + 2 * ssm.d_state
+    return {
+        "ssd": jnp.zeros((batch, nh, hd, ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_dim), dtype),
+    }

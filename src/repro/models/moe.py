@@ -1,0 +1,90 @@
+"""Mixture-of-Experts FFN with top-k routing — sort-based dispatch.
+
+TPU-idiomatic implementation: instead of the GShard (T, E, C) one-hot
+dispatch einsum (whose dispatch tensor is quadratically large), tokens are
+*sorted by expert id*, packed into per-expert capacity buffers, run through a
+batched (E, C, d) einsum (the grouped GEMM that the Pallas kernel
+``kernels/moe_gmm.py`` accelerates), and scattered back with combine weights.
+Capacity overflow tokens are dropped (standard top-k MoE semantics); the
+router is the model-side analogue of the simulator's ``core/expert.py``
+ExpertRouter and can be swapped out the same way.
+
+FLOPs: 3 · E · C · d · d_e per layer — matches the active-parameter roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def router_topk(x, w_router, top_k: int):
+    """Return (expert_idx (T,k) int32, combine_w (T,k) f32, aux_loss scalar)."""
+    logits = (x @ w_router.astype(x.dtype)).astype(jnp.float32)  # (T, E)
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)
+    combine_w, expert_idx = jax.lax.top_k(probs, top_k)
+    combine_w = combine_w / jnp.maximum(
+        combine_w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing aux loss: E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                   # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        jnp.ones(expert_idx.size, jnp.float32)) / expert_idx.size
+    aux = E * jnp.sum(me * ce)
+    return expert_idx.astype(jnp.int32), combine_w, aux
+
+
+def moe_ffn(x, params, *, top_k: int, capacity_factor: float = 1.25,
+            gated: bool = True, shard_experts: bool = False):
+    """x: (T, d). params: router (d,E), w_gate/w_up (E,d,de), w_down (E,de,d)."""
+    T, d = x.shape
+    E = params["router"].shape[-1]
+    expert_idx, combine_w, aux = router_topk(x, params["router"], top_k)
+    C = int(max(1, round(T * top_k * capacity_factor / E)))
+
+    # --- dispatch: sort (token, k) pairs by expert --------------------------
+    flat_e = expert_idx.reshape(-1)                    # (T*k,)
+    order = jnp.argsort(flat_e)                        # stable
+    tok_of = order // top_k                            # token index per entry
+    e_sorted = flat_e[order]
+    # position within expert group = rank - group_start[expert]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * top_k, dtype=jnp.int32) - starts[e_sorted]
+    keep = pos_in_e < C                                # capacity drop
+    dst_e = jnp.where(keep, e_sorted, 0)
+    dst_c = jnp.where(keep, pos_in_e, C)               # C = overflow slot
+
+    buf = jnp.zeros((E, C + 1, d), x.dtype)
+    buf = buf.at[dst_e, dst_c].set(x[tok_of])          # (E, C+1, d)
+    hidden_in = buf[:, :C]                             # (E, C, d)
+    if shard_experts:
+        # pin the expert buffers to the model axis so XLA routes tokens with
+        # one all-to-all instead of resharding per einsum (Perf iteration 2;
+        # GSPMD pads E when it does not divide the axis)
+        from jax.sharding import PartitionSpec as P
+        hidden_in = jax.lax.with_sharding_constraint(
+            hidden_in, P("model", None, None))
+
+    # --- grouped expert FFN -------------------------------------------------
+    if gated:
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", hidden_in,
+                                   params["w_gate"].astype(x.dtype)))
+        u = jnp.einsum("ecd,edf->ecf", hidden_in,
+                       params["w_up"].astype(x.dtype))
+        h = g * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", hidden_in,
+                                   params["w_up"].astype(x.dtype)))
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
+    if shard_experts:
+        from jax.sharding import PartitionSpec as P
+        out_e = jax.lax.with_sharding_constraint(
+            out_e, P("model", None, None))
+
+    # --- combine: gather back and weight ------------------------------------
+    gathered = out_e[dst_e, jnp.minimum(dst_c, C - 1)]  # (T*k, d)
+    w = (combine_w.reshape(-1)[order] * keep).astype(x.dtype)
+    contrib = gathered * w[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[tok_of].add(contrib)
+    return y, aux

@@ -1,0 +1,321 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential exponential gating).
+
+mLSTM prefill uses a *chunked online* form: the parallel mLSTM is attention
+with an additive log-decay bias (logD[i,j] = F_i - F_j + i_j, F = cumsum of
+log-sigmoid forget gates) and an abs-max normalizer instead of softmax. We
+reuse the flash-style scan over KV chunks, tracking a running max of logD
+(the exp part is always positive; q·k keeps its sign in the accumulator).
+Decode carries (C, n, m) per head: C (hd×hd) matrix memory.
+
+sLSTM has no parallel form (normalizer + stabilizer recurrence) -> lax.scan
+over time; per-head block-diagonal recurrent weights.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as m
+from repro.models.layers import rmsnorm
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def init_mlstm(key, d: int, nh: int) -> dict:
+    d_in = 2 * d
+    ks = jax.random.split(key, 8)
+    return {
+        "norm_in": m.zeros((d,)),
+        "w_up": m.dense_init(ks[0], d, 2 * d_in),     # -> [x_in, z]
+        "conv_w": m.dense_init(ks[1], 4, d_in) * 2.0,  # depthwise k=4
+        "conv_b": m.zeros((d_in,)),
+        "w_q": m.dense_init(ks[2], d_in, d_in),
+        "w_k": m.dense_init(ks[3], d_in, d_in),
+        "w_v": m.dense_init(ks[4], d_in, d_in),
+        "w_i": m.dense_init(ks[5], d_in, nh),
+        "w_f": m.dense_init(ks[6], d_in, nh),
+        "f_bias": m.ones((nh,)) * 3.0,                # open forget gates
+        "norm_h": m.zeros((d_in,)),
+        "w_down": m.dense_init(ks[7], d_in, d),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i: i + x.shape[1]] * w[i]
+    return out + b
+
+
+def _mlstm_inner_chunked(q, k, v, i_pre, f_pre, chunk: int,
+                         unroll: bool = False):
+    """Chunked stabilized mLSTM. q,k,v: (B,S,nh,hd); i_pre,f_pre: (B,S,nh)."""
+    B, S, nh, hd = q.shape
+    F = jnp.cumsum(jax.nn.log_sigmoid(f_pre.astype(jnp.float32)), axis=1)
+    I = i_pre.astype(jnp.float32)
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # zero-pad tail: k=v=0 -> padded keys contribute nothing; padded
+        # queries are sliced off; causal mask already blocks pad<-real.
+        pad = Q - S % Q
+        zpad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        zpad3 = ((0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, zpad4)
+        k = jnp.pad(k, zpad4)
+        v = jnp.pad(v, zpad4)
+        F = jnp.pad(F, zpad3)
+        I = jnp.pad(I, zpad3)
+        S = S + pad
+    nc = S // Q
+    scale = hd ** -0.5
+    qc = (q * scale).reshape(B, nc, Q, nh, hd)
+    kc = k.reshape(B, nc, Q, nh, hd)
+    vc = v.reshape(B, nc, Q, nh, hd)
+    Fc = F.reshape(B, nc, Q, nh)
+    Ic = I.reshape(B, nc, Q, nh)
+
+    kb = jnp.moveaxis(kc, 1, 0)
+    vb = jnp.moveaxis(vc, 1, 0)
+    Fb = jnp.moveaxis(Fc, 1, 0)
+    Ib = jnp.moveaxis(Ic, 1, 0)
+
+    q_idx = jnp.arange(nc)
+
+    # align logD shapes: build Fj/Ij broadcast inside body via explicit shapes
+    def body_fixed(carry, xs):
+        acc, l, mx = carry
+        j, kj, vj, Fj, Ij = xs                 # kj: (B,Q,nh,hd); Fj: (B,Q,nh)
+        s = jnp.einsum("bcqhd,bjhd->bcqhj", qc, kj,
+                       preferred_element_type=jnp.float32)
+        Fi = Fc[..., None]                      # (B,nc,Q,nh,1)
+        Fj_ = Fj.transpose(0, 2, 1)[:, None, None, :, :]  # (B,1,1,nh,Qj)
+        Ij_ = Ij.transpose(0, 2, 1)[:, None, None, :, :]
+        logD = Fi - Fj_ + Ij_
+        qpos = (jnp.arange(nc)[:, None] * Q + jnp.arange(Q)[None, :])
+        kpos = j * Q + jnp.arange(Q)
+        causal = qpos[..., None] >= kpos[None, None, :]
+        logD = jnp.where(causal[None, :, :, None, :], logD, NEG_INF)
+        m_new = jnp.maximum(mx, logD.max(axis=-1))
+        w = jnp.exp(logD - m_new[..., None])
+        corr = jnp.exp(mx - m_new)
+        sw = s * w
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bcqhj,bjhd->bcqhd", sw, vj.astype(jnp.float32))
+        l = l * corr + sw.sum(axis=-1)
+        return (acc, l, m_new), None
+
+    acc0 = jnp.zeros((B, nc, Q, nh, hd), jnp.float32)
+    l0 = jnp.zeros((B, nc, Q, nh), jnp.float32)
+    m0 = jnp.full((B, nc, Q, nh), NEG_INF, jnp.float32)
+    (acc, l, mx), _ = jax.lax.scan(
+        body_fixed, (acc0, l0, m0), (q_idx, kb, vb, Fb, Ib),
+        unroll=nc if unroll else 1)
+    denom = jnp.maximum(jnp.abs(l), jnp.exp(-mx))
+    h = acc / denom[..., None]
+    return h.reshape(B, S, nh, hd)[:, :S_orig]
+
+
+def mlstm_forward(params, x, nh: int, eps: float,
+                  state: Optional[dict] = None, return_state: bool = False,
+                  chunk: int = 256, unroll: bool = False):
+    """mLSTM block. x: (B,S,d)."""
+    B, S, d = x.shape
+    d_in = 2 * d
+    hd = d_in // nh
+    xn = rmsnorm(x, params["norm_in"], eps)
+    up = xn @ params["w_up"].astype(x.dtype)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    conv_in = x_in
+    cx = jax.nn.silu(_causal_conv(x_in, params["conv_w"].astype(x.dtype),
+                                  params["conv_b"].astype(x.dtype)))
+    q = (cx @ params["w_q"].astype(x.dtype)).reshape(B, S, nh, hd)
+    k = (cx @ params["w_k"].astype(x.dtype)).reshape(B, S, nh, hd)
+    v = (x_in @ params["w_v"].astype(x.dtype)).reshape(B, S, nh, hd)
+    i_pre = cx @ params["w_i"].astype(x.dtype)
+    f_pre = cx @ params["w_f"].astype(x.dtype) + params["f_bias"].astype(x.dtype)
+    h = _mlstm_inner_chunked(q, k, v, i_pre, f_pre, chunk, unroll=unroll)
+    h = h.reshape(B, S, d_in).astype(x.dtype)
+    h = rmsnorm(h, params["norm_h"], eps) * jax.nn.silu(z)
+    out = x + h @ params["w_down"].astype(x.dtype)
+    if return_state:
+        # recompute exact final recurrent state for decode continuation
+        st = _mlstm_final_state(q, k, v, i_pre, f_pre)
+        st["conv"] = conv_in[:, S - 3:, :]
+        return out, st
+    return out
+
+
+def _mlstm_final_state(q, k, v, i_pre, f_pre):
+    """Exact (C, n, m) after consuming the whole sequence."""
+    B, S, nh, hd = k.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    F = jnp.cumsum(logf, axis=1)                 # (B,S,nh)
+    Ftot = F[:, -1]                              # (B,nh)
+    # weight of step t in final state: exp(Ftot - F_t + I_t)
+    logw = Ftot[:, None] - F + i_pre.astype(jnp.float32)
+    mfin = logw.max(axis=1)                      # (B,nh)
+    w = jnp.exp(logw - mfin[:, None])
+    C = jnp.einsum("bshd,bshe,bsh->bhde", v.astype(jnp.float32),
+                   k.astype(jnp.float32), w)
+    n = jnp.einsum("bshd,bsh->bhd", k.astype(jnp.float32), w)
+    return {"C": C, "n": n, "m": mfin}
+
+
+def mlstm_decode(params, x, nh: int, eps: float, state: dict):
+    """x: (B,1,d); state: {C (B,nh,hd,hd), n (B,nh,hd), m (B,nh), conv (B,3,d_in)}."""
+    B, _, d = x.shape
+    d_in = 2 * d
+    hd = d_in // nh
+    xn = rmsnorm(x, params["norm_in"], eps)
+    up = xn @ params["w_up"].astype(x.dtype)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    conv_buf = jnp.concatenate([state["conv"], x_in], axis=1)  # (B,4,d_in)
+    conv_out = (conv_buf * params["conv_w"].astype(x.dtype)).sum(axis=1) \
+        + params["conv_b"].astype(x.dtype)
+    cx = jax.nn.silu(conv_out)                   # (B,d_in)
+    q = (cx @ params["w_q"].astype(x.dtype)).reshape(B, nh, hd)
+    k = (cx @ params["w_k"].astype(x.dtype)).reshape(B, nh, hd)
+    v = (x_in[:, 0] @ params["w_v"].astype(x.dtype)).reshape(B, nh, hd)
+    i_pre = (cx @ params["w_i"].astype(x.dtype)).astype(jnp.float32)
+    f_pre = (cx @ params["w_f"].astype(x.dtype)
+             + params["f_bias"].astype(x.dtype)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+    m_new = jnp.maximum(logf + m_prev, i_pre)
+    f = jnp.exp(logf + m_prev - m_new)
+    i = jnp.exp(i_pre - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = f[..., None, None] * C_prev + i[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :])
+    n = f[..., None] * n_prev + i[..., None] * kf
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    num = jnp.einsum("bhde,bhe->bhd", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, d_in).astype(x.dtype)
+    h = rmsnorm(h, params["norm_h"], eps) * jax.nn.silu(z)
+    out = x + h @ params["w_down"].astype(x.dtype)
+    return out, {"C": C, "n": n, "m": m_new, "conv": conv_buf[:, 1:]}
+
+
+def init_mlstm_state(batch: int, d: int, nh: int, dtype=jnp.float32) -> dict:
+    d_in = 2 * d
+    hd = d_in // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_in), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def init_slstm(key, d: int, nh: int) -> dict:
+    hd = d // nh
+    ks = jax.random.split(key, 7)
+    ff = int(d * 4 / 3)
+    def rec(key):
+        return m.dense_init(key, hd, hd * nh).reshape(hd, nh, hd).transpose(
+            1, 0, 2)  # (nh, hd, hd)
+    return {
+        "norm_in": m.zeros((d,)),
+        "w_gates": m.dense_init(ks[0], d, 4 * d),      # i,f,z,o
+        "r_gates": jax.vmap(rec)(jax.random.split(ks[1], 4)),  # (4,nh,hd,hd)
+        "b_gates": jnp.concatenate([m.zeros((d,)), m.ones((d,)) * 3.0,
+                                    m.zeros((2 * d,))]),
+        "norm_h": m.zeros((d,)),
+        "w_up": m.dense_init(ks[2], d, 2 * ff),
+        "w_down": m.dense_init(ks[3], ff, d),
+    }
+
+
+def _slstm_cell(state, gates, nh: int):
+    """One sLSTM step. gates: (B, 4d) preactivations *without* recurrent part."""
+    h_prev, c_prev, n_prev, m_prev = state          # each (B,nh,hd)
+    B = h_prev.shape[0]
+    d = h_prev.shape[1] * h_prev.shape[2]
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+    gi = gi.reshape(B, nh, -1)
+    gf = gf.reshape(B, nh, -1)
+    gz = gz.reshape(B, nh, -1)
+    go = go.reshape(B, nh, -1)
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + m_prev, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(logf + m_prev - m_new)
+    c = f * c_prev + i * jnp.tanh(gz)
+    n = f * n_prev + i
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return (h, c, n, m_new)
+
+
+def slstm_forward(params, x, nh: int, eps: float,
+                  state: Optional[dict] = None, return_state: bool = False):
+    """sLSTM block: strict sequential scan over time. x: (B,S,d)."""
+    B, S, d = x.shape
+    hd = d // nh
+    xn = rmsnorm(x, params["norm_in"], eps)
+    gates_x = xn @ params["w_gates"].astype(x.dtype) \
+        + params["b_gates"].astype(x.dtype)          # (B,S,4d)
+    if state is None:
+        state = init_slstm_state(B, d, nh)
+    st = (state["h"], state["c"], state["n"], state["m"])
+
+    r = params["r_gates"].astype(jnp.float32)        # (4,nh,hd,hd)
+
+    def step(carry, g_t):
+        h_prev = carry[0]                            # (B,nh,hd)
+        rec = jnp.einsum("bhd,ghde->bghe", h_prev, r)  # (B,4,nh,hd)
+        g = g_t.astype(jnp.float32) + rec.reshape(B, 4 * d)
+        new = _slstm_cell(carry, g, nh)
+        return new, new[0]
+
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(
+        step, st, jnp.moveaxis(gates_x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    h = rmsnorm(h, params["norm_h"], eps)
+    up = h @ params["w_up"].astype(x.dtype)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = x + (jax.nn.gelu(a) * b) @ params["w_down"].astype(x.dtype)
+    if return_state:
+        return out, {"h": h_f, "c": c_f, "n": n_f, "m": m_f}
+    return out
+
+
+def slstm_decode(params, x, nh: int, eps: float, state: dict):
+    B, _, d = x.shape
+    xn = rmsnorm(x, params["norm_in"], eps)
+    g_x = (xn[:, 0] @ params["w_gates"].astype(x.dtype)
+           + params["b_gates"].astype(x.dtype))
+    r = params["r_gates"].astype(jnp.float32)
+    rec = jnp.einsum("bhd,ghde->bghe", state["h"], r).reshape(B, 4 * d)
+    g = g_x.astype(jnp.float32) + rec
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    h_n, c_n, n_n, m_n = _slstm_cell(carry, g, nh)
+    h = h_n.reshape(B, 1, d).astype(x.dtype)
+    h = rmsnorm(h, params["norm_h"], eps)
+    up = h @ params["w_up"].astype(x.dtype)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = x + (jax.nn.gelu(a) * b) @ params["w_down"].astype(x.dtype)
+    return out, {"h": h_n, "c": c_n, "n": n_n, "m": m_n}
+
+
+def init_slstm_state(batch: int, d: int, nh: int) -> dict:
+    hd = d // nh
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}

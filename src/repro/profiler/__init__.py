@@ -1,0 +1,8 @@
+from repro.profiler.hw_specs import get_hw, measured_cpu_spec, register_hw
+from repro.profiler.operator_profiler import (OperatorProfiler,
+                                              ProfilerConfig,
+                                              model_spec_from_arch,
+                                              profile_arch)
+
+__all__ = ["get_hw", "measured_cpu_spec", "register_hw", "OperatorProfiler",
+           "ProfilerConfig", "model_spec_from_arch", "profile_arch"]

@@ -1,0 +1,29 @@
+"""CLI: the paper's single-command hardware integration.
+
+  python -m repro.profiler --arch llama3.1-8b-tiny --mode measured
+  python -m repro.profiler --arch qwen3-8b --mode analytical --hw tpu-v6e
+"""
+import argparse
+import json
+
+from repro.profiler import profile_arch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--hw", default="cpu-measured")
+    ap.add_argument("--mode", default="measured",
+                    choices=["measured", "analytical"])
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    trace = profile_arch(args.arch, hardware=args.hw, mode=args.mode,
+                         tp=args.tp)
+    out = args.out or f"traces/{args.arch}.{args.hw}.{args.mode}.json"
+    trace.save(out)
+    print(json.dumps({"trace": out, **trace.meta}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Iteration-level engine profiler.
+
+Times real ``ServingEngine`` iterations in controlled states and emits
+``iter`` trace points (phase x tokens x context). This is the highest-
+fidelity trace tier: it captures everything the operator-level composition
+misses (slot writes, sampling, host sync) — the moral equivalent of the
+paper's profiler hooking a real vLLM worker. The simulator's PerfModel
+prefers ``iter`` points when present and falls back to operator points.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.trace import Trace
+from repro.serve.engine import ServingEngine
+from repro.workload.sharegpt import Request
+
+
+def engine_trace(arch: str, *, max_batch: int = 4, max_len: int = 512,
+                 prefill_buckets: Sequence[int] = (16, 32, 64, 128, 256),
+                 decode_ctxs: Sequence[int] = (32, 64, 128, 256),
+                 reps: int = 3, seed: int = 0) -> Trace:
+    cfg = get_config(arch)
+    trace = Trace(model=arch, hardware="cpu-engine", tp=1)
+    t_start = time.time()
+    eng = ServingEngine(cfg, max_batch=max_batch, max_len=max_len,
+                        name="probe", seed=seed)
+    eng.warmup(buckets=prefill_buckets)
+    rng = np.random.default_rng(seed)
+
+    # --- prefill latency per bucket (+ P/D KV-export cost) ---
+    rid = 0
+    for P in prefill_buckets:
+        if P >= max_len - 8:
+            continue
+        lat, exp_lat = [], []
+        for _ in range(reps):
+            toks = rng.integers(0, cfg.vocab, P - 1).tolist()
+            eng.submit(Request(req_id=rid, arrival=0.0, prompt_tokens=toks,
+                               output_len=1))
+            rid += 1
+            lat.append(eng.step())          # the prefill iteration
+            if eng.slot_req:
+                slot = next(iter(eng.slot_req))
+                t0 = time.perf_counter()
+                eng._export_slot(slot, P - 1)
+                exp_lat.append(time.perf_counter() - t0)
+            while eng.slot_req:             # drain the single decode
+                eng.step()
+        trace.add("iter", "prefill", P, P, float(np.median(lat)))
+        if exp_lat:
+            trace.add("kv_export", "prefill", P, P,
+                      float(np.median(exp_lat)))
+
+    # --- decode latency per (batch, context) ---
+    for ctx in decode_ctxs:
+        if ctx + 16 >= max_len:
+            continue
+        for nb in sorted({1, max(1, max_batch // 2), max_batch}):
+            eng2 = ServingEngine(cfg, params=eng.params, max_batch=max_batch,
+                                 max_len=max_len, name="probe2")
+            for i in range(nb):
+                toks = rng.integers(0, cfg.vocab, ctx).tolist()
+                eng2.submit(Request(req_id=rid, arrival=0.0,
+                                    prompt_tokens=toks,
+                                    output_len=reps + 4))
+                rid += 1
+                eng2.step()                 # prefill each
+            lat = []
+            for _ in range(reps + 2):
+                if not eng2.slot_req:
+                    break
+                lat.append(eng2.step())     # decode iterations
+            if lat:
+                trace.add("iter", "decode", nb, ctx,
+                          float(np.median(lat[1:]) if len(lat) > 1
+                                else lat[0]))
+    trace.meta["profile_wall_s"] = time.time() - t_start
+    trace.meta["mode"] = "engine"
+    trace.meta["n_points"] = len(trace.points)
+    return trace

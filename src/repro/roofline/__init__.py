@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (HBM_BW, LINK_BW, PEAK_FLOPS, Roofline,
+                                     collective_bytes, from_compiled,
+                                     model_flops, shape_bytes)
+
+__all__ = ["HBM_BW", "LINK_BW", "PEAK_FLOPS", "Roofline", "collective_bytes",
+           "from_compiled", "model_flops", "shape_bytes"]

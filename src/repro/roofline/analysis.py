@@ -1,0 +1,140 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+  compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory     = HLO_bytes / (chips × HBM_bw)
+  collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed from the post-SPMD HLO text (sum of result-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, scaled by the op's per-device data-movement factor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link (per direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+# fraction of the result bytes each device actually moves over links
+# (ring algorithms; n = group size, approximated for large n)
+_MOVE_FACTOR = {
+    "all-gather": 1.0,        # receives (n-1)/n of result ~ 1
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,    # sends (n-1)/n of input ~ 1 x result*n... see note
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of all array types in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind result bytes (deduplicating -start/-done pairs)."""
+    out: Dict[str, int] = {}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start(): hlo_text.find("\n", m.start())]
+        # skip the -done halves of async pairs (same bytes as -start)
+        if f"{kind}-done(" in line:
+            continue
+        out[kind] = out.get(kind, 0) + shape_bytes(type_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: Dict[str, int]   # per-device collective result bytes
+    n_devices: int
+    coll_moved: float = 0.0      # ring-factor-scaled per-device bytes
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        moved = self.coll_moved or sum(
+            _MOVE_FACTOR.get(k, 1.0) * v for k, v in self.coll_bytes.items())
+        return moved / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    def summary(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes": dict(self.coll_bytes),
+        }
+
+
+def from_compiled(compiled, n_devices: int) -> Roofline:
+    """Loop-aware roofline via the HLO analyzer (see hlo_analyzer.py for why
+    cost_analysis() alone is not usable here)."""
+    from repro.roofline.hlo_analyzer import HloAnalyzer
+    hlo = compiled.as_text()
+    cost = HloAnalyzer(hlo).analyze()
+    r = Roofline(flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                 coll_bytes={k: int(v) for k, v in cost.coll_bytes.items()},
+                 n_devices=n_devices)
+    r.coll_moved = cost.coll_moved
+    return r
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for train;
+    2·N·D for inference steps (fwd only). D = tokens processed."""
+    n = cfg.active_param_count()
+    if shape.step == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.step == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens

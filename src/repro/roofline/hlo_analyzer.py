@@ -1,0 +1,279 @@
+"""Post-SPMD HLO analyzer: loop-aware FLOP / HBM-byte / collective counts.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE (trip
+counts are ignored) and, on the CPU backend, reports unfused
+bytes-accessed — both useless for a TPU roofline. This walker parses
+``compiled.as_text()`` directly:
+
+  * builds the computation call graph (while bodies, fusions, calls),
+  * multiplies per-op costs by the product of enclosing loop trip counts
+    (``backend_config={"known_trip_count":{"n":...}}``, emitted by
+    ``lax.scan``; falls back to the max constant in the loop condition),
+  * FLOPs: 2·prod(result)·prod(contracting dims) per ``dot``,
+  * HBM bytes (TPU-fusion flavored): dots count lhs+rhs+result; fusions,
+    scatter/gather/dynamic-(update-)slice count 2x result (one read + one
+    write); pure data-movement artifacts (copy/bitcast/tuple/gte) count 0;
+  * collective bytes by kind with ring-algorithm per-device move factors
+    using the actual replica group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "f8e4m3fn": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8,
+    "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(
+    r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e4m3|f8e5m2|s64|s32|s16|s8|u64|u32|"
+    r"u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\"={:]+n[\\"={:]+(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes_and_dims(type_str: str):
+    total, dims_all = 0, []
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        ds = []
+        if dims:
+            ds = [int(d) for d in dims.split(",")]
+            for d in ds:
+                n *= d
+        total += n * _DTYPE_BYTES[dt]
+        dims_all.append(ds)
+    return total, dims_all
+
+
+@dataclasses.dataclass
+class OpCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_moved: float = 0.0      # ring-factor-scaled per-device bytes
+
+    def add(self, other: "OpCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.coll_moved += other.coll_moved * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.text = hlo_text
+        self.shape_of: Dict[str, str] = {}
+        self.comps: Dict[str, List[str]] = {}
+        self._parse_structure()
+
+    def _parse_structure(self):
+        cur = None
+        for line in self.text.splitlines():
+            mc = _COMP_RE.match(line)
+            if mc and line.rstrip().endswith("{"):
+                cur = mc.group(1)
+                self.comps[cur] = []
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            self.comps[cur].append(line)
+            md = _DEF_RE.match(line)
+            if md:
+                rest = line[md.end():]
+                # the type is everything up to the op name token
+                self.shape_of[md.group(1)] = rest.split(" ")[0] \
+                    if not rest.startswith("(") else rest[:rest.index(")") + 1]
+
+    # -- helpers --
+    def _operands(self, line: str) -> List[str]:
+        """Operand names inside the first (...) of the op call."""
+        op_idx = line.find("(")
+        if op_idx < 0:
+            return []
+        depth, end = 0, len(line)
+        for i in range(op_idx, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return _OPND_RE.findall(line[op_idx:end])
+
+    def _result_type(self, line: str) -> str:
+        md = _DEF_RE.match(line)
+        rest = line[md.end():] if md else line
+        if rest.startswith("("):
+            return rest[: rest.index(")") + 1]
+        return rest.split(" ")[0]
+
+    def _group_size(self, line: str, kind: str) -> int:
+        m = _GROUPS_RE.search(line)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST_RE.search(line)
+        if m:
+            return len(m.group(1).split(","))
+        return 2
+
+    def _op_name(self, line: str) -> Optional[str]:
+        md = _DEF_RE.match(line)
+        if not md:
+            return None
+        rest = line[md.end():]
+        # skip the type token(s)
+        if rest.startswith("("):
+            rest = rest[rest.index(")") + 1:].lstrip()
+        else:
+            sp = rest.find(" ")
+            rest = rest[sp + 1:] if sp >= 0 else ""
+        return rest.split("(")[0].strip()
+
+    def _line_cost(self, line: str) -> Tuple[OpCost, List[Tuple[str, float]]]:
+        """Returns (cost, [(called_computation, multiplier), ...])."""
+        cost = OpCost()
+        calls: List[Tuple[str, float]] = []
+        op = self._op_name(line)
+        if not op:
+            return cost, calls
+        rtype = self._result_type(line)
+        rbytes, _ = _type_bytes_and_dims(rtype)
+
+        if op == "while":
+            trips = 1.0
+            mt = _TRIP_RE.search(line)
+            if mt:
+                trips = float(mt.group(1))
+            body = re.search(r"body=%?([\w.\-]+)", line)
+            if body:
+                calls.append((body.group(1), trips))
+            return cost, calls
+        if op in ("fusion", "call", "async-start"):
+            m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", line)
+            if m:
+                calls.append((m.group(1), 1.0))
+            if op == "fusion":
+                name = _DEF_RE.match(line).group(1)
+                if "dynamic-update-slice" in name or "dynamic_update_slice" \
+                        in name:
+                    # in-place accumulator update: traffic ~ the small
+                    # operands (slice + indices), buffer is aliased
+                    small = sum(
+                        _type_bytes_and_dims(self.shape_of.get(o, ""))[0]
+                        for o in self._operands(line)
+                        if _type_bytes_and_dims(
+                            self.shape_of.get(o, ""))[0] < rbytes)
+                    cost.hbm_bytes += 2.0 * min(small or rbytes, rbytes)
+                else:
+                    cost.hbm_bytes += 2.0 * rbytes
+            return cost, calls
+        if op == "conditional":
+            for m in re.finditer(r"(?:true_computation|false_computation|"
+                                 r"branch_computations)=\{?%?([\w.\-]+)", line):
+                calls.append((m.group(1), 1.0))
+            return cost, calls
+
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLL_KINDS:
+            if op.endswith("-done"):
+                return cost, calls
+            n = self._group_size(line, base)
+            factor = {"all-gather": (n - 1) / n,
+                      "all-reduce": 2 * (n - 1) / n,
+                      "reduce-scatter": (n - 1),
+                      "all-to-all": (n - 1) / n,
+                      "collective-permute": 1.0}[base]
+            cost.coll_bytes[base] = rbytes
+            cost.coll_moved = rbytes * factor
+            cost.hbm_bytes += 2.0 * rbytes
+            return cost, calls
+
+        if op == "dot":
+            ops = self._operands(line)
+            lhs_shape = self.shape_of.get(ops[0], "") if ops else ""
+            rhs_shape = self.shape_of.get(ops[1], "") if len(ops) > 1 else ""
+            rb, rdims = _type_bytes_and_dims(rtype)
+            lb, ldims = _type_bytes_and_dims(lhs_shape)
+            rhb, _ = _type_bytes_and_dims(rhs_shape)
+            contract = 1
+            mc = _LHS_CONTRACT_RE.search(line)
+            if mc and ldims and ldims[0]:
+                for ci in mc.group(1).split(","):
+                    if ci:
+                        contract *= ldims[0][int(ci)]
+            rsize = 1
+            for ds in rdims:
+                for d in ds:
+                    rsize *= d
+            cost.flops += 2.0 * rsize * contract
+            cost.hbm_bytes += rb + lb + rhb
+            return cost, calls
+
+        if op == "convolution":
+            cost.hbm_bytes += 3.0 * rbytes
+            return cost, calls
+        if op in ("scatter", "dynamic-update-slice"):
+            # in-place update: traffic ~ 2x the *update* operand, not the
+            # full result buffer
+            ops = self._operands(line)
+            ub = rbytes
+            if len(ops) > 1:
+                ub, _ = _type_bytes_and_dims(self.shape_of.get(ops[1], ""))
+                ub = ub or rbytes
+            cost.hbm_bytes += 2.0 * min(ub, rbytes)
+            return cost, calls
+        if op in ("gather", "dynamic-slice", "reduce", "reduce-window"):
+            cost.hbm_bytes += 2.0 * rbytes
+            return cost, calls
+        if op == "sort":
+            cost.hbm_bytes += 4.0 * rbytes   # multi-pass
+            return cost, calls
+        # copies from resharding are real data movement on TPU
+        if op == "copy":
+            cost.hbm_bytes += 2.0 * rbytes
+            return cost, calls
+        return cost, calls
+
+    def analyze_computation(self, name: str, _memo=None) -> OpCost:
+        if _memo is None:
+            _memo = {}
+        if name in _memo:
+            return _memo[name]
+        total = OpCost()
+        for line in self.comps.get(name, ()):
+            cost, calls = self._line_cost(line)
+            total.add(cost)
+            for callee, mult in calls:
+                sub = self.analyze_computation(callee, _memo)
+                total.add(sub, mult)
+        _memo[name] = total
+        return total
+
+    def entry(self) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", self.text, re.M)
+        if not m:
+            raise ValueError("no ENTRY computation found")
+        return m.group(1)
+
+    def analyze(self) -> OpCost:
+        return self.analyze_computation(self.entry())

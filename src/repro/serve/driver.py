@@ -1,0 +1,143 @@
+"""Multi-instance serving driver: real compute, virtual time.
+
+Orchestrates N ``ServingEngine`` instances + a router + optional P/D wiring
+as a discrete-event loop over *virtual* clocks: at each step the
+earliest-available engine with work runs ONE real iteration (wall-clock
+measured) and its clock advances by the measured latency. Instances thus
+behave as if they ran in parallel. KV transfers between instances cost
+bytes/bw in virtual time (configurable, default PCIe-class).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.engine import EngineRequest, ServingEngine
+from repro.workload.sharegpt import Request
+
+
+@dataclasses.dataclass
+class DriverCfg:
+    router: str = "round_robin"         # round_robin | least_loaded
+    kv_transfer_bw: float = 16e9        # bytes/s for P/D handoff
+    kv_transfer_latency: float = 10e-6
+
+
+class ServeDriver:
+    def __init__(self, engines: List[ServingEngine],
+                 cfg: DriverCfg = DriverCfg(),
+                 pd_map: Optional[Dict[str, Tuple[str, ...]]] = None):
+        self.engines = {e.name: e for e in engines}
+        self.cfg = cfg
+        self.pd_map = pd_map or {}
+        self._rr = 0
+        self.finished: List[EngineRequest] = []
+        for e in engines:
+            e.on_request_done = self._done
+        for pname, dnames in self.pd_map.items():
+            p = self.engines[pname]
+            p.on_prefill_done = self._make_handoff(
+                [self.engines[d] for d in dnames])
+
+    def _done(self, ereq: EngineRequest):
+        self.finished.append(ereq)
+
+    def _make_handoff(self, targets: List[ServingEngine]):
+        def handoff(src: ServingEngine, ereq: EngineRequest, kv: dict,
+                    length: int, first_tok: int, _targets=targets):
+            tgt = min(_targets, key=lambda e: len(e.slot_req))
+            nbytes = sum(v.nbytes for v in _flat_np(kv))
+            t_xfer = self.cfg.kv_transfer_latency + nbytes / \
+                self.cfg.kv_transfer_bw
+            # decode instance can't start this request before the KV lands
+            tgt.now = max(tgt.now, src.now + t_xfer)
+            tgt.admit_with_kv(ereq, kv, length, first_tok)
+        return handoff
+
+    def _route(self, req: Request) -> ServingEngine:
+        cands = [e for e in self.engines.values()
+                 if e.role in ("unified", "prefill")]
+        if self.cfg.router == "least_loaded":
+            return min(cands, key=lambda e: len(e.slot_req)
+                       + len(e.waiting))
+        e = cands[self._rr % len(cands)]
+        self._rr += 1
+        return e
+
+    def run(self, requests: Sequence[Request], warmup: bool = True) -> dict:
+        if warmup:
+            for e in self.engines.values():
+                e.warmup()
+        pending = sorted(requests, key=lambda r: r.arrival)
+        pi = 0
+        reqmap: Dict[int, EngineRequest] = {}
+        n_total = len(pending)
+        guard = 0
+        while len(self.finished) < n_total and guard < 10_000_000:
+            guard += 1
+            # 1. deliver arrivals up to the earliest engine clock
+            busy_engines = [e for e in self.engines.values() if e.has_work()]
+            t_min = min((e.now for e in busy_engines), default=None)
+            while pi < len(pending) and (
+                    t_min is None or pending[pi].arrival <= t_min
+                    or not busy_engines):
+                r = pending[pi]
+                eng = self._route(r)
+                eng.now = max(eng.now, r.arrival)
+                eng.submit(r)
+                pi += 1
+                busy_engines = [e for e in self.engines.values()
+                                if e.has_work()]
+                t_min = min((e.now for e in busy_engines), default=None)
+            # 2. step the earliest engine that has work
+            if not busy_engines:
+                if pi < len(pending):
+                    continue
+                break
+            eng = min(busy_engines, key=lambda e: e.now)
+            eng.step()
+        return self.metrics()
+
+    def metrics(self) -> dict:
+        done = self.finished
+        if not done:
+            return {"finished": 0}
+        ttft = np.array([e.t_first - e.req.arrival for e in done
+                         if e.t_first is not None])
+        tpot = np.array([(e.t_finish - e.t_first) / max(e.generated - 1, 1)
+                         for e in done if e.t_finish and e.t_first
+                         and e.generated > 1])
+        itls = [np.diff(e.token_times) for e in done
+                if len(e.token_times) > 1]
+        itls = np.concatenate(itls) if itls else np.array([0.0])
+        t_end = max(e.t_finish for e in done)
+        t0 = min(e.req.arrival for e in done)
+        out_tokens = sum(e.generated for e in done)
+        m = {"finished": len(done),
+             "ttft_mean_s": float(ttft.mean()) if ttft.size else None,
+             "tpot_mean_s": float(tpot.mean()) if tpot.size else None,
+             "itl_mean_s": float(itls.mean()),
+             "throughput_tok_s": out_tokens / max(t_end - t0, 1e-9),
+             "makespan_s": t_end - t0}
+        for name, e in self.engines.items():
+            if e.radix is not None:
+                m[f"{name}_cache_hits"] = e.radix.hits
+                m[f"{name}_cache_misses"] = e.radix.misses
+        return m
+
+
+def _flat_np(tree):
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            if k.startswith("_length"):
+                continue
+            out.extend(_flat_np(v))
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            out.extend(_flat_np(v))
+    else:
+        out.append(np.asarray(tree))
+    return out

@@ -1,0 +1,412 @@
+"""Real JAX serving engine (mini-vLLM) — the fidelity ground truth.
+
+Implements iteration-level continuous batching over a slot-based KV cache,
+with an optional *real* radix prefix cache (stores actual KV tensors; hits
+restore them and only the suffix is prefilled via ``Model.extend``).
+
+Hybrid emulation: compute is REAL (every iteration runs the actual jitted
+model on the local device and is wall-clock timed); time is VIRTUAL (each
+instance has its own clock advanced by the measured latencies), so
+multi-instance configurations behave as if instances ran in parallel even
+though this container has one CPU. TTFT/TPOT/ITL read from the virtual
+clocks — this is the "real GPU system + vLLM" side of the paper's §III
+methodology, adapted to the container (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.models import Model
+from repro.serve.sampler import greedy
+from repro.workload.sharegpt import Request
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    req: Request
+    state: str = "queued"            # queued -> prefill -> decode -> done
+    slot: int = -1
+    generated: int = 0
+    cached_prefix: int = 0
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+
+class RealRadixCache:
+    """Real prefix cache: token-prefix -> stored KV slices (numpy, host)."""
+
+    def __init__(self, block: int = 16, max_entries: int = 64):
+        self.block = block
+        self.store: "OrderedDict[tuple, dict]" = OrderedDict()
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    def match(self, tokens) -> Tuple[int, Optional[dict]]:
+        best_len, best = 0, None
+        n = (len(tokens) // self.block) * self.block
+        for l in range(n, 0, -self.block):
+            key = tuple(tokens[:l])
+            if key in self.store:
+                self.store.move_to_end(key)
+                best_len, best = l, self.store[key]
+                break
+        if best is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return best_len, best
+
+    def insert(self, tokens, kv_slices: dict):
+        l = (len(tokens) // self.block) * self.block
+        if l == 0:
+            return
+        key = tuple(tokens[:l])
+        if key in self.store:
+            return
+        self.store[key] = kv_slices
+        while len(self.store) > self.max_entries:
+            self.store.popitem(last=False)
+
+
+class ServingEngine:
+    """One instance. ``step()`` runs ONE real iteration, returns latency."""
+
+    def __init__(self, cfg: ArchConfig, params=None, *, max_batch: int = 8,
+                 max_len: int = 512, prefix_cache: bool = False,
+                 role: str = "unified", name: str = "engine0", seed: int = 0):
+        self.cfg = cfg
+        self.name = name
+        self.role = role
+        self.model = Model(cfg, remat=False)
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(seed))
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = self.model.init_cache(max_batch, max_len)
+        self.slot_free = list(range(max_batch))
+        self.slot_req: Dict[int, EngineRequest] = {}
+        self.waiting: Deque[EngineRequest] = deque()
+        self.radix = RealRadixCache() if prefix_cache else None
+        self.now = 0.0                   # virtual clock
+        self.iterations = 0
+        self._new_tokens: List[EngineRequest] = []
+        self._finished: List[EngineRequest] = []
+        self._handoffs: List[tuple] = []
+        self._waiting_kv: Deque[tuple] = deque()   # P/D spill queue
+        self.on_prefill_done = None      # P/D handoff hook
+        self.on_request_done = None
+        self._jit_decode = jax.jit(self.model.decode)
+        self._jit_prefill = jax.jit(self.model.prefill,
+                                    static_argnames=())
+        self._jit_extend = jax.jit(self.model.extend)
+        self._tokens_buf = np.zeros((max_batch, 1), np.int32)
+
+    def warmup(self, buckets=(16, 32, 64, 128, 256)):
+        """Compile prefill/extend/decode at every bucket so measured
+        iteration latencies are steady-state (compile time excluded)."""
+        import jax.numpy as jnp
+        for P in buckets:
+            if P >= self.max_len:
+                continue
+            pad = jnp.zeros((1, P), jnp.int32)
+            lengths = jnp.asarray([P], jnp.int32)
+            jax.block_until_ready(
+                self._jit_prefill(self.params, pad, lengths=lengths))
+            if self.radix is not None:
+                sub = self._slot_subcache(0, 16)
+                try:
+                    jax.block_until_ready(self._jit_extend(
+                        self.params, sub, pad,
+                        jnp.asarray([P], jnp.int32)))
+                except NotImplementedError:
+                    pass
+        jax.block_until_ready(self._jit_decode(
+            self.params, self.cache, jnp.asarray(self._tokens_buf)))
+        self.now = 0.0
+
+    # ---- submission ----
+    def submit(self, req: Request):
+        self.waiting.append(EngineRequest(req=req))
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.slot_req) \
+            or bool(self._waiting_kv)
+
+    # ---- one iteration (real compute) ----
+    def step(self) -> float:
+        self._new_tokens.clear()
+        self._finished.clear()
+        t0 = time.perf_counter()
+        if self._waiting_kv and self.slot_free:
+            ereq, kv, length, tok = self._waiting_kv.popleft()
+            self.admit_with_kv(ereq, kv, length, tok)
+            if self.slot_req:
+                self._do_decode_iteration()
+        elif self.waiting and self.slot_free:
+            self._do_prefill(self.waiting.popleft())
+        elif self.slot_req:
+            self._do_decode_iteration()
+        latency = time.perf_counter() - t0
+        self.now += latency
+        self.iterations += 1
+        # stamp token events in virtual time
+        for ereq in self._new_tokens:
+            if ereq.t_first is None:
+                ereq.t_first = self.now
+            ereq.token_times.append(self.now)
+        for ereq in self._finished:
+            ereq.t_finish = self.now
+            if self.on_request_done is not None:
+                self.on_request_done(ereq)
+        for ereq, kv, length, tok in self._handoffs:
+            self.on_prefill_done(self, ereq, kv, length, tok)
+        self._handoffs.clear()
+        return latency
+
+    # ---- prefill one request into a slot ----
+    def _do_prefill(self, ereq: EngineRequest):
+        req = ereq.req
+        toks = list(req.prompt_tokens)[: self.max_len - req.output_len - 1]
+        slot = self.slot_free.pop()
+        ereq.slot = slot
+        cached_kv = None
+        cache_len = 0
+        if self.radix is not None:
+            cache_len, cached_kv = self.radix.match(toks)
+            cache_len = min(cache_len, len(toks) - 1)
+        if cached_kv is not None and cache_len > 0:
+            self._restore_slot(slot, cached_kv, cache_len)
+            suffix = np.asarray(toks[cache_len:], np.int32)
+            P = _bucket(len(suffix))
+            pad = np.zeros((1, P), np.int32)
+            pad[0, :len(suffix)] = suffix
+            sub_cache = self._slot_subcache(slot, cache_len)
+            logits, new_sub = self._jit_extend(
+                self.params, sub_cache, jnp.asarray(pad),
+                jnp.asarray([len(suffix)], jnp.int32))
+            self._write_slot(slot, new_sub, cache_len + len(suffix))
+            ereq.cached_prefix = cache_len
+        else:
+            P = _bucket(len(toks))
+            pad = np.zeros((1, P), np.int32)
+            pad[0, :len(toks)] = np.asarray(toks, np.int32)
+            lengths = jnp.asarray([len(toks)], jnp.int32)
+            logits, cache1 = self._jit_prefill(self.params, jnp.asarray(pad),
+                                               lengths=lengths)
+            self._write_slot_from_prefill(slot, cache1, len(toks))
+            if self.radix is not None:
+                blk = (len(toks) // self.radix.block) * self.radix.block
+                if blk > 0:
+                    self.radix.insert(toks, self._export_slot(slot, blk))
+        first_tok = int(np.asarray(greedy(logits, self.cfg.vocab))[0, 0])
+        ereq.generated = 1
+        ereq.state = "decode"
+        self._new_tokens.append(ereq)
+        if self.role == "prefill" and self.on_prefill_done is not None:
+            # P/D: export KV; the handoff fires after this iteration's
+            # latency lands on the virtual clock (see step())
+            kv = self._export_slot(slot, len(toks))
+            self._release_slot(slot)
+            self._handoffs.append((ereq, kv, len(toks), first_tok))
+        else:
+            self.slot_req[slot] = ereq
+            self._tokens_buf[slot, 0] = first_tok
+
+    # ---- batched decode ----
+    def _do_decode_iteration(self):
+        toks = jnp.asarray(self._tokens_buf)
+        logits, self.cache = self._jit_decode(self.params, self.cache, toks)
+        nxt = np.asarray(greedy(logits, self.cfg.vocab))
+        finished = []
+        for slot, ereq in list(self.slot_req.items()):
+            self._new_tokens.append(ereq)
+            ereq.generated += 1
+            self._tokens_buf[slot, 0] = int(nxt[slot, 0])
+            if ereq.generated >= min(ereq.req.output_len,
+                                     self.max_len - ereq.req.prompt_len - 1):
+                finished.append(slot)
+        for slot in finished:
+            ereq = self.slot_req.pop(slot)
+            ereq.state = "done"
+            self._release_slot(slot)
+            self._finished.append(ereq)
+
+    def admit_with_kv(self, ereq: EngineRequest, kv: dict, length: int,
+                      first_tok: int):
+        """P/D decode-side admission: restore transferred KV into a slot."""
+        if not self.slot_free:
+            # keep the transferred KV; admit when a slot frees
+            self._waiting_kv.append((ereq, kv, length, first_tok))
+            return
+        slot = self.slot_free.pop()
+        self._restore_slot(slot, kv, length)
+        ereq.slot = slot
+        ereq.state = "decode"
+        self.slot_req[slot] = ereq
+        self._tokens_buf[slot, 0] = first_tok
+
+    def decode_batch_size(self) -> int:
+        return len(self.slot_req)
+
+    # ---- jitted slot/cache plumbing ----
+    # eager per-op dispatch costs ~ms on CPU; these helpers are jitted per
+    # bucket size with cache donation so slot copies stay O(slice).
+    def _get_jit(self, kind: str, key):
+        jits = getattr(self, "_slot_jits", None)
+        if jits is None:
+            jits = self._slot_jits = {}
+        return jits.get((kind, key))
+
+    def _put_jit(self, kind: str, key, fn):
+        self._slot_jits[(kind, key)] = fn
+        return fn
+
+    def _release_slot(self, slot: int):
+        if slot not in self.slot_free:
+            self.slot_free.append(slot)
+        # zero the slot length
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
+
+    def _write_slot_from_prefill(self, slot: int, cache1, n: int):
+        """Copy a (B=1) prefill cache into slot ``slot`` of the big cache."""
+        P = None
+        for leaf in jax.tree_util.tree_leaves(cache1):
+            if leaf.ndim >= 3 and leaf.shape[1] == 1:
+                P = leaf.shape[2]
+                break
+        fn = self._get_jit("write_prefill", P)
+        if fn is None:
+            def impl(cache, cache1, slot, n):
+                def write(big, small):
+                    if big.ndim >= 2 and small.shape[1] == 1:
+                        if big.ndim >= 3 and small.ndim >= 3 \
+                                and small.shape[2] <= big.shape[2] \
+                                and big.shape[2] == self.max_len:
+                            pad_len = small.shape[2]
+                            return big.at[:, slot, :pad_len].set(small[:, 0])
+                        return big.at[:, slot].set(small[:, 0])
+                    return big
+                out = dict(cache)
+                for key in cache:
+                    if key == "lengths":
+                        continue
+                    out[key] = jax.tree_util.tree_map(
+                        write, cache[key], cache1[key])
+                out["lengths"] = cache["lengths"].at[slot].set(n)
+                return out
+            fn = self._put_jit("write_prefill", P, jax.jit(
+                impl, donate_argnums=(0,), static_argnums=(2,)))
+        self.cache = fn(self.cache, cache1, slot, n)
+
+    def _slot_subcache(self, slot: int, length: int):
+        """A (B=1) view of one slot (full max_len buffers, real length)."""
+        fn = self._get_jit("subcache", None)
+        if fn is None:
+            def impl(cache, slot, length):
+                def take(big):
+                    return big[:, slot: slot + 1] if big.ndim >= 2 else big
+                sub = {}
+                for key in cache:
+                    if key == "lengths":
+                        sub[key] = jnp.full((1,), length, jnp.int32)
+                    else:
+                        sub[key] = jax.tree_util.tree_map(take, cache[key])
+                return sub
+            fn = self._put_jit("subcache", None,
+                               jax.jit(impl, static_argnums=(1,)))
+        return fn(self.cache, slot, length)
+
+    def _write_slot(self, slot: int, sub_cache, n: int):
+        fn = self._get_jit("write_slot", None)
+        if fn is None:
+            def impl(cache, sub, slot, n):
+                def write(big, small):
+                    return big.at[:, slot: slot + 1].set(small) \
+                        if big.ndim >= 2 else big
+                out = dict(cache)
+                for key in cache:
+                    if key == "lengths":
+                        continue
+                    out[key] = jax.tree_util.tree_map(
+                        write, cache[key], sub[key])
+                out["lengths"] = cache["lengths"].at[slot].set(n)
+                return out
+            fn = self._put_jit("write_slot", None, jax.jit(
+                impl, donate_argnums=(0,), static_argnums=(2,)))
+        self.cache = fn(self.cache, sub_cache, slot, n)
+
+    def _export_slot(self, slot: int, length: int) -> dict:
+        """Copy a slot's KV out to host numpy (prefix cache / P/D).
+        Device-side gather is jitted per bucketed length; only the final
+        np.asarray is a host copy."""
+        blen = _bucket(length)
+        blen = min(blen, self.max_len)
+        fn = self._get_jit("export", blen)
+        if fn is None:
+            def impl(cache, slot):
+                def take(big):
+                    if big.ndim >= 3 and big.shape[2] == self.max_len:
+                        return jax.lax.dynamic_slice_in_dim(
+                            big[:, slot], 0, blen, axis=1)
+                    if big.ndim >= 2:
+                        return big[:, slot]
+                    return big
+                return {key: jax.tree_util.tree_map(take, cache[key])
+                        for key in cache if key != "lengths"}
+            fn = self._put_jit("export", blen,
+                               jax.jit(impl, static_argnums=(1,)))
+        dev = fn(self.cache, slot)
+        out = jax.tree_util.tree_map(np.asarray, dev)
+        out["_length"] = length
+        out["_length_bucket"] = blen
+        return out
+
+    def _restore_slot(self, slot: int, kv: dict, length: int):
+        blen = kv.get("_length_bucket")
+        if blen is None:   # legacy export: derive from the stored arrays
+            for leaf in jax.tree_util.tree_leaves(
+                    {k: v for k, v in kv.items()
+                     if not k.startswith("_")}):
+                if leaf.ndim >= 2 and leaf.shape[1] not in (1,) and \
+                        leaf.shape[1] <= self.max_len and leaf.shape[1] >= 8:
+                    blen = leaf.shape[1]
+                    break
+        fn = self._get_jit("restore", blen)
+        if fn is None:
+            def impl(cache, kv, slot, n):
+                def write(big, small):
+                    if big.ndim >= 3 and big.shape[2] == self.max_len \
+                            and small.ndim >= 2 and small.shape[1] == blen:
+                        return big.at[:, slot, :blen].set(small)
+                    if big.ndim >= 2:
+                        return big.at[:, slot].set(small)
+                    return big
+                out = dict(cache)
+                for key in cache:
+                    if key == "lengths":
+                        continue
+                    out[key] = jax.tree_util.tree_map(
+                        write, cache[key], kv[key])
+                out["lengths"] = cache["lengths"].at[slot].set(n)
+                return out
+            fn = self._put_jit("restore", blen, jax.jit(
+                impl, donate_argnums=(0,), static_argnums=(2,)))
+        kvdev = {k: v for k, v in kv.items() if not k.startswith("_")}
+        self.cache = fn(self.cache, kvdev, slot, length)

@@ -1,0 +1,19 @@
+"""Token samplers over (possibly vocab-padded) logits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits, vocab: int):
+    """logits: (B, 1, Vpad) (or (B,1,K,Vpad) multi-codebook -> first book)."""
+    if logits.ndim == 4:
+        logits = logits[:, :, 0]
+    return jnp.argmax(logits[..., :vocab], axis=-1).astype(jnp.int32)
+
+
+def temperature(logits, vocab: int, key, temp: float = 1.0):
+    if logits.ndim == 4:
+        logits = logits[:, :, 0]
+    scaled = logits[..., :vocab].astype(jnp.float32) / max(temp, 1e-4)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)

@@ -1,0 +1,88 @@
+"""AdamW + schedules + global-norm clipping (optax is not installed).
+
+States mirror the param pytree (same sharding specs apply leaf-for-leaf),
+so the optimizer is transparently SPMD-sharded by pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros_like(p)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(z, params),
+                          nu=jax.tree_util.tree_map(z, params))
+
+    def _lr(self, step):
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params):
+        """Returns (new_params, new_state, metrics)."""
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32) * scale
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            mhat = mu / bc1
+            nhat = nu / bc2
+            delta = mhat / (jnp.sqrt(nhat) + self.eps)
+            if p.ndim >= 2:   # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                            is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step, new_mu, new_nu), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched

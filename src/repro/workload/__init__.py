@@ -1,0 +1,6 @@
+from repro.workload.arrival import gamma, poisson, uniform
+from repro.workload.sharegpt import Request, ShareGPTConfig, generate, stats
+from repro.workload.datasets import DataConfig, token_batches
+
+__all__ = ["gamma", "poisson", "uniform", "Request", "ShareGPTConfig",
+           "generate", "stats", "DataConfig", "token_batches"]

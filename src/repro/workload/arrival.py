@@ -1,0 +1,24 @@
+"""Request arrival processes (paper §III-A uses Poisson @ 10 req/s)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def poisson(rate: float, n: int, seed: int = 0, start: float = 0.0):
+    """n arrival timestamps (seconds) of a Poisson process at ``rate`` req/s."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return start + np.cumsum(gaps)
+
+
+def gamma(rate: float, cv: float, n: int, seed: int = 0, start: float = 0.0):
+    """Gamma-process arrivals: cv>1 burstier than Poisson, cv<1 smoother."""
+    rng = np.random.default_rng(seed)
+    shape = 1.0 / (cv ** 2)
+    scale = cv ** 2 / rate
+    gaps = rng.gamma(shape, scale, size=n)
+    return start + np.cumsum(gaps)
+
+
+def uniform(rate: float, n: int, start: float = 0.0):
+    return start + np.arange(1, n + 1) / rate

@@ -1,0 +1,124 @@
+"""Integration tests: real engine <-> simulator fidelity loop, checkpoint
+restart, fused-QKV variant, and the dry-run single cell."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+
+
+def test_engine_vs_sim_fidelity_smoke():
+    """The paper's validation loop on a micro workload. Bounds are loose
+    because the test box's CPU may be contended while the ground-truth
+    engine runs (the benchmark reports the tight numbers measured on a
+    quiet machine: <10% TPOT, <4% throughput)."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.common import DENSE_TINY, engine_matched_instance, pct_err
+    from repro.core import ClusterCfg, RouterCfg, TraceRegistry, simulate
+    from repro.profiler.engine_profiler import engine_trace
+    from repro.serve import ServeDriver, ServingEngine
+    from repro.workload import ShareGPTConfig, generate
+
+    cfg = get_config(DENSE_TINY)
+    reqs = generate(ShareGPTConfig(n_requests=10, rate=10.0, vocab=cfg.vocab,
+                                   mean_prompt=60, mean_output=12,
+                                   max_prompt=120, max_output=16, seed=9))
+    registry = TraceRegistry()
+    registry.register(DENSE_TINY, engine_trace(
+        DENSE_TINY, max_batch=4, max_len=256,
+        prefill_buckets=(16, 32, 64, 128), decode_ctxs=(32, 64, 128),
+        reps=3))
+    eng = ServingEngine(cfg, max_batch=4, max_len=256)
+    real = ServeDriver([eng]).run(reqs)
+    sim = simulate(ClusterCfg(
+        (engine_matched_instance("e0", DENSE_TINY),),
+        router=RouterCfg("round_robin")), reqs, traces=registry)
+    assert sim["finished"] == real["finished"] == 10
+    # sanity band only: this box's CPU may be arbitrarily contended during
+    # either the trace profile or the ground-truth run; the tight numbers
+    # (<10% TPOT, <4% tput) are measured by benchmarks/fig2_fidelity.py on
+    # a quiet machine and recorded in bench_output.txt.
+    ratio_tput = sim["throughput_tok_s"] / real["throughput_tok_s"]
+    ratio_tpot = sim["tpot_mean_s"] / real["tpot_mean_s"]
+    assert 0.3 < ratio_tput < 3.0, ratio_tput
+    # TPOT on a 10-request/16-token micro workload is dominated by a handful
+    # of prefill-interrupt gaps (11-token denominators), so only structural
+    # breakage is checked here; benchmarks/fig2_fidelity.py measures 1-8%.
+    assert 0.05 < ratio_tpot < 20.0, ratio_tpot
+
+
+def test_checkpoint_save_restore_resume(tmp_path):
+    from repro.launch.train import get_train_config
+    from repro.train import AdamW, TrainState, init_state, make_train_step
+    from repro.train import checkpoint as ckpt
+    from repro.workload.datasets import DataConfig, token_batches
+
+    cfg = get_train_config("demo-10m")
+    model = Model(cfg, remat=False)
+    opt = AdamW(lr=1e-3)
+    step_fn = jax.jit(make_train_step(model, opt))
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    data = token_batches(DataConfig(vocab=cfg.vocab, batch=2, seq_len=64))
+    batches = [next(data) for _ in range(4)]
+    # run 2 steps, checkpoint, run 2 more
+    for b in batches[:2]:
+        state, _ = step_fn(state, b)
+    ckpt.save(str(tmp_path), 2, state)
+    ref = state
+    for b in batches[2:]:
+        ref, _ = step_fn(ref, b)
+    # restart from the checkpoint and replay
+    like = init_state(model, opt, jax.random.PRNGKey(0))
+    restored = ckpt.restore(str(tmp_path), 2, like)
+    for b in batches[2:]:
+        restored, _ = step_fn(restored, b)
+    for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(restored.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-5,
+                                   atol=1e-6)
+    assert ckpt.latest_step(str(tmp_path)) == 2
+
+
+def test_fused_qkv_variant_trains():
+    cfg = get_config("qwen3-8b-tiny")
+    model = Model(cfg, remat=False, fuse_qkv=True)
+    params = model.init(jax.random.PRNGKey(0))
+    assert "wqkv" in jax.tree_util.tree_leaves_with_path(params)[0][0][0].key \
+        or any("wqkv" in str(p) for p, _ in
+               jax.tree_util.tree_leaves_with_path(params))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    batch = {"inputs": toks, "labels": toks}
+    (loss, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+        params, batch)
+    assert np.isfinite(float(loss))
+    gn = sum(float(np.abs(np.asarray(g, np.float32)).sum())
+             for g in jax.tree_util.tree_leaves(grads))
+    assert gn > 0
+
+
+def test_shard_experts_variant_runs():
+    cfg = get_config("granite-moe-1b-a400m-tiny")
+    model = Model(cfg, remat=False, shard_experts=False)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    logits, _ = jax.jit(model.forward)(params, toks)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+def test_dryrun_single_cell_smoke():
+    """Tiny-mesh analogue of the dry-run path (no 512-device requirement)."""
+    from repro.roofline.hlo_analyzer import HloAnalyzer
+    cfg = get_config("granite-moe-1b-a400m-tiny")
+    model = Model(cfg, remat=False)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    toks = jax.ShapeDtypeStruct((4, 64), jax.numpy.int32)
+    lowered = jax.jit(model.prefill).lower(params_shape, toks)
+    compiled = lowered.compile()
+    cost = HloAnalyzer(compiled.as_text()).analyze()
+    assert cost.flops > 0
+    assert cost.hbm_bytes > 0

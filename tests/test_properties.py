@@ -1,0 +1,120 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.config import (InstanceCfg, ModelSpec, PrefixCacheCfg,
+                               SchedulerCfg, TPU_V5E)
+from repro.core.engine import EventQueue
+from repro.core.memory import MemoryModel
+from repro.core.prefix_cache import RadixPrefixCache
+from repro.core.trace import Trace
+from repro.roofline.hlo_analyzer import _type_bytes_and_dims
+from repro.train.optimizer import AdamW, global_norm
+
+MODEL = ModelSpec(name="m", n_layers=4, d_model=256, n_heads=4,
+                  n_kv_heads=2, d_head=64, d_ff=512, vocab=1000)
+
+
+def _mem():
+    return MemoryModel(InstanceCfg(name="i", hw=TPU_V5E, model=MODEL))
+
+
+# --- event queue: executes in nondecreasing time order ---------------------
+@given(st.lists(st.floats(min_value=0, max_value=1e6,
+                          allow_nan=False), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_event_queue_order(delays):
+    q = EventQueue()
+    fired = []
+    for d in delays:
+        q.schedule(d, lambda d=d: fired.append(q.now))
+    q.run()
+    assert fired == sorted(fired)
+    assert len(fired) == len(delays)
+
+
+# --- memory model: allocate/free conservation -------------------------------
+@given(st.lists(st.integers(min_value=1, max_value=5000), min_size=1,
+                max_size=80))
+@settings(max_examples=50, deadline=None)
+def test_memory_blocks_conserved(token_counts):
+    mem = _mem()
+    total = mem.total_blocks
+    allocated = []
+    for n in token_counts:
+        if mem.allocate(n):
+            allocated.append(n)
+        assert 0 <= mem.free_blocks <= total
+    for n in allocated:
+        mem.free(n)
+    assert mem.free_blocks == total
+
+
+# --- radix prefix cache: match is always a true prefix, block-aligned -------
+@given(st.lists(st.lists(st.integers(0, 50), min_size=0, max_size=120),
+                min_size=1, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_radix_match_is_prefix(prompts):
+    mem = _mem()
+    cache = RadixPrefixCache(PrefixCacheCfg(enabled=True, block_tokens=8),
+                             mem)
+    seen = []
+    for t, p in enumerate(prompts):
+        m = cache.match(p, float(t))
+        assert m.tokens % 8 == 0
+        assert m.tokens <= len(p)
+        if m.tokens:
+            # the matched region was previously inserted as a prefix
+            assert any(list(q[:m.tokens]) == list(p[:m.tokens])
+                       for q in seen)
+        cache.insert(p, float(t))
+        seen.append(list(p))
+        # borrowed device blocks never exceed pool capacity
+        assert cache.n_device_blocks <= cache.capacity_blocks + 1
+        assert mem.free_blocks >= 0
+
+
+# --- trace interpolation: within grid bounds, positive, monotone-ish --------
+@given(st.integers(1, 512), st.integers(1, 4096))
+@settings(max_examples=50, deadline=None)
+def test_trace_interpolation_bounds(tokens, ctx):
+    tr = Trace(model="m", hardware="h", tp=1)
+    for t in (1, 16, 64, 256):
+        for c in (16, 256, 2048):
+            tr.add("iter", "decode", t, c, 1e-4 * t + 1e-7 * c)
+    v = tr.interpolate("iter", "decode", tokens, ctx)
+    assert v is not None and v > 0
+    lo = min(p.latency_s for p in tr.points)
+    hi = max(p.latency_s for p in tr.points)
+    assert lo * 0.5 <= v <= hi * 2.0   # IDW stays within the hull
+
+
+# --- optimizer: step decreases a convex quadratic ---------------------------
+def test_adamw_minimizes_quadratic():
+    import jax
+    import jax.numpy as jnp
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+    for _ in range(120):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+# --- HLO shape parsing ------------------------------------------------------
+@given(st.sampled_from(["f32", "bf16", "s32", "pred"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_hlo_shape_bytes(dtype, dims):
+    sizes = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1}
+    s = f"{dtype}[{','.join(map(str, dims))}]"
+    total, parsed = _type_bytes_and_dims(s)
+    want = sizes[dtype]
+    for d in dims:
+        want *= d
+    assert total == want

@@ -1,0 +1,137 @@
+"""End-to-end behaviour tests for the simulator (the paper's system)."""
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, ClusterCfg, InstanceCfg, MoECfg,
+                        ParallelismCfg, PrefixCacheCfg, RouterCfg,
+                        SchedulerCfg, simulate)
+from repro.core.config import RTX3090, TPU_V5E, ModelSpec
+from repro.workload import ShareGPTConfig, generate
+
+DENSE = ModelSpec(name="dense-8b", n_layers=32, d_model=4096, n_heads=32,
+                  n_kv_heads=8, d_head=128, d_ff=14336, vocab=128256)
+MOE = ModelSpec(name="moe", n_layers=32, d_model=4096, n_heads=32,
+                n_kv_heads=8, d_head=128, d_ff=960, vocab=32064,
+                moe_experts=16, moe_top_k=2, moe_d_expert=960)
+
+
+def _reqs(n=40, rate=10.0, **kw):
+    return generate(ShareGPTConfig(n_requests=n, rate=rate, vocab=32000,
+                                   **kw))
+
+
+def _inst(name="i0", model=DENSE, **kw):
+    base = dict(hw=TPU_V5E, model=model, n_devices=8,
+                parallelism=ParallelismCfg(tp=8),
+                scheduler=SchedulerCfg(max_batch_size=32))
+    base.update(kw)
+    return InstanceCfg(name=name, **base)
+
+
+def test_single_instance_completes_all():
+    m = simulate(ClusterCfg((_inst(),)), _reqs())
+    assert m["finished"] == 40
+    assert m["throughput_tok_s"] > 0
+    assert m["ttft_mean_s"] > 0
+
+
+def test_more_replicas_cut_makespan_under_saturation():
+    r = _reqs(n=60, rate=100.0)
+    m1 = simulate(ClusterCfg((_inst("a"),)), r)
+    m2 = simulate(ClusterCfg((_inst("a"), _inst("b")),
+                             router=RouterCfg("least_loaded")), r)
+    assert m2["makespan_s"] < m1["makespan_s"]
+
+
+def test_pd_disagg_completes_and_transfers():
+    r = _reqs(n=60, rate=30.0)
+    m = simulate(ClusterCfg(
+        (_inst("p0", role="prefill"), _inst("d0", role="decode")),
+        pd_map={"p0": ("d0",)}), r)
+    assert m["finished"] == 60
+    assert any(v > 0 for v in m["network_bytes"].values())
+
+
+def test_prefix_cache_improves_ttft_on_shared_prefixes():
+    r = _reqs(n=60, rate=20.0, share_fraction=0.85, n_conversations=3,
+              seed=11)
+    base = simulate(ClusterCfg((_inst(),)), r)
+    pc = simulate(ClusterCfg(
+        (_inst(prefix_cache=PrefixCacheCfg(enabled=True)),)), r)
+    stats = pc["instances"]["i0"]["prefix_cache"]
+    assert stats["hits"] > 0
+    assert pc["ttft_mean_s"] < base["ttft_mean_s"]
+
+
+def test_moe_offload_tradeoffs():
+    r = _reqs(n=30)
+    def run(**moe_kw):
+        return simulate(ClusterCfg((_inst(
+            model=MOE, parallelism=ParallelismCfg(tp=8, ep=8),
+            moe=MoECfg(**moe_kw)),)), r)
+    base = run()
+    off_sync = run(offload="host", offload_fraction=0.5, prefetch=False)
+    off_pre = run(offload="host", offload_fraction=0.5, prefetch=True)
+    assert base["finished"] == off_sync["finished"] == 30
+    assert off_sync["tpot_mean_s"] > base["tpot_mean_s"]
+    assert off_pre["tpot_mean_s"] <= off_sync["tpot_mean_s"]
+
+
+def test_node_failure_recovery():
+    r = _reqs(n=50, rate=20.0)
+    cluster = Cluster(ClusterCfg((_inst("a"), _inst("b")),
+                                 router=RouterCfg("least_loaded")))
+    cluster.submit_workload(r)
+    cluster.inject_failure(1.0, "a", recover_after=3.0)
+    m = cluster.run()
+    assert m["finished"] == 50
+
+
+def test_elastic_scale_out():
+    r = _reqs(n=60, rate=100.0)
+    cluster = Cluster(ClusterCfg((_inst("a"),),
+                                 router=RouterCfg("least_loaded")))
+    cluster.submit_workload(r)
+    cluster.add_instance(0.5, _inst("b"))
+    m = cluster.run()
+    assert m["finished"] == 60
+    assert m["instances"]["b"]["iterations"] > 0
+
+
+def test_memory_pressure_does_not_deadlock():
+    r = generate(ShareGPTConfig(n_requests=60, rate=200.0, vocab=32000,
+                                mean_prompt=3000, sigma_prompt=0.2,
+                                max_prompt=4096, mean_output=600,
+                                max_output=800, seed=2))
+    m = simulate(ClusterCfg((_inst(
+        scheduler=SchedulerCfg(max_batch_size=256,
+                               max_batch_tokens=16384)),)), r)
+    assert m["finished"] == 60
+
+
+def test_heterogeneous_instances():
+    """Different hardware + parallelism per instance (paper Fig 1a)."""
+    r = _reqs(n=30, rate=5.0)
+    m = simulate(ClusterCfg(
+        (_inst("tpu", model=DENSE),
+         InstanceCfg(name="gpu", hw=RTX3090, model=DENSE, n_devices=1)),
+        router=RouterCfg("least_loaded")), r)
+    assert m["finished"] == 30
+    assert m["instances"]["tpu"]["iterations"] > 0
+    assert m["instances"]["gpu"]["iterations"] > 0
+
+
+def test_prefix_aware_routing_beats_round_robin_on_hit_rate():
+    r = _reqs(n=80, rate=20.0, share_fraction=0.9, n_conversations=4,
+              seed=13)
+    def run(policy):
+        pc = PrefixCacheCfg(enabled=True)
+        return simulate(ClusterCfg(
+            (_inst("a", prefix_cache=pc), _inst("b", prefix_cache=pc)),
+            router=RouterCfg(policy)), r)
+    rr = run("round_robin")
+    pa = run("prefix_aware")
+    def hits(m):
+        return sum(i.get("prefix_cache", {}).get("hits", 0)
+                   for i in m["instances"].values())
+    assert hits(pa) >= hits(rr)
