@@ -6,13 +6,10 @@ from typing import Optional
 
 from repro.core import (ClusterCfg, InstanceCfg, ModelSpec, NetworkCfg,
                         PrefixCacheCfg, RouterCfg, SchedulerCfg, TraceRegistry)
-from repro.core.config import RTX3090, HardwareSpec
+from repro.core.config import (ENGINE_HW, RTX3090, HardwareSpec,
+                               engine_scheduler_cfg)
 from repro.profiler import model_spec_from_arch
 from repro.configs import get_config
-
-ENGINE_HW = HardwareSpec(    # matches the CPU engine environment
-    name="cpu-engine", peak_flops=5e10, hbm_bw=20e9, hbm_capacity=8e9,
-    link_bw=8e9, host_bw=8e9)
 
 DENSE_TINY = "llama3.1-8b-tiny"
 MOE_TINY = "phimini-moe-tiny"
@@ -25,10 +22,7 @@ def engine_matched_instance(name: str, arch: str, *, role: str = "unified",
     spec = model_spec_from_arch(get_config(arch))
     return InstanceCfg(
         name=name, hw=ENGINE_HW, model=spec, n_devices=1, role=role,
-        scheduler=SchedulerCfg(
-            max_batch_size=max_batch, max_batch_tokens=1 << 16,
-            chunked_prefill=False, prefill_exclusive=True,
-            bucket_prefill=True, decode_pad_to=max_batch),
+        scheduler=engine_scheduler_cfg(max_batch),
         prefix_cache=PrefixCacheCfg(enabled=prefix_cache, block_tokens=16,
                                     capacity_fraction=0.5),
         trace_name=trace_name or arch)

@@ -30,11 +30,11 @@ def main():
     print("== simulator replay (trace-driven) ==")
     registry = TraceRegistry()
     registry.register(ARCH, engine_trace(ARCH, max_batch=4, max_len=512))
-    import sys
-    sys.path.insert(0, "benchmarks")
-    from benchmarks.common import engine_matched_instance
+    from repro.serve.driver import engine_instance_cfg
+    # identical policy stack (runtime scheduler/router); only the
+    # ExecutionBackend differs — SimBackend prices what JaxBackend ran
     ccfg = ClusterCfg(
-        (engine_matched_instance("e0", ARCH, prefix_cache=True),),
+        (engine_instance_cfg(eng, trace_name=ARCH),),
         router=RouterCfg("round_robin"))
     sim = simulate(ccfg, reqs, traces=registry)
     print(json.dumps({k: v for k, v in sim.items()

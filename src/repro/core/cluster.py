@@ -1,134 +1,27 @@
-"""Cluster simulation driver: router + instances + network + P/D wiring +
-failure injection + elastic scaling. ``simulate(requests)`` is the main
-entry point used by every benchmark and example.
+"""Cluster simulation driver: the unified ``ServingRuntime`` specialized to
+the simulation backend.  ``simulate(requests)`` is the main entry point used
+by every benchmark and example; the real-engine twin is
+``repro.serve.ServeDriver`` — same scheduler, cache, router and P/D code
+path, different ``ExecutionBackend``.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
-from repro.core.config import ClusterCfg, InstanceCfg
-from repro.core.engine import EventQueue
-from repro.core.instance import Instance
-from repro.core.metrics import aggregate
-from repro.core.network import NetworkModel
-from repro.core.prefix_cache import RadixPrefixCache
-from repro.core.request import QUEUED, SimRequest
-from repro.core.router import GlobalRouter
+from repro.core.config import ClusterCfg
 from repro.core.trace import TraceRegistry
+from repro.runtime.backends.sim import SimBackend
+from repro.runtime.cluster import ServingRuntime
 from repro.workload.sharegpt import Request
 
 
-class Cluster:
+class Cluster(ServingRuntime):
     def __init__(self, cfg: ClusterCfg,
                  traces: Optional[TraceRegistry] = None):
-        self.cfg = cfg
-        self.queue = EventQueue()
-        self.network = NetworkModel(cfg.network)
-        self.traces = traces or TraceRegistry()
-        self.instances: Dict[str, Instance] = {}
-        shared_cache = None
-        for icfg in cfg.instances:
-            trace = (self.traces.get(icfg.trace_name)
-                     if icfg.trace_name else None)
-            inst = Instance(icfg, self.queue, trace=trace)
-            # global prefix cache scope: all instances share one radix tree
-            if icfg.prefix_cache.enabled and \
-                    icfg.prefix_cache.scope == "global":
-                if shared_cache is None:
-                    shared_cache = RadixPrefixCache(
-                        icfg.prefix_cache, inst.mem, name="global.cache")
-                inst.cache = shared_cache
-            inst.on_request_done = self._on_done
-            self.instances[icfg.name] = inst
-        self.router = GlobalRouter(
-            cfg.router, list(self.instances.values()))
-        self._wire_pd()
-        self.finished: List[SimRequest] = []
-        self._all_requests: List[SimRequest] = []
-
-    # ---- P/D disaggregation wiring ----
-    def _wire_pd(self):
-        pd = self.cfg.pd_map or {}
-        for pname, dnames in pd.items():
-            p_inst = self.instances[pname]
-            d_insts = [self.instances[d] for d in dnames]
-            rr = {"i": 0}
-
-            def handoff(req: SimRequest, src: Instance,
-                        d_insts=d_insts, rr=rr):
-                # pick decode instance (round-robin over the pool)
-                tgt = min(d_insts, key=lambda i: i.load()) if d_insts else None
-                if tgt is None:
-                    return
-                req.decode_instance = tgt.name
-                kv_bytes = req.prompt_len * src.cfg.model.kv_bytes_per_token
-                if self.cfg.network.kv_transfer_policy == "layerwise_overlap":
-                    # transfer overlapped with the last prefill layers: only
-                    # the final layer's KV lands on the critical path
-                    kv_bytes = kv_bytes / max(src.cfg.model.n_layers, 1)
-                done_t = self.network.kv_transfer_done(
-                    self.queue.now, src.name, tgt.name, kv_bytes)
-                self.queue.schedule_at(
-                    done_t, lambda: tgt.admit_decode(req),
-                    tag=f"kv:{src.name}->{tgt.name}")
-
-            p_inst.on_prefill_done = handoff
-
-    # ---- lifecycle ----
-    def _on_done(self, req: SimRequest, inst: Instance):
-        self.finished.append(req)
-
-    def submit_workload(self, requests: Sequence[Request]):
-        for r in requests:
-            sim = SimRequest(req_id=r.req_id, arrival=r.arrival,
-                             prompt_tokens=list(r.prompt_tokens),
-                             output_len=r.output_len, model=r.model)
-            self._all_requests.append(sim)
-            self.queue.schedule_at(
-                r.arrival, lambda s=sim: self.router.dispatch(s,
-                                                              self.queue.now),
-                tag="arrival")
-
-    # ---- failures / elastic scaling ----
-    def inject_failure(self, t: float, instance: str,
-                       recover_after: Optional[float] = None):
-        def fail():
-            inst = self.instances[instance]
-            orphans = inst.fail()
-            for req in orphans:
-                req.state = QUEUED
-                req.cached_prefix = 0
-                self.router.dispatch(req, self.queue.now)
-        self.queue.schedule_at(t, fail, tag=f"fail:{instance}")
-        if recover_after is not None:
-            self.queue.schedule_at(
-                t + recover_after,
-                lambda: self.instances[instance].revive(),
-                tag=f"revive:{instance}")
-
-    def add_instance(self, t: float, icfg: InstanceCfg):
-        """Elastic scale-out at simulated time t."""
-        def add():
-            trace = (self.traces.get(icfg.trace_name)
-                     if icfg.trace_name else None)
-            inst = Instance(icfg, self.queue, trace=trace)
-            inst.on_request_done = self._on_done
-            self.instances[icfg.name] = inst
-            self.router.instances.append(inst)
-        self.queue.schedule_at(t, add, tag=f"scale:{icfg.name}")
-
-    # ---- run ----
-    def run(self, until: Optional[float] = None) -> Dict:
-        t0 = time.time()
-        self.queue.run(until=until)
-        wall = time.time() - t0
-        m = aggregate(self._all_requests)
-        m["sim_wall_s"] = wall
-        m["sim_events"] = self.queue.n_processed
-        m["instances"] = {n: i.stats() for n, i in self.instances.items()}
-        m["network_bytes"] = self.network.stats()
-        return m
+        super().__init__(
+            cfg,
+            backend_factory=lambda icfg, trace: SimBackend(icfg, trace=trace),
+            traces=traces)
 
 
 def simulate(cfg: ClusterCfg, requests: Sequence[Request],

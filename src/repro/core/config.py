@@ -183,3 +183,20 @@ PIM_DEVICE = HardwareSpec(
 CPU_HOST = HardwareSpec(
     name="cpu-host", peak_flops=2e12, hbm_bw=80e9, hbm_capacity=256e9,
     link_bw=16e9)
+
+ENGINE_HW = HardwareSpec(
+    # matches the container's CPU engine environment: used for engine-matched
+    # simulated instances and for the real JaxBackend's block accounting
+    name="cpu-engine", peak_flops=5e10, hbm_bw=20e9, hbm_capacity=8e9,
+    link_bw=8e9, host_bw=8e9)
+
+
+def engine_scheduler_cfg(max_batch: int) -> SchedulerCfg:
+    """ServingEngine-matched scheduling semantics (the single definition
+    shared by the real driver and the engine-matched sim benchmarks): one
+    whole-prompt prefill at a time, decode pads to the slot count, bucketed
+    prefill lengths."""
+    return SchedulerCfg(
+        max_batch_size=max_batch, max_batch_tokens=1 << 16,
+        chunked_prefill=False, prefill_exclusive=True,
+        bucket_prefill=True, decode_pad_to=max_batch)

@@ -26,19 +26,24 @@ class EventQueue:
         self._counter = itertools.count()
         self.now = 0.0
         self.n_processed = 0
+        self._n_live = 0          # non-cancelled events (O(1) ``empty``)
 
     def schedule(self, delay: float, fn: Callable, tag: str = "") -> Event:
         ev = Event(self.now + max(delay, 0.0), next(self._counter), fn, tag)
         heapq.heappush(self._heap, ev)
+        self._n_live += 1
         return ev
 
     def schedule_at(self, t: float, fn: Callable, tag: str = "") -> Event:
         ev = Event(max(t, self.now), next(self._counter), fn, tag)
         heapq.heappush(self._heap, ev)
+        self._n_live += 1
         return ev
 
     def cancel(self, ev: Event):
-        ev.cancelled = True
+        if not ev.cancelled:
+            ev.cancelled = True
+            self._n_live -= 1
 
     def run(self, until: Optional[float] = None, max_events: int = 50_000_000):
         while self._heap and self.n_processed < max_events:
@@ -49,10 +54,11 @@ class EventQueue:
                 heapq.heappush(self._heap, ev)
                 self.now = until
                 return
+            self._n_live -= 1
             self.now = ev.time
             self.n_processed += 1
             ev.fn()
 
     @property
     def empty(self) -> bool:
-        return not any(not e.cancelled for e in self._heap)
+        return self._n_live == 0

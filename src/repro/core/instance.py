@@ -1,183 +1,27 @@
-"""A serving instance: scheduler + memory + prefix cache + perf model.
-
-Runs the iteration loop as simulation events: pick a batch, price it with
-the perf model, schedule the completion event, apply results (prefill
-progress, decode tokens, finishes), repeat. Roles: unified | prefill |
-decode (P/D disaggregation wires prefill instances to decode instances via
-the cluster's KV-transfer path).
-"""
+"""Compat constructor: a simulated serving instance is now a
+``RuntimeInstance`` driven by a ``SimBackend`` (see ``repro.runtime``)."""
 from __future__ import annotations
 
-from typing import Callable, List, Optional
+from typing import Optional
 
 from repro.core.config import InstanceCfg
 from repro.core.engine import EventQueue
-from repro.core.expert import ExpertExecutionModel, ExpertRouter
-from repro.core.memory import MemoryModel
-from repro.core.perfmodel import PerfModel
-from repro.core.prefix_cache import RadixPrefixCache
-from repro.core.request import (DECODING, FINISHED, PREFILLING, QUEUED,
-                                TRANSFERRING, SimRequest)
-from repro.core.scheduler import BatchScheduler, ScheduledWork
 from repro.core.trace import Trace
+from repro.runtime.backends.sim import SimBackend
+from repro.runtime.instance import RuntimeInstance
+from repro.runtime.prefix_cache import RadixPrefixCache
 
 
-class Instance:
-    def __init__(self, cfg: InstanceCfg, queue: EventQueue,
-                 trace: Optional[Trace] = None,
-                 shared_cache: Optional[RadixPrefixCache] = None):
-        self.cfg = cfg
-        self.name = cfg.name
-        self.queue = queue
-        self.mem = MemoryModel(cfg)
-        self.scheduler = BatchScheduler(cfg.scheduler, self.mem)
-        self.perf = PerfModel(cfg, trace=trace)
-        self.cache: Optional[RadixPrefixCache] = None
-        if cfg.prefix_cache.enabled:
-            self.cache = shared_cache or RadixPrefixCache(
-                cfg.prefix_cache, self.mem, name=f"{cfg.name}.cache")
-        self.alive = True
-        self.busy = False
-        self.busy_time = 0.0
-        self.iterations = 0
-        self.total_tokens = 0
-        # callbacks wired by the cluster
-        self.on_prefill_done: Optional[Callable] = None   # P/D handoff
-        self.on_request_done: Optional[Callable] = None
-        self._pending_cache_fetch_s = 0.0
+def Instance(cfg: InstanceCfg, queue: EventQueue,
+             trace: Optional[Trace] = None,
+             shared_cache: Optional[RadixPrefixCache] = None) \
+        -> RuntimeInstance:
+    backend = SimBackend(cfg, trace=trace)
+    cache = shared_cache
+    if cache is None and cfg.prefix_cache.enabled:
+        cache = RadixPrefixCache(cfg.prefix_cache, backend.memory,
+                                 name=f"{cfg.name}.cache")
+    return RuntimeInstance(cfg, queue, backend, cache=cache)
 
-    # ---- request entry ----
-    def submit(self, req: SimRequest):
-        if not self.alive:
-            raise RuntimeError(f"submit to dead instance {self.name}")
-        req.instance = self.name
-        if self.cache is not None and req.state == QUEUED \
-                and req.prefill_done_tokens == 0:
-            m = self.cache.match(req.prompt_tokens, self.queue.now)
-            # never cache-skip the whole prompt: the last token must be
-            # recomputed to produce the first output logits
-            usable = min(m.tokens, req.prompt_len - 1)
-            req.cached_prefix = max(usable, 0)
-            if m.lower_tier_bytes > 0:
-                # promote host-tier blocks: pay the fetch on this request
-                self._pending_cache_fetch_s += self.mem.transfer_time(
-                    m.lower_tier_bytes, "host", "device")
-                self.cache.promote(m.nodes, self.queue.now)
-            if req.cached_prefix > 0:
-                # restoring the hit KV into the running cache is a real slot
-                # copy (measured by the engine profiler as kv_export)
-                self._pending_cache_fetch_s += self.perf.kv_copy_cost(
-                    req.cached_prefix)
-            self.cache.pin(m.nodes)
-            req._pinned_nodes = m.nodes   # type: ignore[attr-defined]
-        self.scheduler.enqueue(req)
-        self._kick()
 
-    # ---- iteration loop ----
-    def _kick(self):
-        if self.alive and not self.busy:
-            self._start_iteration()
-
-    def _start_iteration(self):
-        work = self.scheduler.next_batch()
-        if not work:
-            self.busy = False
-            return
-        self.busy = True
-        items = self.scheduler.to_batch_items(work)
-        cost = self.perf.iteration_latency(items)
-        latency = cost.total_s + self._pending_cache_fetch_s
-        self._pending_cache_fetch_s = 0.0
-        self.iterations += 1
-        self.total_tokens += sum(w.tokens for w in work)
-        self.busy_time += latency
-        self.queue.schedule(latency, lambda: self._finish_iteration(work),
-                            tag=f"{self.name}.iter")
-
-    def _finish_iteration(self, work: List[ScheduledWork]):
-        if not self.alive:
-            return
-        now = self.queue.now
-        for w in work:
-            req = w.request
-            if w.phase == "prefill":
-                req.prefill_done_tokens += w.tokens
-                if req.remaining_prefill == 0:
-                    self._prefill_complete(req)
-            else:
-                req.generated += 1
-                req.token_times.append(now)
-                if req.t_first_token is None:
-                    req.t_first_token = now
-                if req.generated >= req.output_len:
-                    self._finish_request(req)
-        self.busy = False
-        self._start_iteration()
-
-    def _prefill_complete(self, req: SimRequest):
-        now = self.queue.now
-        # first token is produced by the prefill's last iteration
-        if req.t_first_token is None:
-            req.t_first_token = now
-            req.token_times.append(now)
-            req.generated = 1
-        if self.cache is not None:
-            self.cache.insert(req.prompt_tokens, now)
-        if self.cfg.role == "prefill" and self.on_prefill_done is not None:
-            req.state = TRANSFERRING
-            self.scheduler.complete(req)
-            self._unpin(req)
-            self.on_prefill_done(req, self)
-        else:
-            req.state = DECODING
-            if req.generated >= req.output_len:
-                self._finish_request(req)
-
-    def _finish_request(self, req: SimRequest):
-        req.state = FINISHED
-        req.t_finish = self.queue.now
-        self.scheduler.complete(req)
-        self._unpin(req)
-        if self.on_request_done is not None:
-            self.on_request_done(req, self)
-
-    def _unpin(self, req: SimRequest):
-        nodes = getattr(req, "_pinned_nodes", None)
-        if nodes and self.cache is not None:
-            self.cache.unpin(nodes)
-            req._pinned_nodes = []   # type: ignore[attr-defined]
-
-    # ---- decode-side admission for P/D ----
-    def admit_decode(self, req: SimRequest):
-        """Request arrives with KV already transferred (P/D handoff)."""
-        req.instance = self.name
-        req.state = DECODING
-        req.prefill_done_tokens = req.prompt_len - req.cached_prefix
-        self.mem.allocate(req.context_len + req.output_len // 4)
-        self.scheduler.running.append(req)
-        self._kick()
-
-    # ---- failures / elasticity ----
-    def fail(self) -> List[SimRequest]:
-        """Node failure: drop in-flight state, return requests to re-route."""
-        self.alive = False
-        self.busy = False
-        return self.scheduler.requeue_all()
-
-    def revive(self):
-        self.alive = True
-        self._kick()
-
-    def load(self) -> float:
-        """Router load signal: queue depth + memory pressure."""
-        return (len(self.scheduler.waiting) + len(self.scheduler.running)
-                + 2.0 * self.mem.utilization())
-
-    def stats(self) -> dict:
-        s = {"iterations": self.iterations, "tokens": self.total_tokens,
-             "busy_s": self.busy_time,
-             "preemptions": self.scheduler.n_preemptions,
-             "mem_peak_blocks": self.mem.peak_used}
-        if self.cache is not None:
-            s["prefix_cache"] = self.cache.stats()
-        return s
+__all__ = ["Instance", "RuntimeInstance"]

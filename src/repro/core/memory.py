@@ -69,6 +69,18 @@ class MemoryModel:
         self.free_blocks = min(self.total_blocks,
                                self.free_blocks + self.blocks_for(tokens))
 
+    # block-granular API (the scheduler's reservation ledger)
+    def allocate_blocks(self, n: int) -> bool:
+        if n > self.free_blocks:
+            return False
+        self.free_blocks -= n
+        self.peak_used = max(self.peak_used,
+                             self.total_blocks - self.free_blocks)
+        return True
+
+    def release_blocks(self, n: int):
+        self.free_blocks = min(self.total_blocks, self.free_blocks + n)
+
     def utilization(self) -> float:
         return 1.0 - self.free_blocks / max(self.total_blocks, 1)
 

@@ -23,6 +23,9 @@ class BatchItem:
     tokens: int          # tokens processed for this request this iteration
     context: int         # total context length (for attention cost)
     phase: str           # prefill | decode
+    start: int = 0       # KV already in cache before this work (cache hits
+                         # and chunked-prefill continuations run ``extend``)
+    completes: bool = True   # this work finishes the request's prefill
 
 
 @dataclasses.dataclass
@@ -93,7 +96,22 @@ class PerfModel:
             return None
         pre = [i for i in items if i.phase == "prefill"]
         dec = [i for i in items if i.phase == "decode"]
+        # prefill continuations (prefix-cache hits, chunked-prefill chunks
+        # past the first) run the engine's ``extend`` path, which is priced
+        # separately when the profiler measured it
+        cont = [i for i in pre if i.start > 0]
+        if cont and self.trace._grid("extend", "prefill"):
+            pre = [i for i in pre if i.start == 0]
+        else:
+            cont = []
         total = 0.0
+        for i in cont:
+            v = self.trace.interpolate("extend", "prefill",
+                                       self._bucket(i.tokens),
+                                       i.start + i.tokens)
+            if v is None:
+                return None
+            total += v
         if pre:
             T = sum(i.tokens for i in pre)
             if self.cfg.scheduler.bucket_prefill:
@@ -102,11 +120,23 @@ class PerfModel:
             if v is None:
                 return None
             total += v
-            if self.cfg.role == "prefill" or self.cfg.prefix_cache.enabled:
-                # P/D export, or radix-cache insert (same slot copy-out)
+            if any(i.completes for i in pre) and \
+                    (self.cfg.role == "prefill"
+                     or self.cfg.prefix_cache.enabled):
+                # P/D export, or radix-cache insert (same slot copy-out) —
+                # charged once, when a request's prefill finishes
                 ex = self.trace.interpolate("kv_export", "prefill", T, T)
                 if ex is not None:
                     total += ex
+        done_cont = [i for i in cont if i.completes]
+        if done_cont and (self.cfg.role == "prefill"
+                          or self.cfg.prefix_cache.enabled):
+            # the insert (slot copy-out) lands once, on the extend iteration
+            # that finishes the prompt — not on every chunk
+            Tc = max(self._bucket(i.start + i.tokens) for i in done_cont)
+            ex = self.trace.interpolate("kv_export", "prefill", Tc, Tc)
+            if ex is not None:
+                total += ex
         if dec:
             B = len(dec)
             if self.cfg.scheduler.decode_pad_to:

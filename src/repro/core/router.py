@@ -1,93 +1,8 @@
-"""Global request router (paper §II-B): lives outside the instances,
-dispatches on arrival by pluggable policy. Custom policies subclass
-``RoutingPolicy`` and are registered by name.
-"""
-from __future__ import annotations
+"""Compat shim: the routing-policy registry moved to the backend-agnostic
+runtime layer (``repro.runtime.router``)."""
+from repro.runtime.router import (GlobalRouter, LeastLoaded,  # noqa: F401
+                                  PrefixAware, RoundRobin, RoutingPolicy,
+                                  register_policy)
 
-from typing import Dict, List, Optional, Type
-
-from repro.core.config import RouterCfg
-from repro.core.instance import Instance
-from repro.core.request import SimRequest
-
-
-class RoutingPolicy:
-    name = "base"
-
-    def choose(self, req: SimRequest, candidates: List[Instance],
-               now: float) -> Instance:
-        raise NotImplementedError
-
-
-class RoundRobin(RoutingPolicy):
-    name = "round_robin"
-
-    def __init__(self):
-        self._i = 0
-
-    def choose(self, req, candidates, now):
-        inst = candidates[self._i % len(candidates)]
-        self._i += 1
-        return inst
-
-
-class LeastLoaded(RoutingPolicy):
-    name = "least_loaded"
-
-    def choose(self, req, candidates, now):
-        return min(candidates, key=lambda i: i.load())
-
-
-class PrefixAware(RoutingPolicy):
-    """Route to the instance whose prefix cache matches longest; fall back
-    to least-loaded when no instance has a meaningful match."""
-    name = "prefix_aware"
-
-    def choose(self, req, candidates, now):
-        best, best_tokens = None, 0
-        for inst in candidates:
-            if inst.cache is None:
-                continue
-            m = inst.cache.match(req.prompt_tokens, now)
-            if m.tokens > best_tokens:
-                best, best_tokens = inst, m.tokens
-        if best is not None and best_tokens >= 32 and \
-                best.load() < 4 * min(c.load() for c in candidates) + 8:
-            return best
-        return min(candidates, key=lambda i: i.load())
-
-
-_POLICIES: Dict[str, Type[RoutingPolicy]] = {
-    p.name: p for p in (RoundRobin, LeastLoaded, PrefixAware)}
-
-
-def register_policy(cls: Type[RoutingPolicy]):
-    _POLICIES[cls.name] = cls
-    return cls
-
-
-class GlobalRouter:
-    def __init__(self, cfg: RouterCfg, instances: List[Instance]):
-        self.cfg = cfg
-        self.instances = instances
-        self.policy = _POLICIES[cfg.policy]()
-        self.dispatched = 0
-
-    def candidates_for(self, req: SimRequest) -> List[Instance]:
-        cands = [i for i in self.instances if i.alive
-                 and i.cfg.role in ("unified", "prefill")]
-        if self.cfg.model_affinity:
-            matching = [i for i in cands if i.cfg.model.name == req.model
-                        or req.model == "default"]
-            if matching:
-                cands = matching
-        if not cands:
-            raise RuntimeError("no live instance can serve request "
-                               f"{req.req_id} (model {req.model})")
-        return cands
-
-    def dispatch(self, req: SimRequest, now: float) -> Instance:
-        inst = self.policy.choose(req, self.candidates_for(req), now)
-        self.dispatched += 1
-        inst.submit(req)
-        return inst
+__all__ = ["GlobalRouter", "RoutingPolicy", "RoundRobin", "LeastLoaded",
+           "PrefixAware", "register_policy"]

@@ -1,159 +1,6 @@
-"""Iteration-level batch scheduler (vLLM-style continuous batching).
+"""Compat shim: the continuous-batching scheduler moved to the
+backend-agnostic runtime layer (``repro.runtime.scheduler``)."""
+from repro.runtime.scheduler import (BatchScheduler,  # noqa: F401
+                                     ScheduledWork, WaitQueue)
 
-Each call to ``next_batch`` composes one engine iteration from the running
-set + waiting queue under token/size budgets, with optional chunked prefill
-(Sarathi-style): prefill work is split into chunks that share iterations
-with decode steps. Preemption on memory pressure recycles the lowest-
-priority running request (its KV is freed; it restarts from the prefix
-cache / full prefill).
-"""
-from __future__ import annotations
-
-import dataclasses
-from collections import deque
-from typing import Deque, List, Optional, Tuple
-
-from repro.core.config import SchedulerCfg
-from repro.core.memory import MemoryModel
-from repro.core.perfmodel import BatchItem
-from repro.core.request import (DECODING, PREFILLING, QUEUED, SimRequest)
-
-
-@dataclasses.dataclass
-class ScheduledWork:
-    request: SimRequest
-    tokens: int
-    phase: str
-
-
-class BatchScheduler:
-    def __init__(self, cfg: SchedulerCfg, mem: MemoryModel):
-        self.cfg = cfg
-        self.mem = mem
-        self.waiting: Deque[SimRequest] = deque()
-        self.running: List[SimRequest] = []
-        self.n_preemptions = 0
-
-    def enqueue(self, req: SimRequest):
-        if self.cfg.policy == "sjf":
-            # shortest prompt first
-            items = list(self.waiting) + [req]
-            items.sort(key=lambda r: r.remaining_prefill)
-            self.waiting = deque(items)
-        else:
-            self.waiting.append(req)
-
-    def _try_admit(self, req: SimRequest) -> bool:
-        """Reserve KV blocks for prompt + expected output."""
-        need = req.remaining_prefill + req.cached_prefix + req.output_len // 4
-        if self.mem.can_allocate(need):
-            self.mem.allocate(need)
-            return True
-        return False
-
-    def _preempt_one(self) -> Optional[SimRequest]:
-        if not self.running:
-            return None
-        victim = max(self.running, key=lambda r: r.context_len)
-        self.running.remove(victim)
-        self.mem.free(victim.context_len + victim.output_len // 4)
-        victim.state = QUEUED
-        victim.n_preemptions += 1
-        victim.prefill_done_tokens = 0
-        victim.generated = 0        # conservatively restart decoding state
-        self.waiting.appendleft(victim)
-        self.n_preemptions += 1
-        return victim
-
-    def next_batch(self) -> List[ScheduledWork]:
-        cfg = self.cfg
-        if cfg.prefill_exclusive:
-            return self._next_batch_exclusive()
-        work: List[ScheduledWork] = []
-        tokens_left = cfg.max_batch_tokens
-
-        # 1. decode steps for all running decode-phase requests
-        for req in list(self.running):
-            if req.state == DECODING and tokens_left > 0:
-                work.append(ScheduledWork(req, 1, "decode"))
-                tokens_left -= 1
-
-        # 2. continue chunked prefills already running
-        for req in list(self.running):
-            if req.state == PREFILLING and tokens_left > 0:
-                chunk = min(req.remaining_prefill,
-                            cfg.prefill_chunk if cfg.chunked_prefill
-                            else req.remaining_prefill,
-                            tokens_left)
-                if chunk > 0:
-                    work.append(ScheduledWork(req, chunk, "prefill"))
-                    tokens_left -= chunk
-
-        # 3. admit new requests while budget remains
-        while self.waiting and tokens_left > 0 and \
-                len(self.running) < cfg.max_batch_size:
-            req = self.waiting[0]
-            if not self._try_admit(req):
-                # memory pressure: try preempting, else stop admitting
-                if not self.running or self._preempt_one() is None:
-                    break
-                if not self._try_admit(req):
-                    break
-            self.waiting.popleft()
-            req.state = PREFILLING
-            self.running.append(req)
-            chunk = min(req.remaining_prefill,
-                        cfg.prefill_chunk if cfg.chunked_prefill
-                        else req.remaining_prefill,
-                        tokens_left)
-            chunk = max(chunk, 0)
-            if chunk > 0:
-                work.append(ScheduledWork(req, chunk, "prefill"))
-                tokens_left -= chunk
-            elif req.remaining_prefill == 0:
-                # fully prefix-cached prompt: go straight to decode
-                req.state = DECODING
-                work.append(ScheduledWork(req, 1, "decode"))
-                tokens_left -= 1
-        return work
-
-    def _next_batch_exclusive(self) -> List[ScheduledWork]:
-        """ServingEngine semantics: one whole-prompt prefill OR all decodes."""
-        cfg = self.cfg
-        if self.waiting and len(self.running) < cfg.max_batch_size:
-            req = self.waiting[0]
-            if self._try_admit(req):
-                self.waiting.popleft()
-                req.state = PREFILLING
-                self.running.append(req)
-                n = req.remaining_prefill
-                if n > 0:
-                    return [ScheduledWork(req, n, "prefill")]
-                req.state = DECODING
-        return [ScheduledWork(r, 1, "decode") for r in self.running
-                if r.state == DECODING]
-
-    def complete(self, req: SimRequest):
-        if req in self.running:
-            self.running.remove(req)
-        self.mem.free(req.context_len + req.output_len // 4)
-
-    def requeue_all(self) -> List[SimRequest]:
-        """Node failure: return every in-flight request for re-dispatch."""
-        out = list(self.running) + list(self.waiting)
-        for r in self.running:
-            self.mem.free(r.context_len + r.output_len // 4)
-            r.state = QUEUED
-            r.prefill_done_tokens = 0
-            r.generated = 0
-            r.n_restarts += 1
-        self.running.clear()
-        self.waiting.clear()
-        return out
-
-    def to_batch_items(self, work: List[ScheduledWork]) -> List[BatchItem]:
-        return [BatchItem(tokens=w.tokens,
-                          context=w.request.context_len + w.tokens
-                          if w.phase == "prefill"
-                          else w.request.context_len + 1,
-                          phase=w.phase) for w in work]
+__all__ = ["BatchScheduler", "ScheduledWork", "WaitQueue"]

@@ -35,10 +35,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int,
 
     def body(j, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, pl.dslice(j * bkv, bkv), 0,
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(j * bkv, bkv), 0,
-                            slice(None))).astype(jnp.float32)
+        # NB: raw python ints in pl.load index tuples crash this jax
+        # version's interpret-mode discharge; use unit dslices + squeeze.
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(j * bkv, bkv),
+                            pl.dslice(0, 1), slice(None)))[0, :, 0, :] \
+            .astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(j * bkv, bkv),
+                            pl.dslice(0, 1), slice(None)))[0, :, 0, :] \
+            .astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         if causal:

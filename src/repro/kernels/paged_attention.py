@@ -57,10 +57,12 @@ def _paged_two_kernel(q_ref, kp_ref, vp_ref, table_ref, len_ref, o_ref, *,
     def body(j, carry):
         acc, m, l = carry
         page = table_ref[0, j]
-        k = pl.load(kp_ref, (page, slice(None), 0,
-                             slice(None))).astype(jnp.float32)
-        v = pl.load(vp_ref, (page, slice(None), 0,
-                             slice(None))).astype(jnp.float32)
+        # unit dslice for the kv-head dim: raw ints in pl.load index tuples
+        # crash this jax version's interpret-mode discharge
+        k = pl.load(kp_ref, (page, slice(None), pl.dslice(0, 1),
+                             slice(None)))[:, 0, :].astype(jnp.float32)
+        v = pl.load(vp_ref, (page, slice(None), pl.dslice(0, 1),
+                             slice(None)))[:, 0, :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         pos = j * page_size + jax.lax.broadcasted_iota(

@@ -23,6 +23,12 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--router", default="round_robin",
+                    help="any registered routing policy "
+                         "(round_robin | least_loaded | prefix_aware)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="continuous batching with chunked prefill on the "
+                         "real engine (unified runtime scheduler)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -43,7 +49,14 @@ def main():
             ServingEngine(cfg, params=e0.params, name=f"e{i}", **kw)
             for i in range(1, args.instances)]
         pd = None
-    drv = ServeDriver(engines, DriverCfg(), pd_map=pd)
+    sched = None
+    if args.chunked_prefill:
+        from repro.core.config import SchedulerCfg
+        sched = SchedulerCfg(max_batch_size=args.max_batch,
+                             max_batch_tokens=256,
+                             chunked_prefill=True, prefill_chunk=64)
+    drv = ServeDriver(engines, DriverCfg(router=args.router,
+                                         scheduler=sched), pd_map=pd)
     m = drv.run(reqs)
     print(json.dumps(m, indent=1, default=float))
 

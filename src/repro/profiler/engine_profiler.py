@@ -56,6 +56,46 @@ def engine_trace(arch: str, *, max_batch: int = 4, max_len: int = 512,
             trace.add("kv_export", "prefill", P, P,
                       float(np.median(exp_lat)))
 
+    # --- cached/chunked prefill (extend) latency per (suffix, context) ---
+    # the engine's extend path attends over the slot's full buffer, so it is
+    # priced separately from fresh prefill (prefix-cache hits, chunk 2+)
+    import jax
+    import jax.numpy as jnp
+    from repro.serve.engine import _bucket
+    try:
+        for ctx in (16, 64, 128):
+            if ctx + 32 >= max_len:
+                continue
+            toks = rng.integers(0, cfg.vocab, ctx)
+            pad = np.zeros((1, _bucket(ctx)), np.int32)
+            pad[0, :ctx] = toks
+            _, c1 = eng._jit_prefill(eng.params, jnp.asarray(pad),
+                                     lengths=jnp.asarray([ctx], jnp.int32))
+            eng._write_slot_from_prefill(0, c1, ctx)
+            for S in (16, 64, 128):
+                if ctx + S >= max_len:
+                    continue
+                suf = np.zeros((1, S), np.int32)
+                suf[0] = rng.integers(0, cfg.vocab, S)
+                n_new = jnp.asarray([S], jnp.int32)
+                lat = []
+                for rep in range(reps + 1):
+                    t0 = time.perf_counter()
+                    sub = eng._slot_subcache(0, ctx)
+                    _, new_sub = eng._jit_extend(eng.params, sub,
+                                                 jnp.asarray(suf), n_new)
+                    eng._write_slot(0, new_sub, ctx)   # keep length at ctx
+                    jax.block_until_ready(eng.cache["lengths"])
+                    if rep:                            # rep 0 warms the jits
+                        lat.append(time.perf_counter() - t0)
+                trace.add("extend", "prefill", S, ctx + S,
+                          float(np.median(lat)))
+    except NotImplementedError:
+        # some architectures (e.g. xLSTM) have no cached-prefill path; the
+        # perf model then falls back to fresh-prefill pricing
+        pass
+    eng._release_slot(0)
+
     # --- decode latency per (batch, context) ---
     for ctx in decode_ctxs:
         if ctx + 16 >= max_len:

@@ -1,0 +1,33 @@
+"""Backend-agnostic serving runtime (the paper's "unified" layer).
+
+One scheduler / prefix-cache / router / P-D-orchestration stack drives both
+the discrete-event simulator and the real JAX engine.  All serving *policy*
+lives here exactly once; backends implement the small ``ExecutionBackend``
+protocol and differ only in how a scheduled batch is turned into latency:
+
+* ``SimBackend``   prices the batch with the trace-driven ``PerfModel``.
+* ``JaxBackend``   executes it for real (jitted prefill/extend/decode over a
+  slot-based KV cache) and measures wall-clock latency.
+
+Because every dispatch decision (routing, admission, chunking, preemption,
+P/D handoff) is made by the same code path, fidelity comparisons such as
+``benchmarks/fig2_fidelity.py`` isolate pure hardware-model error — the
+scheduling-policy divergence term is zero by construction.
+"""
+import repro.core  # noqa: F401  (initialize the substrate package first:
+# repro.core's compat shims import runtime modules back, so entering the
+# runtime package cold must let core finish before runtime submodules load)
+from repro.runtime.backend import ExecutionBackend, KvHandoff
+from repro.runtime.cluster import ServingRuntime
+from repro.runtime.instance import RuntimeInstance
+from repro.runtime.prefix_cache import MatchResult, RadixPrefixCache
+from repro.runtime.router import (GlobalRouter, LeastLoaded, PrefixAware,
+                                  RoundRobin, RoutingPolicy, register_policy)
+from repro.runtime.scheduler import BatchScheduler, ScheduledWork, WaitQueue
+
+__all__ = [
+    "ExecutionBackend", "KvHandoff", "ServingRuntime", "RuntimeInstance",
+    "MatchResult", "RadixPrefixCache", "GlobalRouter", "RoutingPolicy",
+    "RoundRobin", "LeastLoaded", "PrefixAware", "register_policy",
+    "BatchScheduler", "ScheduledWork", "WaitQueue",
+]

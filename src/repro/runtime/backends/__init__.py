@@ -1,0 +1,11 @@
+"""Execution backends for the unified serving runtime.
+
+``SimBackend`` is importable unconditionally; ``JaxBackend`` pulls in jax
+and the real engine, so import it from its module directly:
+
+    from repro.runtime.backends.sim import SimBackend
+    from repro.runtime.backends.jax_engine import JaxBackend
+"""
+from repro.runtime.backends.sim import SimBackend
+
+__all__ = ["SimBackend"]

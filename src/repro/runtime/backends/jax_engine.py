@@ -1,0 +1,250 @@
+"""Real-execution backend: jitted prefill/extend/decode over slot KV.
+
+Wraps a ``repro.serve.engine.ServingEngine`` purely as a *KV mechanism*
+(slot cache, jitted model calls, export/restore plumbing).  All serving
+decisions — admission, chunking, decode composition, preemption, prefix
+policy, P/D handoff — come from the unified runtime, so the real engine
+gains chunked prefill, SJF, preemption and every registered routing policy
+for free.
+
+Hybrid emulation is preserved: compute is REAL (wall-clock timed on the
+local device), time is VIRTUAL (the runtime's shared event queue advances
+by the measured latencies), exactly the paper's §III methodology adapted to
+this container.
+
+Chunked prefill maps onto the model API naturally: the first chunk runs the
+bucketed ``prefill`` kernel; subsequent chunks ``extend`` the slot's
+subcache.  One batched ``decode`` serves all scheduled decode slots per
+iteration (the full-buffer decode the engine always ran).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.config import InstanceCfg
+from repro.core.memory import MemoryModel
+from repro.core.request import SimRequest
+from repro.runtime.backend import KvHandoff
+from repro.runtime.prefix_cache import MatchResult
+from repro.runtime.scheduler import ScheduledWork
+from repro.serve.engine import _bucket
+
+
+class JaxBackend:
+    name = "jax"
+
+    def __init__(self, engine, cfg: InstanceCfg):
+        # late imports: the sim path must not pay for jax
+        import jax  # noqa: F401
+        self.eng = engine
+        self.cfg = cfg
+        self.memory = MemoryModel(cfg)
+        self._slot: Dict[int, int] = {}      # req_id -> engine slot
+        self._len: Dict[int, int] = {}       # slot   -> tokens held in KV
+        self._restore: Dict[int, tuple] = {} # req_id -> (payload, length)
+        # real work done outside execute() (prefix store, P/D export) is
+        # wall-timed and charged to the next iteration
+        self._carry_s = 0.0
+
+    # ---- helpers ----
+    def prompt_cap(self, req: SimRequest) -> int:
+        """Slot capacity: prompt + generated output + 1 must fit max_len.
+        The runtime truncates the request on submit, so the scheduler's
+        chunk plan and the backend's KV state always agree."""
+        return max(self.eng.max_len - req.output_len - 1, 1)
+
+    def _prompt(self, req: SimRequest) -> List[int]:
+        toks = list(req.prompt_tokens)
+        cap = self.prompt_cap(req)
+        return toks[:cap] if len(toks) > cap else toks
+
+    def warmup(self):
+        eng = self.eng
+        eng.warmup()
+        if eng.radix is not None:
+            # pre-compile the slot export/restore jits at every bucket so
+            # prefix-cache hits don't pay compile time on the virtual clock
+            for blen in (16, 32, 64, 128, 256):
+                if blen >= eng.max_len:
+                    break
+                payload = eng._export_slot(0, blen)
+                eng._restore_slot(0, payload, blen)
+            eng._release_slot(0)
+
+    # ---- execution ----
+    def execute(self, work: List[ScheduledWork], now: float) -> float:
+        import jax
+        t0 = time.perf_counter()
+        decodes = [w for w in work if w.phase == "decode"]
+        prefills = [w for w in work if w.phase == "prefill"]
+        if decodes:
+            self._decode_step(decodes)
+        for w in prefills:
+            self._prefill_chunk(w)
+        jax.block_until_ready(self.eng.cache)
+        latency = time.perf_counter() - t0 + self._carry_s
+        self._carry_s = 0.0
+        return latency
+
+    def _decode_step(self, decodes: List[ScheduledWork]):
+        import jax.numpy as jnp
+        from repro.serve.sampler import greedy
+        eng = self.eng
+        logits, eng.cache = eng._jit_decode(
+            eng.params, eng.cache, jnp.asarray(eng._tokens_buf))
+        nxt = np.asarray(greedy(logits, eng.cfg.vocab))
+        scheduled = set()
+        for w in decodes:
+            slot = self._slot[w.request.req_id]
+            eng._tokens_buf[slot, 0] = int(nxt[slot, 0])
+            self._len[slot] += 1
+            scheduled.add(slot)
+        if scheduled != set(self._len):
+            # the full-buffer decode bumped every slot's length; restore the
+            # authoritative lengths of mid-prefill / unscheduled slots (free
+            # slots may hold garbage lengths, as in the legacy engine loop —
+            # the next prefill write resets them)
+            lengths = np.zeros((eng.max_batch,), np.int32)
+            for s, n in self._len.items():
+                lengths[s] = n
+            eng.cache["lengths"] = jnp.asarray(lengths)
+
+    def _prefill_chunk(self, w: ScheduledWork):
+        import jax.numpy as jnp
+        from repro.serve.sampler import greedy
+        eng = self.eng
+        req = w.request
+        toks = self._prompt(req)
+        slot = self._slot.get(req.req_id)
+        if slot is None:
+            slot = eng.slot_free.pop()
+            self._slot[req.req_id] = slot
+            self._len[slot] = 0
+            restore = self._restore.pop(req.req_id, None)
+            if restore is not None and req.cached_prefix > 0:
+                payload, length = restore
+                length = min(length, req.cached_prefix)
+                eng._restore_slot(slot, payload, length)
+                self._len[slot] = length
+        start = self._len[slot]
+        end = min(start + w.tokens, len(toks))
+        chunk = toks[start:end]
+        logits = None
+        if chunk:
+            P = _bucket(len(chunk))
+            pad = np.zeros((1, P), np.int32)
+            pad[0, :len(chunk)] = np.asarray(chunk, np.int32)
+            n_new = jnp.asarray([len(chunk)], jnp.int32)
+            if start == 0:
+                logits, c1 = eng._jit_prefill(eng.params, jnp.asarray(pad),
+                                              lengths=n_new)
+                eng._write_slot_from_prefill(slot, c1, len(chunk))
+            else:
+                sub = eng._slot_subcache(slot, start)
+                logits, new_sub = eng._jit_extend(eng.params, sub,
+                                                  jnp.asarray(pad), n_new)
+                eng._write_slot(slot, new_sub, start + len(chunk))
+            self._len[slot] = start + len(chunk)
+        if self._len[slot] >= len(toks) and logits is not None:
+            # prompt complete: the last chunk's logits give the first token
+            first = int(np.asarray(greedy(logits, eng.cfg.vocab))[0, 0])
+            eng._tokens_buf[slot, 0] = first
+
+    # ---- prefix cache payloads ----
+    def on_prefix_hit(self, req: SimRequest, match: MatchResult,
+                      usable: int) -> int:
+        if self.eng.radix is None or usable <= 0:
+            return 0
+        toks = self._prompt(req)
+        limit = min(usable, len(toks) - 1 if toks else 0)
+        length, payload = self.eng.radix.match(toks, limit=limit)
+        if payload is None or length <= 0:
+            return 0
+        self._restore[req.req_id] = (payload, length)
+        return length
+
+    def on_prefill_complete(self, req: SimRequest):
+        if self.eng.radix is None:
+            return
+        slot = self._slot.get(req.req_id)
+        if slot is None:
+            return
+        t0 = time.perf_counter()
+        toks = self._prompt(req)
+        blk = (len(toks) // self.eng.radix.block) * self.eng.radix.block
+        if blk > 0:
+            self.eng.radix.insert(toks, self.eng._export_slot(slot, blk))
+        self._carry_s += time.perf_counter() - t0
+
+    def on_preempt(self, req: SimRequest) -> int:
+        self.release(req)
+        # re-match the store so the restart restores whatever KV survives
+        return self.on_prefix_hit(req, None, req.cached_prefix) \
+            if req.cached_prefix > 0 else 0
+
+    def release(self, req: SimRequest):
+        slot = self._slot.pop(req.req_id, None)
+        self._restore.pop(req.req_id, None)
+        if slot is None:
+            return
+        self._len.pop(slot, None)
+        self.eng._release_slot(slot)
+
+    # ---- P/D handoff ----
+    def export_kv(self, req: SimRequest) -> KvHandoff:
+        t0 = time.perf_counter()
+        slot = self._slot[req.req_id]
+        length = self._len[slot]
+        kv = self.eng._export_slot(slot, length)
+        first = int(self.eng._tokens_buf[slot, 0])
+        nbytes = float(sum(
+            np.asarray(leaf).nbytes
+            for k, v in kv.items() if not k.startswith("_")
+            for leaf in _leaves(v)))
+        self.release(req)
+        self._carry_s += time.perf_counter() - t0
+        return KvHandoff(nbytes=nbytes,
+                         payload={"kv": kv, "first": first, "len": length})
+
+    def import_kv(self, req: SimRequest, handoff: Optional[KvHandoff]):
+        if handoff is None or handoff.payload is None:
+            return
+        slot = self.eng.slot_free.pop()
+        self._slot[req.req_id] = slot
+        p = handoff.payload
+        self.eng._restore_slot(slot, p["kv"], p["len"])
+        self.eng._tokens_buf[slot, 0] = p["first"]
+        self._len[slot] = p["len"]
+
+    # ---- lifecycle ----
+    def reset(self):
+        import jax.numpy as jnp
+        eng = self.eng
+        self._slot.clear()
+        self._len.clear()
+        self._restore.clear()
+        eng.slot_free = list(range(eng.max_batch))
+        eng.cache["lengths"] = jnp.zeros((eng.max_batch,), jnp.int32)
+
+    def stats(self) -> dict:
+        s = {"engine_iterations": self.eng.iterations}
+        if self.eng.radix is not None:
+            s["kv_store_hits"] = self.eng.radix.hits
+            s["kv_store_misses"] = self.eng.radix.misses
+        return s
+
+
+def _leaves(tree):
+    out = []
+    if isinstance(tree, dict):
+        for v in tree.values():
+            out.extend(_leaves(v))
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            out.extend(_leaves(v))
+    else:
+        out.append(tree)
+    return out

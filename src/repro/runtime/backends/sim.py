@@ -1,0 +1,77 @@
+"""Simulation backend: batches are priced, never executed.
+
+Wraps the trace-driven ``PerfModel`` + paged ``MemoryModel`` — exactly the
+pricing the old ``core.instance.Instance`` iteration loop did inline.  All
+scheduling/caching/routing decisions arrive from the unified runtime; this
+class only turns a decided batch into seconds.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.config import InstanceCfg
+from repro.core.memory import MemoryModel
+from repro.core.perfmodel import PerfModel
+from repro.core.request import SimRequest
+from repro.core.trace import Trace
+from repro.runtime.backend import KvHandoff
+from repro.runtime.prefix_cache import MatchResult
+from repro.runtime.scheduler import ScheduledWork, to_batch_items
+
+
+class SimBackend:
+    name = "sim"
+
+    def __init__(self, cfg: InstanceCfg, trace: Optional[Trace] = None):
+        self.cfg = cfg
+        self.memory = MemoryModel(cfg)
+        self.perf = PerfModel(cfg, trace=trace)
+        # prefix-cache restore / tier-fetch latency charged to the next
+        # iteration (the request that hit pays for its own fetch)
+        self._pending_fetch_s = 0.0
+
+    def warmup(self):
+        pass
+
+    def prompt_cap(self, req: SimRequest):
+        return None
+
+    def execute(self, work: List[ScheduledWork], now: float) -> float:
+        cost = self.perf.iteration_latency(to_batch_items(work))
+        latency = cost.total_s + self._pending_fetch_s
+        self._pending_fetch_s = 0.0
+        return latency
+
+    def on_prefix_hit(self, req: SimRequest, match: MatchResult,
+                      usable: int) -> int:
+        if match.lower_tier_bytes > 0:
+            # promote host-tier blocks: pay the fetch on this request
+            self._pending_fetch_s += self.memory.transfer_time(
+                match.lower_tier_bytes, "host", "device")
+        if usable > 0:
+            # restoring the hit KV into the running cache is a real slot
+            # copy (measured by the engine profiler as kv_export)
+            self._pending_fetch_s += self.perf.kv_copy_cost(usable)
+        return usable
+
+    def on_prefill_complete(self, req: SimRequest):
+        pass     # insert cost is modeled inside the perf trace (kv_export)
+
+    def on_preempt(self, req: SimRequest) -> int:
+        return req.cached_prefix   # simulated KV prefix stays restorable
+
+    def release(self, req: SimRequest):
+        pass
+
+    def export_kv(self, req: SimRequest) -> KvHandoff:
+        return KvHandoff(
+            nbytes=req.prompt_len * self.cfg.model.kv_bytes_per_token)
+
+    def import_kv(self, req: SimRequest, handoff: Optional[KvHandoff]):
+        pass
+
+    def reset(self):
+        pass
+
+    def stats(self) -> dict:
+        return {}

@@ -1,0 +1,157 @@
+"""Unified serving driver: router + instances + network + P/D wiring +
+failure injection + elastic scaling, parameterized by execution backend.
+
+``ServingRuntime`` owns the serving semantics once; the backend factory
+decides whether instances are priced (``SimBackend``) or really executed
+(``JaxBackend``).  ``repro.core.Cluster`` and ``repro.serve.ServeDriver``
+are thin wrappers choosing a factory.
+
+Every instance — whether built at construction time or added later via
+``add_instance`` — goes through one ``_build_instance`` path, so elastic
+scale-out instances join the shared global prefix cache and get P/D handoff
+wiring exactly like their siblings (previously they silently got neither).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.config import ClusterCfg, InstanceCfg
+from repro.core.engine import EventQueue
+from repro.core.metrics import aggregate
+from repro.core.network import NetworkModel
+from repro.core.request import QUEUED, SimRequest
+from repro.core.trace import Trace, TraceRegistry
+from repro.runtime.backend import ExecutionBackend
+from repro.runtime.instance import RuntimeInstance
+from repro.runtime.prefix_cache import RadixPrefixCache
+from repro.runtime.router import GlobalRouter
+
+BackendFactory = Callable[[InstanceCfg, Optional[Trace]], ExecutionBackend]
+
+
+class ServingRuntime:
+    def __init__(self, cfg: ClusterCfg, backend_factory: BackendFactory,
+                 traces: Optional[TraceRegistry] = None):
+        self.cfg = cfg
+        self.backend_factory = backend_factory
+        self.queue = EventQueue()
+        self.network = NetworkModel(cfg.network)
+        self.traces = traces or TraceRegistry()
+        self.instances: Dict[str, RuntimeInstance] = {}
+        self._shared_cache: Optional[RadixPrefixCache] = None
+        for icfg in cfg.instances:
+            self._build_instance(icfg)
+        self.router = GlobalRouter(
+            cfg.router, list(self.instances.values()))
+        self.finished: List[SimRequest] = []
+        self._all_requests: List[SimRequest] = []
+
+    # ---- instance construction (init-time AND elastic scale-out) ----
+    def _build_instance(self, icfg: InstanceCfg) -> RuntimeInstance:
+        trace = (self.traces.get(icfg.trace_name)
+                 if icfg.trace_name else None)
+        backend = self.backend_factory(icfg, trace)
+        cache: Optional[RadixPrefixCache] = None
+        if icfg.prefix_cache.enabled:
+            if icfg.prefix_cache.scope == "global":
+                # global scope: all instances share one radix tree
+                if self._shared_cache is None:
+                    self._shared_cache = RadixPrefixCache(
+                        icfg.prefix_cache, backend.memory,
+                        name="global.cache")
+                cache = self._shared_cache
+            else:
+                cache = RadixPrefixCache(icfg.prefix_cache, backend.memory,
+                                         name=f"{icfg.name}.cache")
+        inst = RuntimeInstance(icfg, self.queue, backend, cache=cache)
+        inst.on_request_done = self._on_done
+        if (self.cfg.pd_map or {}).get(icfg.name):
+            inst.on_prefill_done = self._handoff
+        self.instances[icfg.name] = inst
+        return inst
+
+    # ---- P/D disaggregation ----
+    def _handoff(self, req: SimRequest, src: RuntimeInstance):
+        """Prefill finished on a prefill-role instance: move the KV to the
+        least-loaded live decode target and admit there when it lands."""
+        names = (self.cfg.pd_map or {}).get(src.name, ())
+        targets = [self.instances[n] for n in names
+                   if n in self.instances and self.instances[n].alive]
+        if not targets:
+            # no live decode target: the request is dropped, but the
+            # prefill-side backend state (e.g. the engine slot) must not leak
+            src.backend.release(req)
+            return
+        tgt = min(targets, key=lambda i: i.load())
+        req.decode_instance = tgt.name
+        handoff = src.backend.export_kv(req)
+        kv_bytes = handoff.nbytes
+        if self.cfg.network.kv_transfer_policy == "layerwise_overlap":
+            # transfer overlapped with the last prefill layers: only the
+            # final layer's KV lands on the critical path
+            kv_bytes = kv_bytes / max(src.cfg.model.n_layers, 1)
+        done_t = self.network.kv_transfer_done(
+            self.queue.now, src.name, tgt.name, kv_bytes)
+        self.queue.schedule_at(
+            done_t, lambda: tgt.admit_decode(req, handoff),
+            tag=f"kv:{src.name}->{tgt.name}")
+
+    # ---- lifecycle ----
+    def _on_done(self, req: SimRequest, inst: RuntimeInstance):
+        self.finished.append(req)
+
+    def submit_workload(self, requests: Sequence):
+        for r in requests:
+            sim = SimRequest(req_id=r.req_id, arrival=r.arrival,
+                             prompt_tokens=list(r.prompt_tokens),
+                             output_len=r.output_len, model=r.model)
+            self._all_requests.append(sim)
+            self.queue.schedule_at(
+                r.arrival,
+                lambda s=sim: self.router.dispatch(s, self.queue.now),
+                tag="arrival")
+
+    # ---- failures / elastic scaling ----
+    def inject_failure(self, t: float, instance: str,
+                       recover_after: Optional[float] = None):
+        def fail():
+            inst = self.instances[instance]
+            orphans = inst.fail()
+            for req in orphans:
+                req.state = QUEUED
+                req.cached_prefix = 0
+                self.router.dispatch(req, self.queue.now)
+        self.queue.schedule_at(t, fail, tag=f"fail:{instance}")
+        if recover_after is not None:
+            self.queue.schedule_at(
+                t + recover_after,
+                lambda: self.instances[instance].revive(),
+                tag=f"revive:{instance}")
+
+    def add_instance(self, t: float, icfg: InstanceCfg):
+        """Elastic scale-out at simulated time t (same wiring as init)."""
+        def add():
+            inst = self._build_instance(icfg)
+            self.router.instances.append(inst)
+        self.queue.schedule_at(t, add, tag=f"scale:{icfg.name}")
+
+    # ---- run ----
+    def warmup(self):
+        for inst in self.instances.values():
+            inst.backend.warmup()
+
+    def run(self, until: Optional[float] = None) -> Dict:
+        t0 = time.time()
+        self.queue.run(until=until)
+        wall = time.time() - t0
+        m = self.metrics()
+        m["sim_wall_s"] = wall
+        return m
+
+    def metrics(self) -> Dict:
+        m = aggregate(self._all_requests)
+        m["sim_events"] = self.queue.n_processed
+        m["instances"] = {n: i.stats() for n, i in self.instances.items()}
+        m["network_bytes"] = self.network.stats()
+        return m

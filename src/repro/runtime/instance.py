@@ -1,0 +1,238 @@
+"""A serving instance: scheduler + prefix cache + pluggable backend.
+
+Runs the iteration loop as events on the shared queue: pick a batch with the
+unified ``BatchScheduler``, hand it to the ``ExecutionBackend`` (which either
+prices it — simulator — or really executes it and measures wall time — JAX
+engine), schedule the completion event, apply results (prefill progress,
+decode tokens, finishes), repeat.  Roles: unified | prefill | decode (P/D
+disaggregation wires prefill instances to decode instances via the cluster's
+KV-transfer path).
+
+Because the loop, scheduler, cache policy and P/D flow are shared, the
+sequence of scheduling decisions (``self.decisions``) is identical across
+backends for the same workload — only the time axis differs.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Deque, List, Optional, Tuple
+
+from repro.core.config import InstanceCfg
+from repro.core.engine import EventQueue
+from repro.core.request import (DECODING, FINISHED, QUEUED,
+                                TRANSFERRING, SimRequest)
+from repro.runtime.backend import ExecutionBackend, KvHandoff
+from repro.runtime.prefix_cache import RadixPrefixCache
+from repro.runtime.scheduler import BatchScheduler, ScheduledWork
+
+
+class RuntimeInstance:
+    def __init__(self, cfg: InstanceCfg, queue: EventQueue,
+                 backend: ExecutionBackend,
+                 cache: Optional[RadixPrefixCache] = None):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.queue = queue
+        self.backend = backend
+        self.mem = backend.memory
+        self.scheduler = BatchScheduler(cfg.scheduler, self.mem)
+        self.scheduler.on_preempt = self._on_preempt
+        self.cache = cache
+        self.alive = True
+        self.busy = False
+        self.busy_time = 0.0
+        self.iterations = 0
+        self.total_tokens = 0
+        # (req_id, phase, tokens) per work item per iteration — the policy
+        # trace the sim/real parity test compares across backends (bounded:
+        # long production simulations keep only the most recent window)
+        self.decisions: Deque[Tuple[Tuple[int, str, int], ...]] = \
+            deque(maxlen=65536)
+        # callbacks wired by the cluster
+        self.on_prefill_done: Optional[Callable] = None   # P/D handoff
+        self.on_request_done: Optional[Callable] = None
+        # P/D arrivals that found no slot/memory; drained as capacity frees
+        self._pending_decode: Deque[Tuple[SimRequest,
+                                          Optional[KvHandoff]]] = deque()
+
+    # ---- request entry ----
+    def submit(self, req: SimRequest):
+        if not self.alive:
+            raise RuntimeError(f"submit to dead instance {self.name}")
+        req.instance = self.name
+        cap = self.backend.prompt_cap(req)
+        if cap is not None and req.prompt_len > cap:
+            # keep scheduler bookkeeping and backend KV state in agreement
+            req.prompt_tokens = list(req.prompt_tokens)[:max(cap, 1)]
+        if self.cache is not None and req.state == QUEUED \
+                and req.prefill_done_tokens == 0:
+            m = self.cache.match(req.prompt_tokens, self.queue.now)
+            # never cache-skip the whole prompt: the last token must be
+            # recomputed to produce the first output logits
+            usable = min(m.tokens, req.prompt_len - 1)
+            usable = max(usable, 0)
+            # backend clamps to what it can actually restore and accounts
+            # any tier-fetch / KV-copy cost
+            req.cached_prefix = self.backend.on_prefix_hit(req, m, usable)
+            if m.lower_tier_bytes > 0:
+                self.cache.promote(m.nodes, self.queue.now)
+            self.cache.pin(m.nodes)
+            req._pinned_nodes = m.nodes   # type: ignore[attr-defined]
+        self.scheduler.enqueue(req)
+        self._kick()
+
+    # ---- iteration loop ----
+    def _kick(self):
+        if self.alive and not self.busy:
+            self._start_iteration()
+
+    def _start_iteration(self):
+        work = self.scheduler.next_batch()
+        if not work:
+            self.busy = False
+            return
+        self.busy = True
+        self.decisions.append(
+            tuple((w.request.req_id, w.phase, w.tokens) for w in work))
+        latency = self.backend.execute(work, self.queue.now)
+        self.iterations += 1
+        self.total_tokens += sum(w.tokens for w in work)
+        self.busy_time += latency
+        self.queue.schedule(latency, lambda: self._finish_iteration(work),
+                            tag=f"{self.name}.iter")
+
+    def _finish_iteration(self, work: List[ScheduledWork]):
+        if not self.alive:
+            return
+        now = self.queue.now
+        for w in work:
+            req = w.request
+            if w.phase == "prefill":
+                req.prefill_done_tokens += w.tokens
+                if req.remaining_prefill == 0:
+                    self._prefill_complete(req)
+            else:
+                req.generated += 1
+                req.token_times.append(now)
+                if req.t_first_token is None:
+                    req.t_first_token = now
+                if req.generated >= req.output_len:
+                    self._finish_request(req)
+        self._drain_pending_decode()
+        self.busy = False
+        self._start_iteration()
+
+    def _prefill_complete(self, req: SimRequest):
+        now = self.queue.now
+        # first token is produced by the prefill's last iteration
+        if req.t_first_token is None:
+            req.t_first_token = now
+            req.token_times.append(now)
+            req.generated = 1
+        if self.cache is not None:
+            self.cache.insert(req.prompt_tokens, now)
+            self.backend.on_prefill_complete(req)
+        if self.cfg.role == "prefill" and self.on_prefill_done is not None:
+            req.state = TRANSFERRING
+            self.scheduler.complete(req)
+            self._unpin(req)
+            self.on_prefill_done(req, self)
+        else:
+            req.state = DECODING
+            if req.generated >= req.output_len:
+                self._finish_request(req)
+
+    def _finish_request(self, req: SimRequest):
+        req.state = FINISHED
+        req.t_finish = self.queue.now
+        self.scheduler.complete(req)
+        self.backend.release(req)
+        self._unpin(req)
+        if self.on_request_done is not None:
+            self.on_request_done(req, self)
+
+    def _on_preempt(self, req: SimRequest):
+        req.cached_prefix = max(0, self.backend.on_preempt(req))
+
+    def _unpin(self, req: SimRequest):
+        nodes = getattr(req, "_pinned_nodes", None)
+        if nodes and self.cache is not None:
+            self.cache.unpin(nodes)
+            req._pinned_nodes = []   # type: ignore[attr-defined]
+
+    # ---- decode-side admission for P/D ----
+    def admit_decode(self, req: SimRequest,
+                     handoff: Optional[KvHandoff] = None):
+        """Request arrives with KV already transferred (P/D handoff)."""
+        req.instance = self.name
+        req.state = DECODING
+        req.prefill_done_tokens = req.prompt_len - req.cached_prefix
+        ok = self.scheduler.admit_remote(req)
+        if not ok and self.cache is not None and self.cache.mem is self.mem:
+            # memory pressure from prefix-cache borrows: evict and retry
+            # (only when the cache borrows from THIS instance's pool — a
+            # global-scope cache may be bound to a sibling's memory)
+            self.cache.release_pressure(
+                self.mem.blocks_for(req.context_len + 1), self.queue.now)
+            ok = self.scheduler.admit_remote(req)
+        if not ok and not self.scheduler.running:
+            # idle instance: nothing will ever free memory, so a parked
+            # request would be lost — admit with whatever blocks remain
+            # (the ledger records the partial reservation exactly)
+            ok = self.scheduler.admit_remote(req, force=True)
+        if not ok:
+            # slots/memory busy: safe to park — running work is in flight
+            # and _finish_iteration drains the queue as capacity frees
+            self._pending_decode.append((req, handoff))
+            return
+        self.backend.import_kv(req, handoff)
+        self._kick()
+
+    def _drain_pending_decode(self):
+        while self._pending_decode:
+            req, handoff = self._pending_decode[0]
+            ok = self.scheduler.admit_remote(req)
+            if not ok and not self.scheduler.running:
+                ok = self.scheduler.admit_remote(req, force=True)
+            if not ok:
+                break
+            self._pending_decode.popleft()
+            self.backend.import_kv(req, handoff)
+
+    # ---- failures / elasticity ----
+    def fail(self) -> List[SimRequest]:
+        """Node failure: drop in-flight state, return requests to re-route."""
+        self.alive = False
+        self.busy = False
+        orphans = self.scheduler.requeue_all()
+        for req, _ in self._pending_decode:
+            # parked P/D arrivals lost their KV too: full restart elsewhere
+            req.prefill_done_tokens = 0
+            req.generated = 0
+            req.n_restarts += 1
+            orphans.append(req)
+        self._pending_decode.clear()
+        for req in orphans:
+            # release radix pins so a (possibly shared) cache stays evictable
+            self._unpin(req)
+        self.backend.reset()
+        return orphans
+
+    def revive(self):
+        self.alive = True
+        self._kick()
+
+    def load(self) -> float:
+        """Router load signal: queue depth + memory pressure."""
+        return (len(self.scheduler.waiting) + len(self.scheduler.running)
+                + len(self._pending_decode) + 2.0 * self.mem.utilization())
+
+    def stats(self) -> dict:
+        s = {"iterations": self.iterations, "tokens": self.total_tokens,
+             "busy_s": self.busy_time, "backend": self.backend.name,
+             "preemptions": self.scheduler.n_preemptions,
+             "mem_peak_blocks": self.mem.peak_used}
+        if self.cache is not None:
+            s["prefix_cache"] = self.cache.stats()
+        s.update(self.backend.stats())
+        return s

@@ -1,0 +1,181 @@
+"""Radix-tree prefix cache (RadixAttention-style) with tiered eviction.
+
+Paper §II-D: each request does a longest-prefix match; hits insert
+memory-transfer events (if the blocks live in a lower tier) instead of
+prefill compute; after prefill the new prefix is inserted; capacity pressure
+evicts LRU leaves, spilling to host (and optionally SSD) rather than
+discarding. Supports per-instance and global scopes and a pluggable
+eviction policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.config import PrefixCacheCfg
+from repro.core.memory import MemoryModel
+
+
+class _Node:
+    __slots__ = ("key", "children", "parent", "tokens", "tier",
+                 "last_access", "ref_count", "node_id")
+    _ids = itertools.count()
+
+    def __init__(self, key: Tuple[int, ...], parent: Optional["_Node"]):
+        self.key = key                  # token block (length <= block_tokens)
+        self.children: Dict[int, "_Node"] = {}
+        self.parent = parent
+        self.tokens = len(key)
+        self.tier = "device"
+        self.last_access = 0.0
+        self.ref_count = 0              # pinned by running requests
+        self.node_id = next(self._ids)
+
+
+@dataclasses.dataclass
+class MatchResult:
+    tokens: int                      # matched prefix length (tokens)
+    device_tokens: int               # portion already in device HBM
+    lower_tier_bytes: float          # bytes to fetch from host/ssd
+    nodes: List[_Node] = dataclasses.field(default_factory=list)
+
+
+class RadixPrefixCache:
+    """Block-granular radix tree over token-id sequences."""
+
+    def __init__(self, cfg: PrefixCacheCfg, mem: MemoryModel,
+                 name: str = "cache"):
+        self.cfg = cfg
+        self.mem = mem
+        self.name = name
+        self.root = _Node((), None)
+        self.block = cfg.block_tokens
+        self.n_device_blocks = 0
+        self.n_host_blocks = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.capacity_blocks = mem.cache_capacity_blocks(
+            cfg.capacity_fraction)
+
+    # ---- lookup ----
+    def match(self, tokens: Sequence[int], now: float) -> MatchResult:
+        node = self.root
+        matched: List[_Node] = []
+        i = 0
+        n = len(tokens)
+        while i + self.block <= n:
+            blk = tuple(tokens[i: i + self.block])
+            child = node.children.get(hash(blk))
+            if child is None or child.key != blk:
+                break
+            child.last_access = now
+            matched.append(child)
+            node = child
+            i += self.block
+        dev = sum(nd.tokens for nd in matched if nd.tier == "device")
+        lower = sum(nd.tokens for nd in matched if nd.tier != "device")
+        if matched:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return MatchResult(
+            tokens=i, device_tokens=dev,
+            lower_tier_bytes=lower * self.mem.kv_bytes_per_token,
+            nodes=matched)
+
+    def pin(self, nodes: List[_Node]):
+        for nd in nodes:
+            nd.ref_count += 1
+
+    def unpin(self, nodes: List[_Node]):
+        for nd in nodes:
+            nd.ref_count = max(0, nd.ref_count - 1)
+
+    # ---- insertion ----
+    def insert(self, tokens: Sequence[int], now: float) -> int:
+        """Insert prefix blocks; returns #blocks newly placed on device."""
+        node = self.root
+        i = 0
+        new_blocks = 0
+        n = len(tokens)
+        while i + self.block <= n:
+            blk = tuple(tokens[i: i + self.block])
+            child = node.children.get(hash(blk))
+            if child is None or child.key != blk:
+                child = _Node(blk, node)
+                node.children[hash(blk)] = child
+                if not self._reserve_device_block(now):
+                    del node.children[hash(blk)]
+                    break
+                new_blocks += 1
+                self.n_device_blocks += 1
+            child.last_access = now
+            node = child
+            i += self.block
+        return new_blocks
+
+    def promote(self, nodes: List[_Node], now: float):
+        """Bring lower-tier nodes back to device (caller pays transfer)."""
+        for nd in nodes:
+            if nd.tier != "device":
+                if self._reserve_device_block(now):
+                    if nd.tier == "host":
+                        self.n_host_blocks -= 1
+                    nd.tier = "device"
+                    self.n_device_blocks += 1
+
+    # ---- eviction ----
+    def _reserve_device_block(self, now: float) -> bool:
+        if self.n_device_blocks >= self.capacity_blocks or \
+                not self.mem.borrow_for_cache(1):
+            if not self._evict_one(now):
+                return False
+            return self.mem.borrow_for_cache(1)
+        return True
+
+    def _evict_one(self, now: float) -> bool:
+        """LRU leaf eviction; device -> host spill (or drop)."""
+        victim: Optional[_Node] = None
+        stack = [self.root]
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            if nd is self.root or nd.children or nd.ref_count > 0:
+                continue
+            if nd.tier != "device":
+                continue
+            if victim is None or nd.last_access < victim.last_access:
+                victim = nd
+        if victim is None:
+            return False
+        self.evictions += 1
+        self.n_device_blocks -= 1
+        self.mem.return_from_cache(1)
+        if self.cfg.host_spill and \
+                self.mem.host.used + self.mem.bytes_per_block \
+                <= self.mem.host.capacity:
+            victim.tier = "host"
+            self.n_host_blocks += 1
+            self.mem.host.used += self.mem.bytes_per_block
+        else:
+            parent = victim.parent
+            if parent:
+                parent.children.pop(hash(victim.key), None)
+        return True
+
+    def release_pressure(self, blocks_needed: int, now: float) -> int:
+        """Evict until ``blocks_needed`` device blocks were freed."""
+        freed = 0
+        while freed < blocks_needed and self._evict_one(now):
+            freed += 1
+        return freed
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0,
+                "device_blocks": self.n_device_blocks,
+                "host_blocks": self.n_host_blocks,
+                "evictions": self.evictions}

@@ -1,0 +1,301 @@
+"""Iteration-level batch scheduler (vLLM-style continuous batching).
+
+Backend-agnostic: each call to ``next_batch`` composes one engine iteration
+from the running set + waiting queue under token/size budgets, with optional
+chunked prefill (Sarathi-style) and preemption on memory pressure.  The same
+instance drives both the discrete-event simulator and the real JAX engine —
+backends only differ in how the returned ``ScheduledWork`` list is executed.
+
+Preemption policy: memory pressure from decode growth recycles the longest-
+context running request (its KV is freed; it restarts from the prefix cache
+/ full prefill).  Requests whose work is already composed into the current
+batch are never evicted mid-composition, and new admissions defer to
+in-flight work rather than evicting it — mutual eviction livelocks.
+
+KV block accounting is exact: every admission records its reservation in a
+per-request ledger, decode extensions grow the reservation as the context
+grows, and completion/preemption/requeue free exactly what was reserved —
+never ``context + output//4`` recomputed after the fact (which silently
+over-freed the pool as decode advanced).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, Iterator, List, Optional
+
+from repro.core.config import SchedulerCfg
+from repro.core.memory import MemoryModel
+from repro.core.perfmodel import BatchItem
+from repro.core.request import (DECODING, PREFILLING, QUEUED, SimRequest)
+
+
+@dataclasses.dataclass
+class ScheduledWork:
+    request: SimRequest
+    tokens: int
+    phase: str
+
+
+class WaitQueue:
+    """Policy-ordered wait queue.
+
+    A single heap replaces the old re-sort-the-whole-deque-per-enqueue SJF
+    path: O(log n) per push instead of O(n log n).  ``push_front`` (preempted
+    requests go back to the head) sorts before every normal entry, LIFO among
+    themselves, matching the old ``appendleft`` semantics.
+    """
+
+    def __init__(self, policy: str = "fcfs"):
+        self.policy = policy
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+
+    def _key(self, req: SimRequest) -> int:
+        if self.policy == "sjf":
+            return req.remaining_prefill        # shortest prompt first
+        return 0                                # fcfs / priority: arrival order
+
+    def push(self, req: SimRequest):
+        heapq.heappush(self._heap, (self._key(req), next(self._seq), req))
+
+    def push_front(self, req: SimRequest):
+        heapq.heappush(self._heap, (-1, -next(self._seq), req))
+
+    def peek(self) -> SimRequest:
+        return self._heap[0][2]
+
+    def pop(self) -> SimRequest:
+        return heapq.heappop(self._heap)[2]
+
+    def clear(self):
+        self._heap.clear()
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __iter__(self) -> Iterator[SimRequest]:
+        return (entry[2] for entry in self._heap)
+
+
+class BatchScheduler:
+    def __init__(self, cfg: SchedulerCfg, mem: MemoryModel):
+        self.cfg = cfg
+        self.mem = mem
+        self.waiting = WaitQueue(cfg.policy)
+        self.running: List[SimRequest] = []
+        self.n_preemptions = 0
+        # exact KV accounting: req_id -> blocks currently reserved
+        self._reserved: Dict[int, int] = {}
+        # wired by the instance: free backend-side state on preemption
+        self.on_preempt: Optional[Callable[[SimRequest], None]] = None
+
+    def enqueue(self, req: SimRequest):
+        self.waiting.push(req)
+
+    # ---- KV block ledger ----
+    def _reserve_tokens(self, req: SimRequest, tokens: int) -> bool:
+        """Grow ``req``'s reservation to cover ``tokens``; True on success."""
+        need = self.mem.blocks_for(tokens)
+        have = self._reserved.get(req.req_id, 0)
+        if need <= have:
+            return True
+        if not self.mem.allocate_blocks(need - have):
+            return False
+        self._reserved[req.req_id] = need
+        return True
+
+    def _release(self, req: SimRequest):
+        blocks = self._reserved.pop(req.req_id, 0)
+        if blocks:
+            self.mem.release_blocks(blocks)
+
+    def reserved_blocks(self, req: SimRequest) -> int:
+        return self._reserved.get(req.req_id, 0)
+
+    def _try_admit(self, req: SimRequest) -> bool:
+        """Reserve KV blocks for prompt + a slice of the expected output."""
+        need = req.remaining_prefill + req.cached_prefix + req.output_len // 4
+        return self._reserve_tokens(req, need)
+
+    def _tokens_held(self, req: SimRequest) -> int:
+        """Tokens whose KV this request holds right now."""
+        return req.cached_prefix + req.prefill_done_tokens + req.generated
+
+    def _preempt_one(self, protected=()) -> Optional[SimRequest]:
+        """Evict the longest-context running request not in ``protected``
+        (requests already scheduled in the batch being composed must never
+        be preempted: their work items are about to execute)."""
+        pool = [r for r in self.running if r not in protected]
+        if not pool:
+            return None
+        victim = max(pool, key=lambda r: r.context_len)
+        self._preempt(victim)
+        return victim
+
+    def _preempt(self, victim: SimRequest):
+        self.running.remove(victim)
+        self._release(victim)
+        victim.state = QUEUED
+        victim.n_preemptions += 1
+        victim.prefill_done_tokens = 0
+        victim.generated = 0        # conservatively restart decoding state
+        if self.on_preempt is not None:
+            self.on_preempt(victim)
+        self.waiting.push_front(victim)
+        self.n_preemptions += 1
+
+    def _ensure_decode_capacity(self, req: SimRequest, protected) -> bool:
+        """Grow the reservation for the next decode token; preempt (others
+        first, then ``req`` itself) under memory pressure."""
+        need = self._tokens_held(req) + 1
+        while not self._reserve_tokens(req, need):
+            if self._preempt_one(protected=protected) is None:
+                self._preempt(req)
+                return False
+        return True
+
+    def next_batch(self) -> List[ScheduledWork]:
+        cfg = self.cfg
+        if cfg.prefill_exclusive:
+            return self._next_batch_exclusive()
+        work: List[ScheduledWork] = []
+        scheduled: List[SimRequest] = []   # never preempt these: their work
+        tokens_left = cfg.max_batch_tokens  # items execute this iteration
+
+        # 1. decode steps for all running decode-phase requests
+        for req in list(self.running):
+            if req.state == DECODING and tokens_left > 0:
+                if not self._ensure_decode_capacity(
+                        req, protected=scheduled + [req]):
+                    continue
+                work.append(ScheduledWork(req, 1, "decode"))
+                scheduled.append(req)
+                tokens_left -= 1
+
+        # 2. continue chunked prefills already running
+        for req in list(self.running):
+            if req.state == PREFILLING and tokens_left > 0:
+                chunk = min(req.remaining_prefill,
+                            cfg.prefill_chunk if cfg.chunked_prefill
+                            else req.remaining_prefill,
+                            tokens_left)
+                if chunk > 0:
+                    work.append(ScheduledWork(req, chunk, "prefill"))
+                    scheduled.append(req)
+                    tokens_left -= chunk
+
+        # 3. admit new requests while budget remains
+        while self.waiting and tokens_left > 0 and \
+                len(self.running) < cfg.max_batch_size:
+            req = self.waiting.peek()
+            if not self._try_admit(req):
+                # memory pressure: admission defers to in-flight work (a
+                # request already composed into this batch is never evicted
+                # for a newcomer — mutual eviction livelocks); preemption
+                # recycles memory for decode growth instead, so newcomers
+                # wait for completions to free blocks
+                if not self.running or \
+                        self._preempt_one(protected=scheduled) is None:
+                    break
+                if not self._try_admit(req):
+                    break
+            self.waiting.pop()
+            req.state = PREFILLING
+            self.running.append(req)
+            chunk = min(req.remaining_prefill,
+                        cfg.prefill_chunk if cfg.chunked_prefill
+                        else req.remaining_prefill,
+                        tokens_left)
+            chunk = max(chunk, 0)
+            if chunk > 0:
+                work.append(ScheduledWork(req, chunk, "prefill"))
+                scheduled.append(req)
+                tokens_left -= chunk
+            elif req.remaining_prefill == 0:
+                # fully prefix-cached prompt: go straight to decode
+                req.state = DECODING
+                work.append(ScheduledWork(req, 1, "decode"))
+                scheduled.append(req)
+                tokens_left -= 1
+        return work
+
+    def _next_batch_exclusive(self) -> List[ScheduledWork]:
+        """ServingEngine semantics: one whole-prompt prefill OR all decodes."""
+        cfg = self.cfg
+        if self.waiting and len(self.running) < cfg.max_batch_size:
+            req = self.waiting.peek()
+            if self._try_admit(req):
+                self.waiting.pop()
+                req.state = PREFILLING
+                self.running.append(req)
+                n = req.remaining_prefill
+                if n > 0:
+                    return [ScheduledWork(req, n, "prefill")]
+                req.state = DECODING
+        work = []
+        for req in list(self.running):
+            if req.state == DECODING and self._ensure_decode_capacity(
+                    req, protected=[w.request for w in work] + [req]):
+                work.append(ScheduledWork(req, 1, "decode"))
+        return work
+
+    def admit_remote(self, req: SimRequest, force: bool = False) -> bool:
+        """P/D decode-side admission: KV already transferred; reserve blocks
+        and join the running set (False when slots/memory are exhausted).
+        ``force`` admits on an otherwise-idle scheduler with whatever blocks
+        are left (slot capacity is still respected — it is physical)."""
+        if len(self.running) >= self.cfg.max_batch_size:
+            return False
+        tokens = self._tokens_held(req) + req.output_len // 4
+        if not self._reserve_tokens(req, tokens):
+            if not force:
+                return False
+            got = min(self.mem.blocks_for(tokens), self.mem.free_blocks)
+            if got > 0:
+                self.mem.allocate_blocks(got)
+            self._reserved[req.req_id] = \
+                self._reserved.get(req.req_id, 0) + got
+        self.running.append(req)
+        return True
+
+    def complete(self, req: SimRequest):
+        if req in self.running:
+            self.running.remove(req)
+        self._release(req)
+
+    def requeue_all(self) -> List[SimRequest]:
+        """Node failure: return every in-flight request for re-dispatch."""
+        out = list(self.running) + list(self.waiting)
+        for r in self.running:
+            self._release(r)
+            r.state = QUEUED
+            r.prefill_done_tokens = 0
+            r.generated = 0
+            r.n_restarts += 1
+        self.running.clear()
+        self.waiting.clear()
+        self._reserved.clear()
+        return out
+
+    def to_batch_items(self, work: List[ScheduledWork]) -> List[BatchItem]:
+        return to_batch_items(work)
+
+
+def to_batch_items(work: List[ScheduledWork]) -> List[BatchItem]:
+    """PerfModel view of scheduled work (shared by scheduler + SimBackend)."""
+    return [BatchItem(tokens=w.tokens,
+                      context=w.request.context_len + w.tokens
+                      if w.phase == "prefill"
+                      else w.request.context_len + 1,
+                      phase=w.phase,
+                      start=(w.request.cached_prefix
+                             + w.request.prefill_done_tokens)
+                      if w.phase == "prefill" else 0,
+                      completes=(w.phase != "prefill"
+                                 or w.tokens >= w.request.remaining_prefill))
+            for w in work]

@@ -1,10 +1,16 @@
-"""Multi-instance serving driver: real compute, virtual time.
+"""Multi-instance real-engine driver: real compute, virtual time.
 
-Orchestrates N ``ServingEngine`` instances + a router + optional P/D wiring
-as a discrete-event loop over *virtual* clocks: at each step the
-earliest-available engine with work runs ONE real iteration (wall-clock
-measured) and its clock advances by the measured latency. Instances thus
-behave as if they ran in parallel. KV transfers between instances cost
+A thin wrapper over the unified ``ServingRuntime``: N ``ServingEngine``
+instances become runtime instances with ``JaxBackend`` execution.  Routing
+uses the shared policy registry (``repro.runtime.router``), scheduling the
+shared ``BatchScheduler``, and P/D handoff the shared cluster orchestration
+— the exact code path the simulator runs, so fidelity comparisons isolate
+hardware-model error only.
+
+At each virtual instant the runtime picks the next event; an instance
+iteration runs ONE real (wall-clock measured) batch and schedules its
+completion at ``now + latency`` on the shared event queue, so instances
+behave as if they ran in parallel.  KV transfers between instances cost
 bytes/bw in virtual time (configurable, default PCIe-class).
 """
 from __future__ import annotations
@@ -12,132 +18,84 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.serve.engine import EngineRequest, ServingEngine
+from repro.core.config import (ENGINE_HW, ClusterCfg, InstanceCfg,
+                               NetworkCfg, PrefixCacheCfg, RouterCfg,
+                               SchedulerCfg, engine_scheduler_cfg)
+from repro.core.request import SimRequest
+from repro.runtime.backends.jax_engine import JaxBackend
+from repro.runtime.cluster import ServingRuntime
+from repro.serve.engine import ServingEngine
 from repro.workload.sharegpt import Request
+
+
+def engine_instance_cfg(engine: ServingEngine,
+                        scheduler: Optional[SchedulerCfg] = None,
+                        trace_name: Optional[str] = None) -> InstanceCfg:
+    """Runtime InstanceCfg mirroring a live ``ServingEngine``."""
+    from repro.profiler import model_spec_from_arch
+    spec = model_spec_from_arch(engine.cfg)
+    scheduler = scheduler or engine_scheduler_cfg(engine.max_batch)
+    if scheduler.max_batch_size > engine.max_batch:
+        # the engine's slot count is a physical limit; an oversized batch
+        # would crash slot allocation mid-run
+        scheduler = dataclasses.replace(scheduler,
+                                        max_batch_size=engine.max_batch)
+    return InstanceCfg(
+        name=engine.name, hw=ENGINE_HW, model=spec, n_devices=1,
+        role=engine.role,
+        scheduler=scheduler,
+        prefix_cache=PrefixCacheCfg(
+            enabled=engine.radix is not None,
+            block_tokens=engine.radix.block if engine.radix else 16,
+            capacity_fraction=0.5),
+        trace_name=trace_name)
 
 
 @dataclasses.dataclass
 class DriverCfg:
-    router: str = "round_robin"         # round_robin | least_loaded
+    router: str = "round_robin"         # any registered routing policy
     kv_transfer_bw: float = 16e9        # bytes/s for P/D handoff
     kv_transfer_latency: float = 10e-6
+    # None -> ServingEngine-matched semantics; pass any SchedulerCfg to give
+    # the real engine chunked prefill / SJF / preemption etc.
+    scheduler: Optional[SchedulerCfg] = None
 
 
 class ServeDriver:
     def __init__(self, engines: List[ServingEngine],
                  cfg: DriverCfg = DriverCfg(),
                  pd_map: Optional[Dict[str, Tuple[str, ...]]] = None):
-        self.engines = {e.name: e for e in engines}
         self.cfg = cfg
-        self.pd_map = pd_map or {}
-        self._rr = 0
-        self.finished: List[EngineRequest] = []
-        for e in engines:
-            e.on_request_done = self._done
-        for pname, dnames in self.pd_map.items():
-            p = self.engines[pname]
-            p.on_prefill_done = self._make_handoff(
-                [self.engines[d] for d in dnames])
+        self.engines = {e.name: e for e in engines}
+        ccfg = ClusterCfg(
+            instances=tuple(engine_instance_cfg(e, cfg.scheduler)
+                            for e in engines),
+            router=RouterCfg(cfg.router),
+            network=NetworkCfg(inter_instance_bw=cfg.kv_transfer_bw,
+                               inter_instance_latency=cfg.kv_transfer_latency),
+            pd_map=pd_map)
+        self.runtime = ServingRuntime(
+            ccfg,
+            backend_factory=lambda icfg, trace: JaxBackend(
+                self.engines[icfg.name], icfg))
 
-    def _done(self, ereq: EngineRequest):
-        self.finished.append(ereq)
-
-    def _make_handoff(self, targets: List[ServingEngine]):
-        def handoff(src: ServingEngine, ereq: EngineRequest, kv: dict,
-                    length: int, first_tok: int, _targets=targets):
-            tgt = min(_targets, key=lambda e: len(e.slot_req))
-            nbytes = sum(v.nbytes for v in _flat_np(kv))
-            t_xfer = self.cfg.kv_transfer_latency + nbytes / \
-                self.cfg.kv_transfer_bw
-            # decode instance can't start this request before the KV lands
-            tgt.now = max(tgt.now, src.now + t_xfer)
-            tgt.admit_with_kv(ereq, kv, length, first_tok)
-        return handoff
-
-    def _route(self, req: Request) -> ServingEngine:
-        cands = [e for e in self.engines.values()
-                 if e.role in ("unified", "prefill")]
-        if self.cfg.router == "least_loaded":
-            return min(cands, key=lambda e: len(e.slot_req)
-                       + len(e.waiting))
-        e = cands[self._rr % len(cands)]
-        self._rr += 1
-        return e
+    @property
+    def finished(self) -> List[SimRequest]:
+        return self.runtime.finished
 
     def run(self, requests: Sequence[Request], warmup: bool = True) -> dict:
         if warmup:
-            for e in self.engines.values():
-                e.warmup()
-        pending = sorted(requests, key=lambda r: r.arrival)
-        pi = 0
-        reqmap: Dict[int, EngineRequest] = {}
-        n_total = len(pending)
-        guard = 0
-        while len(self.finished) < n_total and guard < 10_000_000:
-            guard += 1
-            # 1. deliver arrivals up to the earliest engine clock
-            busy_engines = [e for e in self.engines.values() if e.has_work()]
-            t_min = min((e.now for e in busy_engines), default=None)
-            while pi < len(pending) and (
-                    t_min is None or pending[pi].arrival <= t_min
-                    or not busy_engines):
-                r = pending[pi]
-                eng = self._route(r)
-                eng.now = max(eng.now, r.arrival)
-                eng.submit(r)
-                pi += 1
-                busy_engines = [e for e in self.engines.values()
-                                if e.has_work()]
-                t_min = min((e.now for e in busy_engines), default=None)
-            # 2. step the earliest engine that has work
-            if not busy_engines:
-                if pi < len(pending):
-                    continue
-                break
-            eng = min(busy_engines, key=lambda e: e.now)
-            eng.step()
-        return self.metrics()
+            self.runtime.warmup()
+        self.runtime.submit_workload(requests)
+        return self._augment(self.runtime.run())
 
     def metrics(self) -> dict:
-        done = self.finished
-        if not done:
-            return {"finished": 0}
-        ttft = np.array([e.t_first - e.req.arrival for e in done
-                         if e.t_first is not None])
-        tpot = np.array([(e.t_finish - e.t_first) / max(e.generated - 1, 1)
-                         for e in done if e.t_finish and e.t_first
-                         and e.generated > 1])
-        itls = [np.diff(e.token_times) for e in done
-                if len(e.token_times) > 1]
-        itls = np.concatenate(itls) if itls else np.array([0.0])
-        t_end = max(e.t_finish for e in done)
-        t0 = min(e.req.arrival for e in done)
-        out_tokens = sum(e.generated for e in done)
-        m = {"finished": len(done),
-             "ttft_mean_s": float(ttft.mean()) if ttft.size else None,
-             "tpot_mean_s": float(tpot.mean()) if tpot.size else None,
-             "itl_mean_s": float(itls.mean()),
-             "throughput_tok_s": out_tokens / max(t_end - t0, 1e-9),
-             "makespan_s": t_end - t0}
-        for name, e in self.engines.items():
-            if e.radix is not None:
-                m[f"{name}_cache_hits"] = e.radix.hits
-                m[f"{name}_cache_misses"] = e.radix.misses
+        return self._augment(self.runtime.metrics())
+
+    def _augment(self, m: dict) -> dict:
+        for name, stats in m.get("instances", {}).items():
+            cache = stats.get("prefix_cache")
+            if cache:
+                m[f"{name}_cache_hits"] = cache["hits"]
+                m[f"{name}_cache_misses"] = cache["misses"]
         return m
-
-
-def _flat_np(tree):
-    out = []
-    if isinstance(tree, dict):
-        for k, v in tree.items():
-            if k.startswith("_length"):
-                continue
-            out.extend(_flat_np(v))
-    elif isinstance(tree, (list, tuple)):
-        for v in tree:
-            out.extend(_flat_np(v))
-    else:
-        out.append(np.asarray(tree))
-    return out

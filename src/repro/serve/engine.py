@@ -58,9 +58,14 @@ class RealRadixCache:
         self.hits = 0
         self.misses = 0
 
-    def match(self, tokens) -> Tuple[int, Optional[dict]]:
+    def match(self, tokens,
+              limit: Optional[int] = None) -> Tuple[int, Optional[dict]]:
+        """Longest stored prefix of ``tokens`` (optionally capped at
+        ``limit`` tokens, e.g. the runtime's radix-tree match length)."""
         best_len, best = 0, None
         n = (len(tokens) // self.block) * self.block
+        if limit is not None:
+            n = min(n, (limit // self.block) * self.block)
         for l in range(n, 0, -self.block):
             key = tuple(tokens[:l])
             if key in self.store:

@@ -1,8 +1,12 @@
 """Hypothesis property tests on system invariants."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property tests skipped")
+import hypothesis.strategies as st          # noqa: E402
+from hypothesis import given, settings      # noqa: E402
 
 from repro.core.config import (InstanceCfg, ModelSpec, PrefixCacheCfg,
                                SchedulerCfg, TPU_V5E)
