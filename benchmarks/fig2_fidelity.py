@@ -18,7 +18,7 @@ from benchmarks.common import (DENSE_TINY, MOE_TINY, engine_matched_instance,
 from repro.configs import get_config
 from repro.core import ClusterCfg, NetworkCfg, RouterCfg, TraceRegistry, \
     simulate
-from repro.profiler.engine_profiler import engine_trace
+from repro.profiler.runtime_profiler import runtime_trace
 from repro.serve import DriverCfg, ServeDriver, ServingEngine
 from repro.workload import ShareGPTConfig, generate
 
@@ -77,7 +77,7 @@ def run(quick: bool = False):
     registry = TraceRegistry()
     traces = {}
     for arch in (DENSE_TINY, MOE_TINY):
-        tr = engine_trace(arch, max_batch=4, max_len=512)
+        tr = runtime_trace(arch, max_batch=4, max_len=512).to_trace()
         registry.register(arch, tr)
         traces[arch] = tr.meta
 

@@ -1,0 +1,109 @@
+"""Heterogeneous-cluster sweep: mixed accelerators under one router.
+
+Prices the same workload on clusters that mix hardware by name
+(``InstanceCfg.hw_name`` -> ``repro.hw`` registry traces), sweeping:
+
+* homogeneous baselines (all-GPU, all-TPU),
+* a mixed fleet under each routing policy (round_robin vs least_loaded vs
+  hardware_aware) — quantifying what throughput-weighted routing buys,
+* P/D disaggregation with GPU-class prefill + TPU-class decode instances
+  (and the swap), the paper's mixed-accelerator headline scenario.
+
+  PYTHONPATH=src python benchmarks/hetero_cluster.py [--quick]
+  PYTHONPATH=src python benchmarks/hetero_cluster.py --traces traces/
+
+With ``--traces`` any profiled HardwareTrace artifacts in the directory
+override the synthetic fallback for their device names.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.core import (ClusterCfg, InstanceCfg, RouterCfg, SchedulerCfg,
+                        simulate)
+from repro.hw import HardwareRegistry
+from repro.profiler import model_spec_from_arch
+from repro.workload import ShareGPTConfig, generate
+
+ARCH = "llama3.1-8b-tiny"
+
+
+def inst(name: str, hw_name: str, model, role: str = "unified",
+         max_batch: int = 16) -> InstanceCfg:
+    return InstanceCfg(
+        name=name, hw=None, model=model, role=role, hw_name=hw_name,
+        scheduler=SchedulerCfg(max_batch_size=max_batch,
+                               max_batch_tokens=4096,
+                               chunked_prefill=True, prefill_chunk=512))
+
+
+def run_cluster(label: str, instances, router: str, reqs, hw,
+                pd_map=None) -> dict:
+    cfg = ClusterCfg(instances=tuple(instances),
+                     router=RouterCfg(router, model_affinity=False),
+                     pd_map=pd_map)
+    m = simulate(cfg, reqs, hw=hw)
+    per_inst = {n: {"hw": s["hw"], "tokens": s["tokens"],
+                    "busy_s": round(s["busy_s"], 4)}
+                for n, s in m["instances"].items()}
+    row = {"cluster": label, "router": router,
+           "throughput_tok_s": round(m["throughput_tok_s"], 1),
+           "ttft_mean_ms": round((m.get("ttft_mean_s") or 0) * 1e3, 2),
+           "instances": per_inst}
+    print(f"{label:28s} router={router:14s} "
+          f"tput={row['throughput_tok_s']:10.1f} tok/s", flush=True)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--traces", default=None,
+                    help="directory of HardwareTrace artifacts to load")
+    ap.add_argument("--n", type=int, default=None)
+    args = ap.parse_args()
+
+    hw = HardwareRegistry()
+    if args.traces:
+        print("loaded traces:", hw.load_dir(args.traces))
+
+    model = model_spec_from_arch(get_config(ARCH))
+    n = args.n or (60 if args.quick else 200)
+    reqs = generate(ShareGPTConfig(
+        n_requests=n, rate=200.0, vocab=get_config(ARCH).vocab,
+        mean_prompt=300, mean_output=60, max_prompt=2000, max_output=200))
+
+    rows = []
+    # homogeneous baselines
+    rows.append(run_cluster(
+        "2x rtx3090", [inst("g0", "rtx3090", model),
+                       inst("g1", "rtx3090", model)],
+        "round_robin", reqs, hw))
+    rows.append(run_cluster(
+        "2x tpu-v6e", [inst("t0", "tpu-v6e", model),
+                       inst("t1", "tpu-v6e", model)],
+        "round_robin", reqs, hw))
+    # mixed fleet: routing policy sweep
+    mixed = [inst("g0", "rtx3090", model), inst("t0", "tpu-v6e", model)]
+    for router in ("round_robin", "least_loaded", "hardware_aware"):
+        rows.append(run_cluster("rtx3090 + tpu-v6e", mixed, router,
+                                reqs, hw))
+    if not args.quick:
+        # P/D disaggregation across accelerator classes
+        rows.append(run_cluster(
+            "PD: gpu prefill, tpu decode",
+            [inst("p0", "rtx3090", model, role="prefill"),
+             inst("d0", "tpu-v6e", model, role="decode")],
+            "round_robin", reqs, hw, pd_map={"p0": ("d0",)}))
+        rows.append(run_cluster(
+            "PD: tpu prefill, gpu decode",
+            [inst("p0", "tpu-v6e", model, role="prefill"),
+             inst("d0", "rtx3090", model, role="decode")],
+            "round_robin", reqs, hw, pd_map={"p0": ("d0",)}))
+    print(json.dumps({"rows": rows}, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

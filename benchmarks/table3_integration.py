@@ -40,7 +40,8 @@ def _loc(path: str) -> int:
 def run():
     base = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
     integration_files = [
-        os.path.join(base, "profiler", "hw_specs.py"),
+        os.path.join(base, "hw", "specs.py"),
+        os.path.join(base, "hw", "synthetic.py"),
         os.path.join(base, "profiler", "operator_profiler.py"),
     ]
     loc = sum(_loc(f) for f in integration_files)

@@ -8,7 +8,7 @@ import json
 
 from repro.configs import get_config
 from repro.core import ClusterCfg, RouterCfg, TraceRegistry, simulate
-from repro.profiler.engine_profiler import engine_trace
+from repro.profiler.runtime_profiler import runtime_trace
 from repro.serve import DriverCfg, ServeDriver, ServingEngine
 from repro.workload import ShareGPTConfig, generate
 
@@ -29,7 +29,9 @@ def main():
 
     print("== simulator replay (trace-driven) ==")
     registry = TraceRegistry()
-    registry.register(ARCH, engine_trace(ARCH, max_batch=4, max_len=512))
+    registry.register(ARCH,
+                      runtime_trace(ARCH, max_batch=4, max_len=512)
+                      .to_trace())
     from repro.serve.driver import engine_instance_cfg
     # identical policy stack (runtime scheduler/router); only the
     # ExecutionBackend differs — SimBackend prices what JaxBackend ran

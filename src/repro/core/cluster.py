@@ -6,7 +6,7 @@ path, different ``ExecutionBackend``.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, Optional, Sequence
 
 from repro.core.config import ClusterCfg
 from repro.core.trace import TraceRegistry
@@ -14,19 +14,24 @@ from repro.runtime.backends.sim import SimBackend
 from repro.runtime.cluster import ServingRuntime
 from repro.workload.sharegpt import Request
 
+if TYPE_CHECKING:
+    from repro.hw.registry import HardwareRegistry
+
 
 class Cluster(ServingRuntime):
     def __init__(self, cfg: ClusterCfg,
-                 traces: Optional[TraceRegistry] = None):
+                 traces: Optional[TraceRegistry] = None,
+                 hw: Optional["HardwareRegistry"] = None):
         super().__init__(
             cfg,
             backend_factory=lambda icfg, trace: SimBackend(icfg, trace=trace),
-            traces=traces)
+            traces=traces, hw=hw)
 
 
 def simulate(cfg: ClusterCfg, requests: Sequence[Request],
              traces: Optional[TraceRegistry] = None,
+             hw: Optional["HardwareRegistry"] = None,
              until: Optional[float] = None) -> Dict:
-    cluster = Cluster(cfg, traces=traces)
+    cluster = Cluster(cfg, traces=traces, hw=hw)
     cluster.submit_workload(requests)
     return cluster.run(until=until)

@@ -138,6 +138,13 @@ class InstanceCfg:
     role: str = "unified"            # unified | prefill | decode
     kv_block_tokens: int = 16        # PagedAttention block size
     trace_name: Optional[str] = None  # perf-model trace to use
+    # hardware by name: resolved through the repro.hw registry at instance
+    # build time (measured HardwareTrace if one is loaded, synthetic
+    # analytical trace otherwise).  Lets one cluster mix accelerators —
+    # e.g. GPU-class prefill + TPU-class decode instances (docs/
+    # adding-hardware.md).  When set, the trace's embedded spec overrides
+    # ``hw`` so memory model and fallback pricing match the device.
+    hw_name: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

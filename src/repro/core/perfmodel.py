@@ -1,11 +1,21 @@
-"""Trace-driven performance model with analytical roofline fallback.
+"""Trace-consuming performance model.
 
-``iteration_latency`` prices one engine iteration (a batch of prefill chunks
-+ decode steps). When a profiler trace is registered for the instance, each
-operator class is interpolated from measured points (paper §II-A); ops not
-covered fall back to an analytical roofline from the hardware spec. The
-analytical path is also what the TPU "one-command integration" produces
-before any measurement exists.
+``iteration_latency`` prices one engine iteration (a batch of prefill
+chunks + decode steps) from a hardware trace, in fidelity order:
+
+1. **iter-level points** (``iter``/``extend``/``kv_export``) — whole
+   measured iterations captured by ``repro.profiler.runtime_profiler``
+   through the unified runtime's ``JaxBackend``; highest fidelity.
+2. **operator-level points** — per-op-class latencies interpolated over
+   the (tokens, context) grid (paper §II-A) and composed per layer.
+3. **analytical roofline** — per-query fallback from the hardware spec for
+   op/shape combos no trace covers.
+
+Traces arrive as portable ``repro.hw.HardwareTrace`` artifacts resolved by
+``InstanceCfg.hw_name`` (or raw ``Trace`` objects via ``trace_name``); for
+never-measured devices the registry synthesizes one from the same
+analytical model (``repro.hw.synthetic``), so this class is always a trace
+*consumer* — the roofline here only patches grid gaps.
 """
 from __future__ import annotations
 
@@ -91,7 +101,7 @@ class PerfModel:
         return b
 
     def _iter_level(self, items: List[BatchItem]) -> Optional[IterationCost]:
-        """Iteration-granularity trace lookup (engine_profiler points)."""
+        """Iteration-granularity trace lookup (runtime_profiler points)."""
         if self.trace is None:
             return None
         pre = [i for i in items if i.phase == "prefill"]

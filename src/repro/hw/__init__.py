@@ -1,0 +1,29 @@
+"""Hardware-trace pipeline: profiler artifacts -> registry -> perf models.
+
+``repro.hw`` owns the portable representation of "how fast is this device"
+(see ``docs/adding-hardware.md``):
+
+* :class:`HardwareTrace` — versioned JSON artifact: op -> latency table
+  over (tokens, context) buckets, interconnect params, optional device spec.
+* :class:`HardwareRegistry` / :data:`default_registry` — device name ->
+  trace resolution used by ``ServingRuntime`` for ``InstanceCfg.hw_name``,
+  with synthetic (analytical-roofline) fallback for never-measured devices.
+* :func:`synthetic_trace` — the analytical model as a trace generator.
+* ``specs`` — named ``HardwareSpec`` registry (rtx3090, tpu-v5e/v6e, pim,
+  cpu-host, cpu-engine, plus ``register_hw`` for new devices).
+
+This package is jax-free: the pure simulator prices heterogeneous clusters
+without importing the real-engine stack.
+"""
+from repro.hw.registry import (HardwareRegistry, default_registry,
+                               load_traces, register_trace)
+from repro.hw.specs import get_hw, known_hw, measured_cpu_spec, register_hw
+from repro.hw.synthetic import add_synthetic_points, synthetic_trace
+from repro.hw.trace import (SCHEMA_VERSION, HardwareTrace, InterconnectSpec)
+
+__all__ = [
+    "HardwareTrace", "InterconnectSpec", "SCHEMA_VERSION",
+    "HardwareRegistry", "default_registry", "register_trace", "load_traces",
+    "synthetic_trace", "add_synthetic_points",
+    "get_hw", "register_hw", "known_hw", "measured_cpu_spec",
+]

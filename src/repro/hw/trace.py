@@ -1,0 +1,168 @@
+"""Portable hardware-trace artifacts (the profiler <-> simulator contract).
+
+A ``HardwareTrace`` is the versioned, JSON-serializable artifact the
+profiler emits and the simulator's hardware registry consumes: one file per
+device describing everything the perf model needs to price a cluster
+instance on that hardware — the measured (or synthesized) operator-latency
+table, the interconnect parameters, and optionally the full device spec for
+off-grid analytical fallback.  Integrating a new accelerator is producing
+one of these files (``python -m repro.profiler profile --device <name>
+--out traces/<name>.json``) and referencing it from an ``InstanceCfg`` by
+``hw_name`` (see ``docs/adding-hardware.md``).
+
+JSON schema (version ``hwtrace/1``)::
+
+    {
+      "schema": "hwtrace/1",          # required; rejected on mismatch
+      "device": "tpu-v6e",            # hardware name (registry key)
+      "model": "llama3.1-8b-tiny",    # arch the op table was captured for
+      "tp": 1,                        # tensor-parallel degree of the capture
+      "interconnect": {               # network parameters of the device
+        "link_bw": 1.0e11,            #   bytes/s per intra-instance link
+        "host_bw": 1.6e10,            #   device<->host bytes/s
+        "inter_instance_bw": 2.5e10,  #   bytes/s between instances
+        "inter_instance_latency_s": 1.0e-5
+      },
+      "spec": {                       # optional full HardwareSpec: enables
+        "name": "tpu-v6e",            #   analytical fallback for op/shape
+        "peak_flops": 9.18e14,        #   combos outside the trace grid and
+        "hbm_bw": 1.6e12, ...         #   the paged KV memory model
+      },
+      "points": [                     # the op -> latency table over a
+        {"op": "iter",                #   (tokens x context) bucket grid;
+         "phase": "prefill",          #   op kinds: iter | extend |
+         "tokens": 64,                #   kv_export | attn_qkv | attn_score
+         "context": 64,               #   | mlp | moe_ffn | norm | head |
+         "latency_s": 0.0123}, ...    #   embed  (see repro.core.trace)
+      ],
+      "meta": {"mode": "runtime", "profile_wall_s": 12.3, ...}
+    }
+
+``points`` with op ``iter`` are whole-iteration measurements (highest
+fidelity tier, preferred by ``PerfModel``); operator-class points compose an
+iteration when no ``iter`` grid exists; anything else falls back to the
+device spec's analytical roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.core.config import HardwareSpec
+from repro.core.trace import OpPoint, Trace
+
+SCHEMA_VERSION = "hwtrace/1"
+
+
+@dataclasses.dataclass(frozen=True)
+class InterconnectSpec:
+    """Network parameters carried with a trace so heterogeneous cluster
+    configs inherit realistic transfer pricing per device."""
+    link_bw: float = 16e9                 # bytes/s per intra-instance link
+    host_bw: float = 16e9                 # device <-> host bytes/s
+    inter_instance_bw: float = 25e9       # bytes/s between instances
+    inter_instance_latency_s: float = 10e-6
+
+    @classmethod
+    def from_hw(cls, spec: HardwareSpec) -> "InterconnectSpec":
+        return cls(link_bw=spec.link_bw, host_bw=spec.host_bw)
+
+
+@dataclasses.dataclass
+class HardwareTrace:
+    """One device's portable performance artifact (see module docstring)."""
+
+    device: str
+    model: str
+    tp: int = 1
+    points: List[OpPoint] = dataclasses.field(default_factory=list)
+    interconnect: InterconnectSpec = \
+        dataclasses.field(default_factory=InterconnectSpec)
+    spec: Optional[HardwareSpec] = None
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    # ---- construction ----
+    def add(self, op: str, phase: str, tokens: int, context: int,
+            latency_s: float):
+        self.points.append(OpPoint(op, phase, int(tokens), int(context),
+                                   float(latency_s)))
+
+    @classmethod
+    def from_trace(cls, trace: Trace, *, device: Optional[str] = None,
+                   spec: Optional[HardwareSpec] = None,
+                   interconnect: Optional[InterconnectSpec] = None) \
+            -> "HardwareTrace":
+        """Wrap a raw perf-model ``Trace`` into a portable artifact."""
+        if interconnect is None:
+            interconnect = (InterconnectSpec.from_hw(spec) if spec
+                            else InterconnectSpec())
+        return cls(device=device or trace.hardware, model=trace.model,
+                   tp=trace.tp, points=list(trace.points),
+                   interconnect=interconnect, spec=spec,
+                   meta=dict(trace.meta))
+
+    def to_trace(self) -> Trace:
+        """The ``repro.core.trace.Trace`` view the ``PerfModel`` consumes."""
+        return Trace(model=self.model, hardware=self.device, tp=self.tp,
+                     points=list(self.points), meta=dict(self.meta))
+
+    # ---- validation ----
+    def validate(self):
+        if not self.device:
+            raise ValueError("HardwareTrace.device must be non-empty")
+        if self.tp < 1:
+            raise ValueError(f"HardwareTrace.tp must be >= 1, got {self.tp}")
+        for i, p in enumerate(self.points):
+            if p.tokens < 1 or p.context < 0:
+                raise ValueError(
+                    f"point {i} ({p.op}/{p.phase}) has invalid shape "
+                    f"tokens={p.tokens} context={p.context}")
+            if not p.latency_s > 0:
+                raise ValueError(
+                    f"point {i} ({p.op}/{p.phase}) has non-positive "
+                    f"latency {p.latency_s}")
+        return self
+
+    # ---- io ----
+    def save(self, path: str) -> str:
+        self.validate()
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        doc = {
+            "schema": SCHEMA_VERSION,
+            "device": self.device,
+            "model": self.model,
+            "tp": self.tp,
+            "interconnect": dataclasses.asdict(self.interconnect),
+            "spec": dataclasses.asdict(self.spec) if self.spec else None,
+            "points": [dataclasses.asdict(p) for p in self.points],
+            "meta": self.meta,
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "HardwareTrace":
+        with open(path) as f:
+            doc = json.load(f)
+        schema = doc.get("schema")
+        if schema != SCHEMA_VERSION:
+            raise ValueError(
+                f"{path}: unsupported hardware-trace schema {schema!r} "
+                f"(this build reads {SCHEMA_VERSION!r})")
+        for key in ("device", "points"):
+            if key not in doc:
+                raise ValueError(f"{path}: missing required key {key!r}")
+        spec = HardwareSpec(**doc["spec"]) if doc.get("spec") else None
+        try:
+            points = [OpPoint(**p) for p in doc["points"]]
+        except TypeError as e:
+            raise ValueError(f"{path}: malformed trace point: {e}") from e
+        hwt = cls(device=doc["device"], model=doc.get("model", "*"),
+                  tp=doc.get("tp", 1), points=points,
+                  interconnect=InterconnectSpec(**doc.get("interconnect",
+                                                          {})),
+                  spec=spec, meta=doc.get("meta", {}))
+        return hwt.validate()

@@ -1,8 +1,35 @@
-from repro.profiler.hw_specs import get_hw, measured_cpu_spec, register_hw
-from repro.profiler.operator_profiler import (OperatorProfiler,
-                                              ProfilerConfig,
-                                              model_spec_from_arch,
-                                              profile_arch)
+"""Operator- and iteration-level latency profilers.
 
-__all__ = ["get_hw", "measured_cpu_spec", "register_hw", "OperatorProfiler",
-           "ProfilerConfig", "model_spec_from_arch", "profile_arch"]
+Submodules are imported lazily (PEP 562) so trace-artifact tooling — e.g.
+``python -m repro.profiler profile --device tpu-v6e`` generating a
+*synthetic* trace — never pays the jax/engine import; only the measured
+paths (``runtime_trace``, ``OperatorProfiler`` in measured mode) do.
+"""
+_LAZY = {
+    # jax-free
+    "model_spec_from_arch": "repro.profiler.arch_spec",
+    "get_hw": "repro.hw.specs",
+    "register_hw": "repro.hw.specs",
+    "measured_cpu_spec": "repro.hw.specs",
+    # jax-importing (measured profilers)
+    "OperatorProfiler": "repro.profiler.operator_profiler",
+    "ProfilerConfig": "repro.profiler.operator_profiler",
+    "profile_arch": "repro.profiler.operator_profiler",
+    "runtime_trace": "repro.profiler.runtime_profiler",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(_LAZY[name])
+        value = getattr(mod, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -1,28 +1,139 @@
-"""CLI: the paper's single-command hardware integration.
+"""Profiler CLI: the paper's single-command hardware integration.
 
-  python -m repro.profiler --arch llama3.1-8b-tiny --mode measured
-  python -m repro.profiler --arch qwen3-8b --mode analytical --hw tpu-v6e
+Emit a portable ``HardwareTrace`` artifact for one device (measured through
+the unified runtime's JaxBackend on the local device, or synthesized from a
+hardware spec for devices you don't have):
+
+  # measure THIS machine through the real engine
+  python -m repro.profiler profile --device cpu-engine \
+      --arch llama3.1-8b-tiny --out traces/cpu-engine.json
+
+  # synthesize a never-measured accelerator from its spec sheet
+  python -m repro.profiler profile --device tpu-v6e \
+      --arch llama3.1-8b-tiny --out traces/tpu-v6e.json
+  python -m repro.profiler profile --device my-npu --peak-flops 200e12 \
+      --hbm-bw 1.2e12 --hbm-capacity 48e9 --link-bw 50e9 \
+      --arch llama3.1-8b-tiny --out traces/my-npu.json
+
+The artifact loads via ``repro.hw`` (``load_traces("traces/")``) and is
+referenced from cluster configs by ``InstanceCfg(hw_name="<device>")`` —
+see docs/adding-hardware.md for the full walkthrough.
+
+The operator-level profiler (raw ``Trace``, no artifact wrapper) remains as
+the ``ops`` subcommand; bare ``python -m repro.profiler --arch ...``
+invocations keep their legacy meaning (= ``ops``).
 """
 import argparse
 import json
+import sys
 
-from repro.profiler import profile_arch
+
+def _cmd_profile(args):
+    from repro.configs import get_config
+    from repro.core.config import HardwareSpec
+    from repro.hw import HardwareRegistry, get_hw, register_hw
+    from repro.profiler.arch_spec import model_spec_from_arch
+
+    import dataclasses
+    spec_flags = {k: getattr(args, k) for k in
+                  ("peak_flops", "hbm_bw", "hbm_capacity", "link_bw")}
+    if any(v is not None for v in spec_flags.values()):
+        missing = [k for k, v in spec_flags.items() if v is None]
+        if missing:
+            raise SystemExit(
+                f"defining a new device spec needs all of --peak-flops "
+                f"--hbm-bw --hbm-capacity --link-bw (missing: "
+                f"{', '.join('--' + m.replace('_', '-') for m in missing)})")
+        register_hw(HardwareSpec(
+            name=args.device,
+            mmu_efficiency=args.mmu_efficiency
+            if args.mmu_efficiency is not None else 0.85,
+            **spec_flags))
+    elif args.mmu_efficiency is not None:
+        # derate/uprate a known spec without redefining the whole device
+        register_hw(dataclasses.replace(
+            get_hw(args.device), mmu_efficiency=args.mmu_efficiency))
+
+    mode = args.mode
+    if mode == "auto":
+        mode = "measured" if args.device in ("cpu-engine", "local") \
+            else "synthetic"
+    if mode == "measured":
+        from repro.profiler.runtime_profiler import runtime_trace
+        hwt = runtime_trace(args.arch, device=args.device,
+                            max_batch=args.max_batch, max_len=args.max_len,
+                            reps=args.reps, seed=args.seed)
+    else:
+        from repro.hw.synthetic import synthetic_trace
+        hwt = synthetic_trace(get_hw(args.device),
+                              model_spec_from_arch(get_config(args.arch)),
+                              tp=args.tp, device=args.device)
+    out = args.out or f"traces/{args.device}.json"
+    hwt.save(out)
+    # round-trip through the registry so a broken artifact fails HERE,
+    # not at simulation time
+    HardwareRegistry().load_file(out)
+    print(json.dumps({"trace": out, "device": hwt.device,
+                      "model": hwt.model, **hwt.meta}, indent=1))
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--hw", default="cpu-measured")
-    ap.add_argument("--mode", default="measured",
-                    choices=["measured", "analytical"])
-    ap.add_argument("--tp", type=int, default=1)
-    ap.add_argument("--out", default=None)
-    args = ap.parse_args()
+def _cmd_ops(args):
+    from repro.profiler.operator_profiler import profile_arch
     trace = profile_arch(args.arch, hardware=args.hw, mode=args.mode,
                          tp=args.tp)
     out = args.out or f"traces/{args.arch}.{args.hw}.{args.mode}.json"
     trace.save(out)
     print(json.dumps({"trace": out, **trace.meta}, indent=1))
+
+
+def main():
+    argv = sys.argv[1:]
+    if argv and argv[0].startswith("-"):
+        argv = ["ops", *argv]      # legacy: python -m repro.profiler --arch X
+
+    ap = argparse.ArgumentParser(prog="python -m repro.profiler")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser(
+        "profile", help="emit a HardwareTrace artifact for one device")
+    p.add_argument("--device", required=True,
+                   help="device name (registry key of the artifact); "
+                        "'cpu-engine' measures this machine")
+    p.add_argument("--arch", default="llama3.1-8b-tiny")
+    p.add_argument("--mode", default="auto",
+                   choices=["auto", "measured", "synthetic"],
+                   help="auto: measured for cpu-engine/local, synthetic "
+                        "(spec-derived) otherwise")
+    p.add_argument("--out", default=None,
+                   help="output path (default traces/<device>.json)")
+    p.add_argument("--tp", type=int, default=1)
+    p.add_argument("--max-batch", type=int, default=4)
+    p.add_argument("--max-len", type=int, default=512)
+    p.add_argument("--reps", type=int, default=3)
+    p.add_argument("--seed", type=int, default=0)
+    # inline spec definition for a brand-new accelerator
+    p.add_argument("--peak-flops", type=float, default=None)
+    p.add_argument("--hbm-bw", type=float, default=None)
+    p.add_argument("--hbm-capacity", type=float, default=None)
+    p.add_argument("--link-bw", type=float, default=None)
+    p.add_argument("--mmu-efficiency", type=float, default=None,
+                   help="achievable fraction of peak on matmuls (default "
+                        "0.85 for new specs; overrides a known spec's "
+                        "value when given alone)")
+    p.set_defaults(fn=_cmd_profile)
+
+    o = sub.add_parser(
+        "ops", help="operator-level trace (raw Trace, legacy format)")
+    o.add_argument("--arch", required=True)
+    o.add_argument("--hw", default="cpu-measured")
+    o.add_argument("--mode", default="measured",
+                   choices=["measured", "analytical"])
+    o.add_argument("--tp", type=int, default=1)
+    o.add_argument("--out", default=None)
+    o.set_defaults(fn=_cmd_ops)
+
+    args = ap.parse_args(argv)
+    args.fn(args)
 
 
 if __name__ == "__main__":

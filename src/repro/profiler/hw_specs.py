@@ -1,48 +1,8 @@
-"""Hardware spec registry for analytical profiles (paper Table III flow:
-"integrate new hardware with a single command" == pick/define a spec here
-and run the profiler in analytical mode, or run measured mode on real HW).
+"""Compatibility shim: the hardware-spec registry moved to ``repro.hw``
+(the hardware-trace pipeline owns device knowledge); import from
+``repro.hw.specs`` going forward.
 """
-from __future__ import annotations
+from repro.hw.specs import (get_hw, known_hw, measured_cpu_spec,  # noqa: F401
+                            register_hw)
 
-import time
-
-from repro.core.config import (CPU_HOST, PIM_DEVICE, RTX3090, TPU_V5E,
-                               TPU_V6E, HardwareSpec)
-
-_REGISTRY = {
-    "rtx3090": RTX3090,
-    "tpu-v5e": TPU_V5E,
-    "tpu-v6e": TPU_V6E,
-    "pim": PIM_DEVICE,
-    "cpu-host": CPU_HOST,
-}
-
-
-def get_hw(name: str) -> HardwareSpec:
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown hardware {name!r}; have {sorted(_REGISTRY)}")
-    return _REGISTRY[name]
-
-
-def register_hw(spec: HardwareSpec):
-    _REGISTRY[spec.name] = spec
-    return spec
-
-
-def measured_cpu_spec(flops: float = None) -> HardwareSpec:
-    """Calibrate a spec for THIS host CPU with a quick matmul probe."""
-    import numpy as np
-    if flops is None:
-        n = 768
-        a = np.random.rand(n, n).astype(np.float32)
-        b = np.random.rand(n, n).astype(np.float32)
-        a @ b  # warm
-        t0 = time.perf_counter()
-        reps = 6
-        for _ in range(reps):
-            a @ b
-        dt = (time.perf_counter() - t0) / reps
-        flops = 2 * n ** 3 / dt
-    return register_hw(HardwareSpec(
-        name="cpu-measured", peak_flops=flops, hbm_bw=20e9,
-        hbm_capacity=16e9, link_bw=8e9))
+__all__ = ["get_hw", "register_hw", "known_hw", "measured_cpu_spec"]

@@ -24,30 +24,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ArchConfig, get_config
-from repro.core.config import HardwareSpec, ModelSpec
+from repro.configs import get_config
+from repro.core.config import HardwareSpec
 from repro.core.trace import Trace
+from repro.hw.specs import get_hw
+from repro.hw.synthetic import add_synthetic_points
 from repro.models import Model
 from repro.models.layers import decode_attention, rmsnorm, swiglu_mlp
 from repro.models.flash import flash_attention
 from repro.models.moe import moe_ffn
-from repro.profiler.hw_specs import get_hw
+from repro.profiler.arch_spec import model_spec_from_arch
 
 DEFAULT_TOKEN_GRID = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 DEFAULT_CTX_GRID = (64, 256, 1024)
-
-
-def model_spec_from_arch(cfg: ArchConfig) -> ModelSpec:
-    moe = cfg.moe
-    return ModelSpec(
-        name=cfg.name, n_layers=cfg.n_layers, d_model=cfg.d_model,
-        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
-        d_ff=cfg.d_ff, vocab=cfg.vocab,
-        moe_experts=moe.n_experts if moe else 0,
-        moe_top_k=moe.top_k if moe else 0,
-        moe_d_expert=moe.d_expert if moe else 0,
-        mlp_gated=cfg.mlp_gated,
-        param_bytes=cfg.param_count() * 2)
 
 
 def _time_fn(fn, *args, reps: int = 5, warmup: int = 2) -> float:
@@ -155,47 +144,13 @@ class OperatorProfiler:
 
     # ---- analytical backend ----
     def _analytical_points(self, trace: Trace, hw: HardwareSpec):
-        cfg = self.cfg
-        m = model_spec_from_arch(cfg)
-        tp = max(self.pcfg.tp, 1)
-
-        def roof(flops, nbytes):
-            return max(flops / (hw.peak_flops * hw.mmu_efficiency),
-                       nbytes / hw.hbm_bw) + 2e-6
-
-        d, dh = cfg.d_model, cfg.d_head
-        qkv_d = (cfg.n_heads + 2 * cfg.n_kv_heads) * dh
-        for T in self.pcfg.token_grid:
-            for phase, ctx in (("decode", 1), ("prefill", T)):
-                wb = (d * qkv_d + cfg.n_heads * dh * d) / tp * 2
-                trace.add("attn_qkv", phase, T, ctx, roof(
-                    2 * T * (d * qkv_d + cfg.n_heads * dh * d) / tp,
-                    wb + T * d * 4))
-                if cfg.moe:
-                    de, E, k = cfg.moe.d_expert, cfg.moe.n_experts, \
-                        cfg.moe.top_k
-                    trace.add("moe_ffn", phase, T, ctx, roof(
-                        2 * 3 * T * k * d * de / tp,
-                        3 * d * de * min(E, T * k) / tp * 2 + T * d * 4))
-                else:
-                    mults = 3 if cfg.mlp_gated else 2
-                    trace.add("mlp", phase, T, ctx, roof(
-                        2 * mults * T * d * cfg.d_ff / tp,
-                        mults * d * cfg.d_ff / tp * 2 + T * d * 4))
-                trace.add("norm", phase, T, ctx,
-                          roof(10 * T * d, 4 * T * d))
-                trace.add("head", phase, T, ctx, roof(
-                    2 * T * d * cfg.padded_vocab / tp,
-                    d * cfg.padded_vocab / tp * 2 + T * d * 2))
-                trace.add("embed", phase, T, ctx, roof(0, T * d * 4))
-        for ctx in self.pcfg.ctx_grid:
-            for B in (1, 4, 16, 64):
-                kv_b = ctx * B * m.kv_bytes_per_token / tp
-                trace.add("attn_score", "decode", B, ctx, roof(
-                    4 * B * ctx * cfg.n_heads * dh / tp, kv_b))
-            trace.add("attn_score", "prefill", ctx, ctx, roof(
-                4 * ctx * (ctx / 2) * cfg.n_heads * dh / tp,
-                ctx * m.kv_bytes_per_token / tp * 2))
+        # the analytical model lives once, in the synthetic-trace generator
+        # (repro.hw.synthetic); the profiler's analytical mode is just that
+        # generator over this profile's grids
+        add_synthetic_points(trace, hw, model_spec_from_arch(self.cfg),
+                             tp=self.pcfg.tp,
+                             token_grid=self.pcfg.token_grid,
+                             ctx_grid=self.pcfg.ctx_grid)
 
     # ---- entry ----
     def profile(self) -> Trace:

@@ -1,0 +1,158 @@
+"""Iteration-level profiler that probes through the unified runtime.
+
+Replaces the legacy ``ServingEngine.step()`` probe: every measurement runs
+``JaxBackend.execute`` on hand-composed ``ScheduledWork`` batches — the
+*exact* code paths production serving takes (bucketed ``prefill`` for fresh
+prompts, ``extend`` for chunked-prefill continuations and prefix-cache
+suffixes, one batched full-buffer ``decode`` per iteration, jitted slot
+export for KV copies).  What the simulator later prices is therefore what
+was measured, with no scheduling-semantics drift in between.
+
+Emitted trace points (the highest-fidelity tier — ``PerfModel`` prefers
+them over operator-level composition):
+
+* ``("iter", "prefill", P, P)``       — one whole-prompt prefill at bucket P
+* ``("extend", "prefill", S, c+S)``   — an S-token chunk extending context c
+* ``("iter", "decode", B, c)``        — a B-wide decode step at context c
+* ``("kv_export", "prefill", P, P)``  — slot KV copy-out (prefix-cache
+  insert / P-D transfer) for P tokens
+
+The result is a portable :class:`repro.hw.HardwareTrace` artifact — the
+paper's single-command hardware integration is running this on the target
+device: ``python -m repro.profiler profile --device <name> --out
+traces/<name>.json``.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.config import (ENGINE_HW, InstanceCfg, PrefixCacheCfg,
+                               SchedulerCfg)
+from repro.core.request import SimRequest
+from repro.core.trace import Trace
+from repro.hw.trace import HardwareTrace, InterconnectSpec
+from repro.profiler.arch_spec import model_spec_from_arch
+
+
+def _probe_instance_cfg(arch: str, max_batch: int, max_len: int,
+                        chunk: int) -> InstanceCfg:
+    """Engine-matched InstanceCfg for the probe backend (chunked prefill on
+    so ``warmup`` pre-compiles the extend buckets we measure)."""
+    return InstanceCfg(
+        name="probe", hw=ENGINE_HW, model=model_spec_from_arch(
+            get_config(arch)),
+        scheduler=SchedulerCfg(max_batch_size=max_batch,
+                               max_batch_tokens=1 << 16,
+                               chunked_prefill=True, prefill_chunk=chunk),
+        prefix_cache=PrefixCacheCfg(enabled=False))
+
+
+def runtime_trace(arch: str, *, device: str = "cpu-engine",
+                  max_batch: int = 4, max_len: int = 512,
+                  prefill_buckets: Sequence[int] = (16, 32, 64, 128, 256),
+                  decode_ctxs: Sequence[int] = (32, 64, 128, 256),
+                  extend_ctxs: Sequence[int] = (16, 64, 128),
+                  extend_suffixes: Sequence[int] = (16, 64, 128),
+                  reps: int = 3, seed: int = 0,
+                  engine=None) -> HardwareTrace:
+    """Measure ``arch`` on the local device through ``JaxBackend``.
+
+    ``engine`` may supply a pre-built ``ServingEngine`` (params reuse);
+    otherwise one is constructed.  Returns a portable ``HardwareTrace``
+    labeled ``device`` with the container's engine spec embedded.
+    """
+    from repro.runtime.backends.jax_engine import JaxBackend
+    from repro.runtime.scheduler import ScheduledWork
+    from repro.serve.engine import ServingEngine
+
+    cfg = get_config(arch)
+    t_start = time.time()
+    eng = engine or ServingEngine(cfg, max_batch=max_batch, max_len=max_len,
+                                  name="probe", seed=seed)
+    icfg = _probe_instance_cfg(arch, max_batch, max_len,
+                               chunk=max(extend_suffixes))
+    backend = JaxBackend(eng, icfg)
+    backend.warmup()
+
+    trace = Trace(model=arch, hardware=device, tp=1)
+    rng = np.random.default_rng(seed)
+    rid = itertools.count()
+
+    def make_req(n_prompt: int, output_len: int = 1) -> SimRequest:
+        toks = rng.integers(0, cfg.vocab, n_prompt).tolist()
+        return SimRequest(req_id=next(rid), arrival=0.0,
+                          prompt_tokens=toks, output_len=output_len)
+
+    def run(req: SimRequest, tokens: int, phase: str) -> float:
+        return backend.execute([ScheduledWork(req, tokens, phase)], 0.0)
+
+    # --- whole-prompt prefill per bucket (+ KV-export / slot copy cost) ---
+    for P in prefill_buckets:
+        if P >= max_len - 8:
+            continue
+        lat, exp_lat = [], []
+        for _ in range(reps):
+            req = make_req(P - 1)
+            lat.append(run(req, P - 1, "prefill"))
+            t0 = time.perf_counter()
+            backend.export_kv(req)      # slot copy-out; also frees the slot
+            exp_lat.append(time.perf_counter() - t0)
+            backend._carry_s = 0.0      # export time was measured directly
+        trace.add("iter", "prefill", P, P, float(np.median(lat)))
+        trace.add("kv_export", "prefill", P, P, float(np.median(exp_lat)))
+
+    # --- chunked/cached prefill (extend) per (suffix, context) ---
+    # chunk 2+ and prefix-cache suffixes run the engine's extend path, which
+    # attends over the slot's full buffer — priced separately from fresh
+    # prefill.  Some architectures (e.g. xLSTM) have no cached-prefill path;
+    # the perf model then falls back to fresh-prefill pricing.
+    try:
+        for ctx in extend_ctxs:
+            for S in extend_suffixes:
+                if ctx + S >= max_len:
+                    continue
+                lat = []
+                for rep in range(reps + 1):
+                    req = make_req(ctx + S)
+                    run(req, ctx, "prefill")          # chunk 1: fresh
+                    dt = run(req, S, "prefill")       # chunk 2: extend
+                    backend.release(req)
+                    if rep:                           # rep 0 warms the jits
+                        lat.append(dt)
+                trace.add("extend", "prefill", S, ctx + S,
+                          float(np.median(lat)))
+    except NotImplementedError:
+        pass
+
+    # --- batched decode per (batch, context) ---
+    for ctx in decode_ctxs:
+        if ctx + 16 >= max_len:
+            continue
+        for nb in sorted({1, max(1, max_batch // 2), max_batch}):
+            reqs = []
+            for _ in range(nb):
+                req = make_req(ctx, output_len=reps + 4)
+                run(req, ctx, "prefill")
+                reqs.append(req)
+            lat = []
+            for _ in range(reps + 1):
+                work = [ScheduledWork(r, 1, "decode") for r in reqs]
+                lat.append(backend.execute(work, 0.0))
+            for r in reqs:
+                backend.release(r)
+            trace.add("iter", "decode", nb, ctx,
+                      float(np.median(lat[1:]) if len(lat) > 1 else lat[0]))
+
+    trace.meta.update({
+        "mode": "runtime", "profile_wall_s": time.time() - t_start,
+        "n_points": len(trace.points), "max_batch": max_batch,
+        "max_len": max_len,
+    })
+    return HardwareTrace.from_trace(
+        trace, device=device, spec=ENGINE_HW,
+        interconnect=InterconnectSpec.from_hw(ENGINE_HW))

@@ -21,13 +21,14 @@ from repro.runtime.backend import ExecutionBackend, KvHandoff
 from repro.runtime.cluster import ServingRuntime
 from repro.runtime.instance import RuntimeInstance
 from repro.runtime.prefix_cache import MatchResult, RadixPrefixCache
-from repro.runtime.router import (GlobalRouter, LeastLoaded, PrefixAware,
-                                  RoundRobin, RoutingPolicy, register_policy)
+from repro.runtime.router import (GlobalRouter, HardwareAware, LeastLoaded,
+                                  PrefixAware, RoundRobin, RoutingPolicy,
+                                  register_policy)
 from repro.runtime.scheduler import BatchScheduler, ScheduledWork, WaitQueue
 
 __all__ = [
     "ExecutionBackend", "KvHandoff", "ServingRuntime", "RuntimeInstance",
     "MatchResult", "RadixPrefixCache", "GlobalRouter", "RoutingPolicy",
-    "RoundRobin", "LeastLoaded", "PrefixAware", "register_policy",
-    "BatchScheduler", "ScheduledWork", "WaitQueue",
+    "RoundRobin", "LeastLoaded", "PrefixAware", "HardwareAware",
+    "register_policy", "BatchScheduler", "ScheduledWork", "WaitQueue",
 ]

@@ -29,12 +29,28 @@ class SimBackend:
         # prefix-cache restore / tier-fetch latency charged to the next
         # iteration (the request that hit pays for its own fetch)
         self._pending_fetch_s = 0.0
+        self._tput_hint = None   # lazily priced reference-batch tokens/s
 
     def warmup(self):
         pass
 
     def prompt_cap(self, req: SimRequest):
         return None
+
+    def throughput_hint(self) -> float:
+        """Trace-priced tokens/s on a reference batch (one 256-token
+        prefill + a 4-wide decode at context 256) — the cold-start signal
+        ``hardware_aware`` routing uses before observed throughput exists."""
+        if self._tput_hint is None:
+            from repro.core.perfmodel import BatchItem
+            pre = self.perf.iteration_latency(
+                [BatchItem(tokens=256, context=256, phase="prefill")])
+            dec = self.perf.iteration_latency(
+                [BatchItem(tokens=1, context=256, phase="decode")
+                 for _ in range(4)])
+            self._tput_hint = (256 + 4) / max(pre.total_s + dec.total_s,
+                                              1e-12)
+        return self._tput_hint
 
     def execute(self, work: List[ScheduledWork], now: float) -> float:
         cost = self.perf.iteration_latency(to_batch_items(work))

@@ -13,8 +13,9 @@ wiring exactly like their siblings (previously they silently got neither).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 
 from repro.core.config import ClusterCfg, InstanceCfg
 from repro.core.engine import EventQueue
@@ -27,17 +28,38 @@ from repro.runtime.instance import RuntimeInstance
 from repro.runtime.prefix_cache import RadixPrefixCache
 from repro.runtime.router import GlobalRouter
 
+if TYPE_CHECKING:
+    from repro.hw.registry import HardwareRegistry
+
 BackendFactory = Callable[[InstanceCfg, Optional[Trace]], ExecutionBackend]
 
 
 class ServingRuntime:
+    """The one cluster driver (both backends): arrivals -> router ->
+    instances -> completion, plus P/D KV handoff over the network model,
+    failure injection, and elastic scale-out.
+
+    ``backend_factory(icfg, trace)`` decides the execution substrate per
+    instance; ``traces`` feeds explicit ``InstanceCfg.trace_name`` lookups
+    and ``hw`` resolves ``InstanceCfg.hw_name`` through the hardware-trace
+    registry (``repro.hw``), defaulting to the process-wide registry.
+    """
+
     def __init__(self, cfg: ClusterCfg, backend_factory: BackendFactory,
-                 traces: Optional[TraceRegistry] = None):
+                 traces: Optional[TraceRegistry] = None,
+                 hw: Optional["HardwareRegistry"] = None):
         self.cfg = cfg
         self.backend_factory = backend_factory
         self.queue = EventQueue()
         self.network = NetworkModel(cfg.network)
         self.traces = traces or TraceRegistry()
+        # hardware-by-name resolution (InstanceCfg.hw_name): measured
+        # HardwareTrace artifacts when loaded, synthetic otherwise.
+        # Imported lazily: repro.hw sits above repro.core in the layering,
+        # so a cold `import repro.hw` must not re-enter this module.
+        if hw is None:
+            from repro.hw.registry import default_registry as hw
+        self.hw = hw
         self.instances: Dict[str, RuntimeInstance] = {}
         self._shared_cache: Optional[RadixPrefixCache] = None
         for icfg in cfg.instances:
@@ -51,6 +73,22 @@ class ServingRuntime:
     def _build_instance(self, icfg: InstanceCfg) -> RuntimeInstance:
         trace = (self.traces.get(icfg.trace_name)
                  if icfg.trace_name else None)
+        if trace is None and icfg.hw_name:
+            hwt = self.hw.resolve(icfg.hw_name, icfg.model,
+                                  tp=icfg.parallelism.tp)
+            if hwt.spec is not None:
+                # the trace carries the device spec: memory model and
+                # off-grid analytical fallback price the same hardware
+                icfg = dataclasses.replace(icfg, hw=hwt.spec)
+            trace = hwt.to_trace()
+        if icfg.hw is None:
+            raise ValueError(
+                f"instance {icfg.name!r} has no hardware spec: set "
+                f"InstanceCfg.hw, or use an hw_name whose trace embeds a "
+                f"spec (this one resolved to a spec-less trace)"
+                if icfg.hw_name else
+                f"instance {icfg.name!r} has no hardware spec: set "
+                f"InstanceCfg.hw or an InstanceCfg.hw_name")
         backend = self.backend_factory(icfg, trace)
         cache: Optional[RadixPrefixCache] = None
         if icfg.prefix_cache.enabled:

@@ -227,9 +227,19 @@ class RuntimeInstance:
         return (len(self.scheduler.waiting) + len(self.scheduler.running)
                 + len(self._pending_decode) + 2.0 * self.mem.utilization())
 
+    def throughput_estimate(self) -> float:
+        """Tokens/s signal for hardware-aware routing: observed throughput
+        once enough iterations ran, else the backend's static hint (the
+        trace-priced reference batch for ``SimBackend``)."""
+        if self.iterations >= 8 and self.busy_time > 0:
+            return self.total_tokens / self.busy_time
+        hint = getattr(self.backend, "throughput_hint", None)
+        return hint() if hint is not None else 1.0
+
     def stats(self) -> dict:
         s = {"iterations": self.iterations, "tokens": self.total_tokens,
              "busy_s": self.busy_time, "backend": self.backend.name,
+             "hw": self.cfg.hw_name or self.cfg.hw.name,
              "preemptions": self.scheduler.n_preemptions,
              "mem_peak_blocks": self.mem.peak_used}
         if self.cache is not None:

@@ -42,7 +42,18 @@ class MatchResult:
 
 
 class RadixPrefixCache:
-    """Block-granular radix tree over token-id sequences."""
+    """Block-granular radix tree over token-id sequences.
+
+    The runtime owns the *policy* (what is matched, inserted, pinned,
+    promoted, evicted — per-instance or shared ``scope="global"``);
+    backends own the *payloads*: the simulator prices restore/fetch costs
+    from the trace (``kv_export``), while ``JaxBackend`` keeps real KV
+    slices keyed by prefix and restores them on a hit so only the suffix
+    runs ``extend``.  Capacity borrows idle KV-pool blocks from the
+    instance's ``MemoryModel`` and evicts LRU leaves device->host(->SSD)
+    under pressure.  Running requests ``pin``/``unpin`` their matched
+    nodes so shared prefixes are never evicted mid-flight.
+    """
 
     def __init__(self, cfg: PrefixCacheCfg, mem: MemoryModel,
                  name: str = "cache"):

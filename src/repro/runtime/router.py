@@ -1,6 +1,20 @@
 """Global request router (paper §II-B): lives outside the instances,
-dispatches on arrival by pluggable policy. Custom policies subclass
-``RoutingPolicy`` and are registered by name.
+dispatches on arrival by pluggable policy.
+
+Registered policies (``RouterCfg(policy=<name>)``):
+
+* ``round_robin``    — cycle through live candidates.
+* ``least_loaded``   — minimize ``RuntimeInstance.load()`` (queue depth +
+  memory pressure).
+* ``prefix_aware``   — longest prefix-cache match wins (with a load guard);
+  falls back to least-loaded.
+* ``hardware_aware`` — throughput-weighted least-loaded for heterogeneous
+  clusters: queue depth is divided by each instance's measured (or
+  trace-estimated) tokens/s, so faster accelerators receive proportionally
+  more work (see ``docs/serving-techniques.md``).
+
+Custom policies subclass :class:`RoutingPolicy` and register with
+:func:`register_policy`; the name is then valid in any ``RouterCfg``.
 
 Backend-agnostic: candidates are ``RuntimeInstance`` objects, so one policy
 registry serves both the simulator and the real JAX engine — the paper's
@@ -20,6 +34,13 @@ else:
 
 
 class RoutingPolicy:
+    """One routing decision: pick the instance that serves ``req``.
+
+    ``candidates`` are the live instances able to take the request (role
+    and model-affinity filtered).  Policies may inspect ``inst.load()``,
+    ``inst.throughput_estimate()``, ``inst.cache`` (prefix match) and
+    ``inst.cfg`` — the same signals on both execution backends.
+    """
     name = "base"
 
     def choose(self, req: SimRequest, candidates: List["Instance"],
@@ -65,16 +86,40 @@ class PrefixAware(RoutingPolicy):
         return min(candidates, key=lambda i: i.load())
 
 
+class HardwareAware(RoutingPolicy):
+    """Throughput-weighted least-loaded for mixed-accelerator clusters.
+
+    Each candidate's queue depth is normalized by its tokens/s estimate
+    (observed once the instance has run enough iterations, otherwise the
+    backend's trace-priced hint), so a TPU-class instance that decodes 5x
+    faster than a GPU-class sibling absorbs ~5x the queue before the router
+    prefers the slower device.
+    """
+    name = "hardware_aware"
+
+    def choose(self, req, candidates, now):
+        def score(inst):
+            return (inst.load() + 1.0) / max(inst.throughput_estimate(),
+                                             1e-9)
+        return min(candidates, key=score)
+
+
 _POLICIES: Dict[str, Type[RoutingPolicy]] = {
-    p.name: p for p in (RoundRobin, LeastLoaded, PrefixAware)}
+    p.name: p for p in (RoundRobin, LeastLoaded, PrefixAware,
+                        HardwareAware)}
 
 
 def register_policy(cls: Type[RoutingPolicy]):
+    """Make a ``RoutingPolicy`` subclass available (by its ``name``) to
+    every ``RouterCfg`` on both backends; returns the class (decorator)."""
     _POLICIES[cls.name] = cls
     return cls
 
 
 class GlobalRouter:
+    """Cluster-level dispatcher: filters live candidates (role and model
+    affinity), then delegates the choice to the configured policy."""
+
     def __init__(self, cfg: RouterCfg, instances: List["Instance"]):
         self.cfg = cfg
         self.instances = instances

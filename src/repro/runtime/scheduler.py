@@ -83,6 +83,18 @@ class WaitQueue:
 
 
 class BatchScheduler:
+    """The unified iteration scheduler (one per instance, both backends).
+
+    ``next_batch()`` composes one engine iteration: decode steps for the
+    running set first, then continuation chunks for in-flight prefills,
+    then new admissions — under ``max_batch_tokens``/``max_batch_size``
+    budgets with exact KV-block reservations.  The returned
+    ``ScheduledWork`` list is what an ``ExecutionBackend`` prices (sim) or
+    really executes (JAX engine); ``complete``/``requeue_all`` close the
+    ledger.  See the module docstring for preemption and accounting
+    invariants.
+    """
+
     def __init__(self, cfg: SchedulerCfg, mem: MemoryModel):
         self.cfg = cfg
         self.mem = mem

@@ -1,6 +1,6 @@
 from repro.serve.driver import DriverCfg, ServeDriver
-from repro.serve.engine import EngineRequest, RealRadixCache, ServingEngine
+from repro.serve.engine import RealRadixCache, ServingEngine
 from repro.serve.sampler import greedy, temperature
 
-__all__ = ["DriverCfg", "ServeDriver", "EngineRequest", "RealRadixCache",
+__all__ = ["DriverCfg", "ServeDriver", "RealRadixCache",
            "ServingEngine", "greedy", "temperature"]

@@ -1,23 +1,28 @@
-"""Real JAX serving engine (mini-vLLM) — the fidelity ground truth.
+"""Real JAX execution substrate: jitted model calls over a slot KV cache.
 
-Implements iteration-level continuous batching over a slot-based KV cache,
-with an optional *real* radix prefix cache (stores actual KV tensors; hits
-restore them and only the suffix is prefilled via ``Model.extend``).
+``ServingEngine`` is deliberately *mechanism only*: it owns the params, the
+slot-based KV cache, the jitted ``prefill``/``extend``/``decode`` closures,
+the per-bucket slot copy plumbing (export/restore/subcache), and an
+optional *real* radix prefix store (actual KV tensors keyed by token
+prefix).  It makes no serving decisions and runs no loop of its own — the
+unified runtime (``repro.runtime``) schedules every iteration and drives
+this engine through ``JaxBackend.execute``.
 
-Hybrid emulation: compute is REAL (every iteration runs the actual jitted
-model on the local device and is wall-clock timed); time is VIRTUAL (each
-instance has its own clock advanced by the measured latencies), so
-multi-instance configurations behave as if instances ran in parallel even
-though this container has one CPU. TTFT/TPOT/ITL read from the virtual
-clocks — this is the "real GPU system + vLLM" side of the paper's §III
-methodology, adapted to the container (DESIGN.md §2).
+The legacy one-request-at-a-time ``step()`` loop (and its private
+queue/handoff state) was retired once the profiler started probing through
+the runtime: ``repro.profiler.runtime_profiler`` measures the exact
+``JaxBackend`` code paths production serving runs.
+
+Hybrid emulation (paper §III, adapted to this container): compute is REAL —
+every batch runs the actual jitted model on the local device and is
+wall-clock timed; time is VIRTUAL — the runtime's shared event queue
+advances by the measured latencies, so multi-instance configurations behave
+as if instances ran in parallel even though this container has one CPU.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import OrderedDict, deque
-from typing import Deque, Dict, List, Optional, Tuple
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +30,6 @@ import numpy as np
 
 from repro.configs import ArchConfig
 from repro.models import Model
-from repro.serve.sampler import greedy
-from repro.workload.sharegpt import Request
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -34,18 +37,6 @@ def _bucket(n: int, lo: int = 16) -> int:
     while b < n:
         b *= 2
     return b
-
-
-@dataclasses.dataclass
-class EngineRequest:
-    req: Request
-    state: str = "queued"            # queued -> prefill -> decode -> done
-    slot: int = -1
-    generated: int = 0
-    cached_prefix: int = 0
-    t_first: Optional[float] = None
-    t_finish: Optional[float] = None
-    token_times: List[float] = dataclasses.field(default_factory=list)
 
 
 class RealRadixCache:
@@ -91,7 +82,11 @@ class RealRadixCache:
 
 
 class ServingEngine:
-    """One instance. ``step()`` runs ONE real iteration, returns latency."""
+    """One instance's execution substrate (slots, jits, KV plumbing).
+
+    Driven exclusively by ``repro.runtime.backends.jax_engine.JaxBackend``;
+    see the module docstring for the division of labor.
+    """
 
     def __init__(self, cfg: ArchConfig, params=None, *, max_batch: int = 8,
                  max_len: int = 512, prefix_cache: bool = False,
@@ -106,17 +101,7 @@ class ServingEngine:
         self.max_len = max_len
         self.cache = self.model.init_cache(max_batch, max_len)
         self.slot_free = list(range(max_batch))
-        self.slot_req: Dict[int, EngineRequest] = {}
-        self.waiting: Deque[EngineRequest] = deque()
         self.radix = RealRadixCache() if prefix_cache else None
-        self.now = 0.0                   # virtual clock
-        self.iterations = 0
-        self._new_tokens: List[EngineRequest] = []
-        self._finished: List[EngineRequest] = []
-        self._handoffs: List[tuple] = []
-        self._waiting_kv: Deque[tuple] = deque()   # P/D spill queue
-        self.on_prefill_done = None      # P/D handoff hook
-        self.on_request_done = None
         self._jit_decode = jax.jit(self.model.decode)
         self._jit_prefill = jax.jit(self.model.prefill,
                                     static_argnames=())
@@ -125,8 +110,9 @@ class ServingEngine:
 
     def warmup(self, buckets=(16, 32, 64, 128, 256)):
         """Compile prefill/extend/decode at every bucket so measured
-        iteration latencies are steady-state (compile time excluded)."""
-        import jax.numpy as jnp
+        iteration latencies are steady-state (compile time excluded).
+        ``JaxBackend.warmup`` extends this with chunked-prefill extend
+        buckets and slot export/restore jits."""
         for P in buckets:
             if P >= self.max_len:
                 continue
@@ -144,131 +130,6 @@ class ServingEngine:
                     pass
         jax.block_until_ready(self._jit_decode(
             self.params, self.cache, jnp.asarray(self._tokens_buf)))
-        self.now = 0.0
-
-    # ---- submission ----
-    def submit(self, req: Request):
-        self.waiting.append(EngineRequest(req=req))
-
-    def has_work(self) -> bool:
-        return bool(self.waiting) or bool(self.slot_req) \
-            or bool(self._waiting_kv)
-
-    # ---- one iteration (real compute) ----
-    def step(self) -> float:
-        self._new_tokens.clear()
-        self._finished.clear()
-        t0 = time.perf_counter()
-        if self._waiting_kv and self.slot_free:
-            ereq, kv, length, tok = self._waiting_kv.popleft()
-            self.admit_with_kv(ereq, kv, length, tok)
-            if self.slot_req:
-                self._do_decode_iteration()
-        elif self.waiting and self.slot_free:
-            self._do_prefill(self.waiting.popleft())
-        elif self.slot_req:
-            self._do_decode_iteration()
-        latency = time.perf_counter() - t0
-        self.now += latency
-        self.iterations += 1
-        # stamp token events in virtual time
-        for ereq in self._new_tokens:
-            if ereq.t_first is None:
-                ereq.t_first = self.now
-            ereq.token_times.append(self.now)
-        for ereq in self._finished:
-            ereq.t_finish = self.now
-            if self.on_request_done is not None:
-                self.on_request_done(ereq)
-        for ereq, kv, length, tok in self._handoffs:
-            self.on_prefill_done(self, ereq, kv, length, tok)
-        self._handoffs.clear()
-        return latency
-
-    # ---- prefill one request into a slot ----
-    def _do_prefill(self, ereq: EngineRequest):
-        req = ereq.req
-        toks = list(req.prompt_tokens)[: self.max_len - req.output_len - 1]
-        slot = self.slot_free.pop()
-        ereq.slot = slot
-        cached_kv = None
-        cache_len = 0
-        if self.radix is not None:
-            cache_len, cached_kv = self.radix.match(toks)
-            cache_len = min(cache_len, len(toks) - 1)
-        if cached_kv is not None and cache_len > 0:
-            self._restore_slot(slot, cached_kv, cache_len)
-            suffix = np.asarray(toks[cache_len:], np.int32)
-            P = _bucket(len(suffix))
-            pad = np.zeros((1, P), np.int32)
-            pad[0, :len(suffix)] = suffix
-            sub_cache = self._slot_subcache(slot, cache_len)
-            logits, new_sub = self._jit_extend(
-                self.params, sub_cache, jnp.asarray(pad),
-                jnp.asarray([len(suffix)], jnp.int32))
-            self._write_slot(slot, new_sub, cache_len + len(suffix))
-            ereq.cached_prefix = cache_len
-        else:
-            P = _bucket(len(toks))
-            pad = np.zeros((1, P), np.int32)
-            pad[0, :len(toks)] = np.asarray(toks, np.int32)
-            lengths = jnp.asarray([len(toks)], jnp.int32)
-            logits, cache1 = self._jit_prefill(self.params, jnp.asarray(pad),
-                                               lengths=lengths)
-            self._write_slot_from_prefill(slot, cache1, len(toks))
-            if self.radix is not None:
-                blk = (len(toks) // self.radix.block) * self.radix.block
-                if blk > 0:
-                    self.radix.insert(toks, self._export_slot(slot, blk))
-        first_tok = int(np.asarray(greedy(logits, self.cfg.vocab))[0, 0])
-        ereq.generated = 1
-        ereq.state = "decode"
-        self._new_tokens.append(ereq)
-        if self.role == "prefill" and self.on_prefill_done is not None:
-            # P/D: export KV; the handoff fires after this iteration's
-            # latency lands on the virtual clock (see step())
-            kv = self._export_slot(slot, len(toks))
-            self._release_slot(slot)
-            self._handoffs.append((ereq, kv, len(toks), first_tok))
-        else:
-            self.slot_req[slot] = ereq
-            self._tokens_buf[slot, 0] = first_tok
-
-    # ---- batched decode ----
-    def _do_decode_iteration(self):
-        toks = jnp.asarray(self._tokens_buf)
-        logits, self.cache = self._jit_decode(self.params, self.cache, toks)
-        nxt = np.asarray(greedy(logits, self.cfg.vocab))
-        finished = []
-        for slot, ereq in list(self.slot_req.items()):
-            self._new_tokens.append(ereq)
-            ereq.generated += 1
-            self._tokens_buf[slot, 0] = int(nxt[slot, 0])
-            if ereq.generated >= min(ereq.req.output_len,
-                                     self.max_len - ereq.req.prompt_len - 1):
-                finished.append(slot)
-        for slot in finished:
-            ereq = self.slot_req.pop(slot)
-            ereq.state = "done"
-            self._release_slot(slot)
-            self._finished.append(ereq)
-
-    def admit_with_kv(self, ereq: EngineRequest, kv: dict, length: int,
-                      first_tok: int):
-        """P/D decode-side admission: restore transferred KV into a slot."""
-        if not self.slot_free:
-            # keep the transferred KV; admit when a slot frees
-            self._waiting_kv.append((ereq, kv, length, first_tok))
-            return
-        slot = self.slot_free.pop()
-        self._restore_slot(slot, kv, length)
-        ereq.slot = slot
-        ereq.state = "decode"
-        self.slot_req[slot] = ereq
-        self._tokens_buf[slot, 0] = first_tok
-
-    def decode_batch_size(self) -> int:
-        return len(self.slot_req)
 
     # ---- jitted slot/cache plumbing ----
     # eager per-op dispatch costs ~ms on CPU; these helpers are jitted per

@@ -1,0 +1,42 @@
+"""Docs health (fast tier): intra-repo links resolve and the acceptance
+profile command emits a loadable artifact.  The full docs-test command
+blocks run in the CI docs job (``python tools/check_docs.py``)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+
+def test_markdown_links_resolve():
+    from check_docs import check_links, md_files
+    assert len(md_files()) >= 6        # README + docs tree
+    assert check_links() == []
+
+
+def test_docs_have_executable_blocks():
+    from check_docs import docs_test_blocks
+    blocks = docs_test_blocks()
+    # the adding-hardware walkthrough must stay executable as written
+    assert any("adding-hardware" in path for path, _, _ in blocks)
+    assert len(blocks) >= 3
+
+
+def test_profile_cli_emits_loadable_artifact(tmp_path):
+    """The acceptance command (synthetic mode for speed): profile a device
+    by name, load the artifact through the hw registry."""
+    out = str(tmp_path / "tpu-v6e.json")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.profiler", "profile",
+         "--device", "tpu-v6e", "--arch", "llama3.1-8b-tiny",
+         "--out", out],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=240)
+    assert proc.returncode == 0, proc.stderr
+    from repro.hw import HardwareRegistry
+    reg = HardwareRegistry()
+    hwt = reg.load_file(out)
+    assert hwt.device == "tpu-v6e"
+    assert reg.get("tpu-v6e") is hwt
+    assert len(hwt.points) > 50

@@ -19,7 +19,7 @@ def test_engine_vs_sim_fidelity_smoke():
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.common import DENSE_TINY, engine_matched_instance, pct_err
     from repro.core import ClusterCfg, RouterCfg, TraceRegistry, simulate
-    from repro.profiler.engine_profiler import engine_trace
+    from repro.profiler.runtime_profiler import runtime_trace
     from repro.serve import ServeDriver, ServingEngine
     from repro.workload import ShareGPTConfig, generate
 
@@ -28,10 +28,11 @@ def test_engine_vs_sim_fidelity_smoke():
                                    mean_prompt=60, mean_output=12,
                                    max_prompt=120, max_output=16, seed=9))
     registry = TraceRegistry()
-    registry.register(DENSE_TINY, engine_trace(
+    registry.register(DENSE_TINY, runtime_trace(
         DENSE_TINY, max_batch=4, max_len=256,
         prefill_buckets=(16, 32, 64, 128), decode_ctxs=(32, 64, 128),
-        reps=3))
+        extend_ctxs=(16, 64), extend_suffixes=(16, 64),
+        reps=3).to_trace())
     eng = ServingEngine(cfg, max_batch=4, max_len=256)
     real = ServeDriver([eng]).run(reqs)
     sim = simulate(ClusterCfg(

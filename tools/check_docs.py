@@ -1,0 +1,140 @@
+#!/usr/bin/env python
+"""Docs health checker: links resolve, walkthroughs execute.
+
+Two checks keep the documentation from silently rotting:
+
+1. **Links** — every relative markdown link in README.md and docs/ must
+   point at a file that exists (anchors are stripped; external URLs are
+   ignored).
+2. **Commands** — every fenced code block tagged ``bash docs-test`` in
+   docs/ is executed verbatim from the repository root (with
+   ``PYTHONPATH=src``); a non-zero exit fails the check.  This is how the
+   adding-hardware walkthrough stays executable as written.
+
+Usage:
+  python tools/check_docs.py             # links + commands (CI docs job)
+  python tools/check_docs.py --links-only
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images is unnecessary; image targets must
+# exist too.  Inline code spans are stripped first so `foo[i](x)` in code
+# doesn't parse as a link.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_SPAN = re.compile(r"`[^`]*`")
+_FENCE = re.compile(r"^```(.*)$")
+
+
+def md_files():
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    for root, _, files in os.walk(docs):
+        out.extend(os.path.join(root, f) for f in files
+                   if f.endswith(".md"))
+    return [p for p in out if os.path.exists(p)]
+
+
+def _strip_fences(text: str) -> str:
+    """Remove fenced code blocks (their contents aren't prose links)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_links() -> list:
+    errors = []
+    for path in md_files():
+        with open(path) as f:
+            text = _strip_fences(f.read())
+        text = _CODE_SPAN.sub("", text)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue            # pure in-page anchor
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(resolved):
+                rel = os.path.relpath(path, REPO)
+                errors.append(f"{rel}: broken link -> {m.group(1)}")
+    return errors
+
+
+def docs_test_blocks():
+    """(file, index, script) for every ``bash docs-test`` fenced block."""
+    blocks = []
+    for path in md_files():
+        with open(path) as f:
+            lines = f.read().splitlines()
+        script, in_block, idx = [], False, 0
+        for line in lines:
+            m = _FENCE.match(line.strip())
+            if m and not in_block:
+                info = m.group(1).strip()
+                if "docs-test" in info.split():
+                    in_block = True
+                    script = []
+                continue
+            if m and in_block:
+                idx += 1
+                blocks.append((os.path.relpath(path, REPO), idx,
+                               "\n".join(script)))
+                in_block = False
+                continue
+            if in_block:
+                script.append(line)
+    return blocks
+
+
+def run_blocks() -> list:
+    errors = []
+    env = dict(os.environ, PYTHONPATH="src" + (
+        os.pathsep + os.environ["PYTHONPATH"]
+        if os.environ.get("PYTHONPATH") else ""))
+    for path, idx, script in docs_test_blocks():
+        label = f"{path} block {idx}"
+        print(f"== running {label} ==", flush=True)
+        proc = subprocess.run(["bash", "-euo", "pipefail", "-c", script],
+                              cwd=REPO, env=env)
+        if proc.returncode != 0:
+            errors.append(f"{label}: exit {proc.returncode}")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links-only", action="store_true")
+    args = ap.parse_args()
+
+    errors = check_links()
+    for e in errors:
+        print(f"LINK: {e}", file=sys.stderr)
+    n_blocks = 0
+    if not args.links_only:
+        n_blocks = len(docs_test_blocks())
+        errors += run_blocks()
+    if errors:
+        print(f"\n{len(errors)} docs problem(s)", file=sys.stderr)
+        sys.exit(1)
+    print(f"docs ok: {len(md_files())} files linked cleanly"
+          + ("" if args.links_only else
+             f", {n_blocks} docs-test block(s) executed"))
+
+
+if __name__ == "__main__":
+    main()
