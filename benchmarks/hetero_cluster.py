@@ -23,7 +23,7 @@ import json
 from repro.configs import get_config
 from repro.core import (ClusterCfg, InstanceCfg, RouterCfg, SchedulerCfg,
                         simulate)
-from repro.hw import HardwareRegistry
+from repro.hw import HardwareRegistry, get_hw
 from repro.profiler import model_spec_from_arch
 from repro.workload import ShareGPTConfig, generate
 
@@ -48,10 +48,31 @@ def run_cluster(label: str, instances, router: str, reqs, hw,
     per_inst = {n: {"hw": s["hw"], "tokens": s["tokens"],
                     "busy_s": round(s["busy_s"], 4)}
                 for n, s in m["instances"].items()}
+    # per-pair link parameters are derived from the endpoint devices'
+    # interconnects (min-bw rule) — a mixed-device pair must see the
+    # slower NIC, never a cluster-global constant
+    hw_of = {i.name: i.hw_name for i in instances}
+
+    def egress(dev: str) -> float:
+        # the floor the link was actually derived from: a loaded artifact's
+        # measured interconnect when one is registered, else the named spec
+        if hw is not None and dev in hw.names():
+            return hw.get(dev).interconnect.inter_instance_bw
+        return get_hw(dev).inter_instance_bw
+
+    links = {}
+    for pair, v in m.get("network_links", {}).items():
+        links[pair] = {"bw_gbps": v["bw"] / 1e9,
+                       "gb_moved": v["bytes"] / 1e9}
+        a, b = pair.split("<->")
+        if a in hw_of and b in hw_of:
+            floor = min(egress(hw_of[a]), egress(hw_of[b]))
+            assert v["bw"] <= floor + 1e-6, \
+                f"link {pair} faster than its slower endpoint"
     row = {"cluster": label, "router": router,
            "throughput_tok_s": round(m["throughput_tok_s"], 1),
            "ttft_mean_ms": round((m.get("ttft_mean_s") or 0) * 1e3, 2),
-           "instances": per_inst}
+           "instances": per_inst, "links": links}
     print(f"{label:28s} router={router:14s} "
           f"tput={row['throughput_tok_s']:10.1f} tok/s", flush=True)
     return row

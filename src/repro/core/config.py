@@ -23,6 +23,11 @@ class HardwareSpec:
     ssd_bw: float = 3e9
     ssd_capacity: float = 8e12
     mmu_efficiency: float = 0.85  # achievable fraction of peak on matmuls
+    # egress to OTHER instances (NIC / DCN class).  ``NetworkModel`` derives
+    # each inter-instance link from the two endpoint devices' values
+    # (min-bw rule), so a heterogeneous P/D pair sees the slower NIC.
+    inter_instance_bw: float = 25e9
+    inter_instance_latency_s: float = 10e-6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +160,12 @@ class RouterCfg:
 
 @dataclasses.dataclass(frozen=True)
 class NetworkCfg:
+    """Cluster network *defaults*.  Links between instances whose hardware
+    was resolved through the trace registry are derived from the endpoint
+    devices' ``InterconnectSpec``s (min-bw rule; see ``NetworkModel``) —
+    these values only price links with at least one endpoint that carries
+    no device interconnect info (e.g. raw ``hw=`` instances and the real
+    engine driver's configurable transfer bandwidth)."""
     inter_instance_bw: float = 25e9  # bytes/s between instances (DCN/PCIe)
     inter_instance_latency: float = 10e-6
     kv_transfer_policy: str = "full_blocking"  # full_blocking | layerwise_overlap
@@ -173,29 +184,32 @@ class ClusterCfg:
 
 RTX3090 = HardwareSpec(
     name="rtx3090", peak_flops=71e12, hbm_bw=936e9, hbm_capacity=24e9,
-    link_bw=16e9)   # paper's GPU baseline: PCIe 4.0 x16 interconnect
+    link_bw=16e9,   # paper's GPU baseline: PCIe 4.0 x16 interconnect
+    inter_instance_bw=25e9)           # 200GbE-class NIC
 
 TPU_V5E = HardwareSpec(
     name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, hbm_capacity=16e9,
-    link_bw=50e9)
+    link_bw=50e9, inter_instance_bw=50e9)
 
 TPU_V6E = HardwareSpec(
     name="tpu-v6e", peak_flops=918e12, hbm_bw=1.6e12, hbm_capacity=32e9,
-    link_bw=100e9)  # paper's Colab TPU integration case study
+    link_bw=100e9,  # paper's Colab TPU integration case study
+    inter_instance_bw=100e9)          # ICI/DCN-class egress
 
 PIM_DEVICE = HardwareSpec(
     name="pim", peak_flops=8e12, hbm_bw=2.0e12, hbm_capacity=16e9,
-    link_bw=25e9)   # memory-side accelerator for expert offloading [7,8]
+    link_bw=25e9,   # memory-side accelerator for expert offloading [7,8]
+    inter_instance_bw=25e9)
 
 CPU_HOST = HardwareSpec(
     name="cpu-host", peak_flops=2e12, hbm_bw=80e9, hbm_capacity=256e9,
-    link_bw=16e9)
+    link_bw=16e9, inter_instance_bw=12.5e9)
 
 ENGINE_HW = HardwareSpec(
     # matches the container's CPU engine environment: used for engine-matched
     # simulated instances and for the real JaxBackend's block accounting
     name="cpu-engine", peak_flops=5e10, hbm_bw=20e9, hbm_capacity=8e9,
-    link_bw=8e9, host_bw=8e9)
+    link_bw=8e9, host_bw=8e9, inter_instance_bw=8e9)
 
 
 def engine_scheduler_cfg(max_batch: int) -> SchedulerCfg:

@@ -31,4 +31,10 @@ def aggregate(requests: List[SimRequest]) -> Dict:
         "makespan_s": t_end - t_start,
         "preemptions": sum(r.n_preemptions for r in done),
         "restarts": sum(r.n_restarts for r in done),
+        # scheduler-ledger view: peak KV block reservation per request
+        # (per-instance occupancy/watermark timelines live in
+        # instances[<name>]["kv_occupancy"/"kv_watermark"])
+        "kv_blocks_peak_mean": float(np.mean(
+            [r.kv_blocks_peak for r in done])),
+        "kv_blocks_peak_max": int(max(r.kv_blocks_peak for r in done)),
     }

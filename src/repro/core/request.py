@@ -34,6 +34,7 @@ class SimRequest:
     token_times: List[float] = dataclasses.field(default_factory=list)
     n_preemptions: int = 0
     n_restarts: int = 0              # node-failure recoveries
+    kv_blocks_peak: int = 0          # max KV blocks the ledger ever held
 
     @property
     def prompt_len(self) -> int:

@@ -19,10 +19,12 @@ from repro.hw.registry import (HardwareRegistry, default_registry,
                                load_traces, register_trace)
 from repro.hw.specs import get_hw, known_hw, measured_cpu_spec, register_hw
 from repro.hw.synthetic import add_synthetic_points, synthetic_trace
-from repro.hw.trace import (SCHEMA_VERSION, HardwareTrace, InterconnectSpec)
+from repro.hw.trace import (READABLE_SCHEMAS, SCHEMA_VERSION, HardwareTrace,
+                            InterconnectSpec)
 
 __all__ = [
     "HardwareTrace", "InterconnectSpec", "SCHEMA_VERSION",
+    "READABLE_SCHEMAS",
     "HardwareRegistry", "default_registry", "register_trace", "load_traces",
     "synthetic_trace", "add_synthetic_points",
     "get_hw", "register_hw", "known_hw", "measured_cpu_spec",

@@ -6,8 +6,10 @@ The registry is how a simulated cluster mixes accelerators: every
 Resolution order:
 
 1. a registered/loaded measured trace for the device whose ``model``
-   matches the instance's model (trace latencies are (model, hardware)
-   specific — a table measured for another model does not transfer);
+   matches the instance's model AND that carries a grid at the instance's
+   tensor-parallel degree (trace latencies are (model, hardware, tp)
+   specific — a table measured for another model or parallelism does not
+   transfer);
 2. otherwise a synthetic trace generated from the device's
    ``HardwareSpec`` (the spec embedded in a model-mismatched trace, or the
    named spec registry) — the paper's instant analytical integration.
@@ -90,14 +92,17 @@ class HardwareRegistry:
     def resolve(self, device: str, model: ModelSpec,
                 tp: int = 1) -> HardwareTrace:
         """The trace that prices ``model`` on ``device`` at tensor-parallel
-        degree ``tp`` (see module doc).  A registered trace must match both
-        model and tp — trace latencies embed the parallelism they were
-        captured at; anything else gets a synthetic grid at the right tp."""
+        degree ``tp`` (see module doc).  A registered trace must match the
+        model AND carry a grid profiled at ``tp`` (``hwtrace/2`` artifacts
+        hold one grid per swept degree) — trace latencies embed the
+        parallelism they were captured at; anything else gets a synthetic
+        grid at the right tp."""
         tp = max(tp, 1)
         hwt = self._traces.get(device)
-        if hwt is not None and hwt.model in ("*", model.name) \
-                and hwt.tp == tp:
-            return hwt
+        if hwt is not None and hwt.model in ("*", model.name):
+            view = hwt.at_tp(tp)
+            if view is not None:
+                return view
         key = (device, model.name, tp)
         if key not in self._synth:
             spec = hwt.spec if (hwt is not None and hwt.spec) else None

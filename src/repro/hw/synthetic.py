@@ -68,17 +68,36 @@ def add_synthetic_points(trace, spec: HardwareSpec, model: ModelSpec,
     return trace
 
 
-def synthetic_trace(spec: HardwareSpec, model: ModelSpec, *, tp: int = 1,
+class _GridAdder:
+    """Adapter routing ``add`` calls into one tp grid of an artifact."""
+
+    def __init__(self, hwt: HardwareTrace, tp: int):
+        self.hwt, self.tp = hwt, tp
+
+    def add(self, op, phase, tokens, context, latency_s):
+        self.hwt.add(op, phase, tokens, context, latency_s, tp=self.tp)
+
+
+def synthetic_trace(spec: HardwareSpec, model: ModelSpec, *, tp=1,
                     device: Optional[str] = None,
                     token_grid: Sequence[int] = DEFAULT_TOKEN_GRID,
                     ctx_grid: Sequence[int] = DEFAULT_CTX_GRID) \
         -> HardwareTrace:
     """A full ``HardwareTrace`` artifact for a device that was never
-    measured — the analytical model as a "synthetic trace" generator."""
+    measured — the analytical model as a "synthetic trace" generator.
+
+    ``tp`` may be a single tensor-parallel degree or a sequence of degrees
+    (``tp=(1, 2)``); each degree gets its own grid in the one artifact,
+    mirroring what a measured ``--tp 1,2`` profiler sweep emits.
+    """
+    tps = sorted({max(int(t), 1)
+                  for t in (tp if isinstance(tp, (list, tuple)) else (tp,))})
     hwt = HardwareTrace(device=device or spec.name, model=model.name,
-                        tp=max(tp, 1), spec=spec,
+                        tp=tps[0], spec=spec,
                         interconnect=InterconnectSpec.from_hw(spec))
-    add_synthetic_points(hwt, spec, model, tp=tp,
-                         token_grid=token_grid, ctx_grid=ctx_grid)
-    hwt.meta.update({"mode": "synthetic", "n_points": len(hwt.points)})
+    for t in tps:
+        add_synthetic_points(_GridAdder(hwt, t), spec, model, tp=t,
+                             token_grid=token_grid, ctx_grid=ctx_grid)
+    hwt.meta.update({"mode": "synthetic", "tp_degrees": tps,
+                     "n_points": sum(len(hwt.grid(t)) for t in tps)})
     return hwt

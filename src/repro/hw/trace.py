@@ -4,19 +4,18 @@ A ``HardwareTrace`` is the versioned, JSON-serializable artifact the
 profiler emits and the simulator's hardware registry consumes: one file per
 device describing everything the perf model needs to price a cluster
 instance on that hardware — the measured (or synthesized) operator-latency
-table, the interconnect parameters, and optionally the full device spec for
-off-grid analytical fallback.  Integrating a new accelerator is producing
-one of these files (``python -m repro.profiler profile --device <name>
---out traces/<name>.json``) and referencing it from an ``InstanceCfg`` by
-``hw_name`` (see ``docs/adding-hardware.md``).
+tables, the interconnect parameters, and optionally the full device spec
+for off-grid analytical fallback.  Integrating a new accelerator is
+producing one of these files (``python -m repro.profiler profile --device
+<name> --tp 1,2 --out traces/<name>.json``) and referencing it from an
+``InstanceCfg`` by ``hw_name`` (see ``docs/adding-hardware.md``).
 
-JSON schema (version ``hwtrace/1``)::
+JSON schema (version ``hwtrace/2``)::
 
     {
-      "schema": "hwtrace/1",          # required; rejected on mismatch
+      "schema": "hwtrace/2",          # required; hwtrace/1 still loads
       "device": "tpu-v6e",            # hardware name (registry key)
-      "model": "llama3.1-8b-tiny",    # arch the op table was captured for
-      "tp": 1,                        # tensor-parallel degree of the capture
+      "model": "llama3.1-8b-tiny",    # arch the op tables were captured for
       "interconnect": {               # network parameters of the device
         "link_bw": 1.0e11,            #   bytes/s per intra-instance link
         "host_bw": 1.6e10,            #   device<->host bytes/s
@@ -28,15 +27,23 @@ JSON schema (version ``hwtrace/1``)::
         "peak_flops": 9.18e14,        #   combos outside the trace grid and
         "hbm_bw": 1.6e12, ...         #   the paged KV memory model
       },
-      "points": [                     # the op -> latency table over a
-        {"op": "iter",                #   (tokens x context) bucket grid;
-         "phase": "prefill",          #   op kinds: iter | extend |
-         "tokens": 64,                #   kv_export | attn_qkv | attn_score
-         "context": 64,               #   | mlp | moe_ffn | norm | head |
-         "latency_s": 0.0123}, ...    #   embed  (see repro.core.trace)
+      "grids": [                      # one latency grid per tensor-parallel
+        {"tp": 1,                     #   degree the device was profiled at;
+         "points": [                  #   each grid is an op -> latency table
+           {"op": "iter",             #   over (tokens x context) buckets;
+            "phase": "prefill",       #   op kinds: iter | extend |
+            "tokens": 64,             #   kv_export | attn_qkv | attn_score
+            "context": 64,            #   | mlp | moe_ffn | norm | head |
+            "latency_s": 0.0123},     #   embed  (see repro.core.trace)
+           ...]},
+        {"tp": 2, "points": [...]}
       ],
       "meta": {"mode": "runtime", "profile_wall_s": 12.3, ...}
     }
+
+The legacy ``hwtrace/1`` layout (top-level ``"tp"`` + ``"points"`` instead
+of ``"grids"``) loads transparently as a single-grid artifact; ``save``
+always emits ``hwtrace/2``.
 
 ``points`` with op ``iter`` are whole-iteration measurements (highest
 fidelity tier, preferred by ``PerfModel``); operator-class points compose an
@@ -53,13 +60,17 @@ from typing import Dict, List, Optional
 from repro.core.config import HardwareSpec
 from repro.core.trace import OpPoint, Trace
 
-SCHEMA_VERSION = "hwtrace/1"
+SCHEMA_VERSION = "hwtrace/2"
+#: schema versions this build can read (save always emits SCHEMA_VERSION)
+READABLE_SCHEMAS = ("hwtrace/1", "hwtrace/2")
 
 
 @dataclasses.dataclass(frozen=True)
 class InterconnectSpec:
-    """Network parameters carried with a trace so heterogeneous cluster
-    configs inherit realistic transfer pricing per device."""
+    """Network parameters carried with a trace.  These are what
+    ``NetworkModel`` derives inter-instance ``Link``s from (min-bw rule
+    across the two endpoints), so heterogeneous cluster configs inherit
+    realistic, per-device-pair transfer pricing."""
     link_bw: float = 16e9                 # bytes/s per intra-instance link
     host_bw: float = 16e9                 # device <-> host bytes/s
     inter_instance_bw: float = 25e9       # bytes/s between instances
@@ -67,12 +78,21 @@ class InterconnectSpec:
 
     @classmethod
     def from_hw(cls, spec: HardwareSpec) -> "InterconnectSpec":
-        return cls(link_bw=spec.link_bw, host_bw=spec.host_bw)
+        return cls(link_bw=spec.link_bw, host_bw=spec.host_bw,
+                   inter_instance_bw=spec.inter_instance_bw,
+                   inter_instance_latency_s=spec.inter_instance_latency_s)
 
 
 @dataclasses.dataclass
 class HardwareTrace:
-    """One device's portable performance artifact (see module docstring)."""
+    """One device's portable performance artifact (see module docstring).
+
+    ``tp``/``points`` are the *base* grid (lowest profiled tensor-parallel
+    degree — tp=1 for every artifact the profiler emits today);
+    ``tp_grids`` holds additional grids captured at other tp degrees.
+    Single-tp consumers (``to_trace``, ``add``, round-trip pricing) keep
+    working unchanged on the base grid.
+    """
 
     device: str
     model: str
@@ -82,12 +102,42 @@ class HardwareTrace:
         dataclasses.field(default_factory=InterconnectSpec)
     spec: Optional[HardwareSpec] = None
     meta: Dict = dataclasses.field(default_factory=dict)
+    # extra tensor-parallel grids: tp degree -> points (never contains
+    # ``self.tp``; use ``grid``/``tp_degrees`` for uniform access)
+    tp_grids: Dict[int, List[OpPoint]] = dataclasses.field(
+        default_factory=dict)
 
     # ---- construction ----
     def add(self, op: str, phase: str, tokens: int, context: int,
-            latency_s: float):
-        self.points.append(OpPoint(op, phase, int(tokens), int(context),
-                                   float(latency_s)))
+            latency_s: float, tp: Optional[int] = None):
+        """Append one point to the base grid (or the ``tp`` grid)."""
+        pt = OpPoint(op, phase, int(tokens), int(context), float(latency_s))
+        if tp is None or tp == self.tp:
+            self.points.append(pt)
+        else:
+            self.tp_grids.setdefault(int(tp), []).append(pt)
+
+    def add_grid(self, tp: int, points: List[OpPoint]):
+        """Attach a whole latency grid captured at tensor-parallel ``tp``."""
+        tp = int(tp)
+        if tp == self.tp:
+            raise ValueError(
+                f"{self.device}: grid for tp={tp} already exists (base)")
+        if tp in self.tp_grids:
+            raise ValueError(
+                f"{self.device}: grid for tp={tp} already exists")
+        self.tp_grids[tp] = list(points)
+
+    def merge(self, other: "HardwareTrace") -> "HardwareTrace":
+        """Absorb ``other``'s grids (same device+model) into this artifact —
+        how the profiler CLI folds a ``--tp 1,2`` sweep into one file."""
+        if (other.device, other.model) != (self.device, self.model):
+            raise ValueError(
+                f"cannot merge trace for ({other.device}, {other.model}) "
+                f"into ({self.device}, {self.model})")
+        for tp in other.tp_degrees():
+            self.add_grid(tp, other.grid(tp))
+        return self
 
     @classmethod
     def from_trace(cls, trace: Trace, *, device: Optional[str] = None,
@@ -103,10 +153,46 @@ class HardwareTrace:
                    interconnect=interconnect, spec=spec,
                    meta=dict(trace.meta))
 
-    def to_trace(self) -> Trace:
-        """The ``repro.core.trace.Trace`` view the ``PerfModel`` consumes."""
-        return Trace(model=self.model, hardware=self.device, tp=self.tp,
-                     points=list(self.points), meta=dict(self.meta))
+    # ---- grid access ----
+    def tp_degrees(self) -> List[int]:
+        """Every tensor-parallel degree this artifact has a grid for."""
+        return sorted({self.tp, *self.tp_grids})
+
+    def grid(self, tp: int) -> Optional[List[OpPoint]]:
+        """The latency grid at tensor-parallel ``tp`` (None if absent)."""
+        if tp == self.tp:
+            return self.points
+        return self.tp_grids.get(tp)
+
+    def at_tp(self, tp: int) -> Optional["HardwareTrace"]:
+        """A single-grid view of this artifact at tensor-parallel ``tp``
+        (``self`` when ``tp`` is the base degree; None when no grid
+        matches).  This is how ``HardwareRegistry.resolve`` hands the perf
+        model the grid matching the instance's parallelism instead of
+        rescaling analytically."""
+        if tp == self.tp:
+            return self
+        pts = self.tp_grids.get(tp)
+        if pts is None:
+            return None
+        # defensive copies (like every other construction path): mutating
+        # a resolved view must never reach back into the cached artifact
+        return HardwareTrace(device=self.device, model=self.model, tp=tp,
+                             points=list(pts),
+                             interconnect=self.interconnect,
+                             spec=self.spec, meta=dict(self.meta))
+
+    def to_trace(self, tp: Optional[int] = None) -> Trace:
+        """The ``repro.core.trace.Trace`` view the ``PerfModel`` consumes
+        (base grid by default; pass ``tp`` for another profiled degree)."""
+        tp = self.tp if tp is None else tp
+        pts = self.grid(tp)
+        if pts is None:
+            raise KeyError(
+                f"{self.device}: no grid at tp={tp} "
+                f"(have {self.tp_degrees()})")
+        return Trace(model=self.model, hardware=self.device, tp=tp,
+                     points=list(pts), meta=dict(self.meta))
 
     # ---- validation ----
     def validate(self):
@@ -114,15 +200,21 @@ class HardwareTrace:
             raise ValueError("HardwareTrace.device must be non-empty")
         if self.tp < 1:
             raise ValueError(f"HardwareTrace.tp must be >= 1, got {self.tp}")
-        for i, p in enumerate(self.points):
-            if p.tokens < 1 or p.context < 0:
-                raise ValueError(
-                    f"point {i} ({p.op}/{p.phase}) has invalid shape "
-                    f"tokens={p.tokens} context={p.context}")
-            if not p.latency_s > 0:
-                raise ValueError(
-                    f"point {i} ({p.op}/{p.phase}) has non-positive "
-                    f"latency {p.latency_s}")
+        if self.tp in self.tp_grids:
+            raise ValueError(
+                f"tp_grids must not duplicate the base tp={self.tp}")
+        for tp in self.tp_degrees():
+            if tp < 1:
+                raise ValueError(f"grid tp must be >= 1, got {tp}")
+            for i, p in enumerate(self.grid(tp)):
+                if p.tokens < 1 or p.context < 0:
+                    raise ValueError(
+                        f"tp={tp} point {i} ({p.op}/{p.phase}) has invalid "
+                        f"shape tokens={p.tokens} context={p.context}")
+                if not p.latency_s > 0:
+                    raise ValueError(
+                        f"tp={tp} point {i} ({p.op}/{p.phase}) has "
+                        f"non-positive latency {p.latency_s}")
         return self
 
     # ---- io ----
@@ -133,10 +225,12 @@ class HardwareTrace:
             "schema": SCHEMA_VERSION,
             "device": self.device,
             "model": self.model,
-            "tp": self.tp,
             "interconnect": dataclasses.asdict(self.interconnect),
             "spec": dataclasses.asdict(self.spec) if self.spec else None,
-            "points": [dataclasses.asdict(p) for p in self.points],
+            "grids": [{"tp": tp,
+                       "points": [dataclasses.asdict(p)
+                                  for p in self.grid(tp)]}
+                      for tp in self.tp_degrees()],
             "meta": self.meta,
         }
         with open(path, "w") as f:
@@ -148,20 +242,39 @@ class HardwareTrace:
         with open(path) as f:
             doc = json.load(f)
         schema = doc.get("schema")
-        if schema != SCHEMA_VERSION:
+        if schema not in READABLE_SCHEMAS:
             raise ValueError(
                 f"{path}: unsupported hardware-trace schema {schema!r} "
-                f"(this build reads {SCHEMA_VERSION!r})")
-        for key in ("device", "points"):
-            if key not in doc:
-                raise ValueError(f"{path}: missing required key {key!r}")
+                f"(this build reads {READABLE_SCHEMAS!r})")
+        if "device" not in doc:
+            raise ValueError(f"{path}: missing required key 'device'")
+
+        def parse_points(raw):
+            try:
+                return [OpPoint(**p) for p in raw]
+            except TypeError as e:
+                raise ValueError(
+                    f"{path}: malformed trace point: {e}") from e
+
+        if schema == "hwtrace/1":
+            # legacy single-grid layout: top-level tp + points
+            if "points" not in doc:
+                raise ValueError(f"{path}: missing required key 'points'")
+            grids = {int(doc.get("tp", 1)): parse_points(doc["points"])}
+        else:
+            raw_grids = doc.get("grids")
+            if not raw_grids:
+                raise ValueError(f"{path}: missing required key 'grids'")
+            grids = {}
+            for g in raw_grids:
+                tp = int(g.get("tp", 1))
+                if tp in grids:
+                    raise ValueError(f"{path}: duplicate grid for tp={tp}")
+                grids[tp] = parse_points(g.get("points", []))
+        base = min(grids)
         spec = HardwareSpec(**doc["spec"]) if doc.get("spec") else None
-        try:
-            points = [OpPoint(**p) for p in doc["points"]]
-        except TypeError as e:
-            raise ValueError(f"{path}: malformed trace point: {e}") from e
         hwt = cls(device=doc["device"], model=doc.get("model", "*"),
-                  tp=doc.get("tp", 1), points=points,
+                  tp=base, points=grids.pop(base), tp_grids=grids,
                   interconnect=InterconnectSpec(**doc.get("interconnect",
                                                           {})),
                   spec=spec, meta=doc.get("meta", {}))

@@ -24,6 +24,24 @@ def make_host_mesh(model_parallel: int = 1):
                          ("data", "model"))
 
 
+def make_engine_mesh(tp: int = 1):
+    """Serving-engine mesh: exactly ``tp`` devices as a (1, tp)
+    (data, model) grid.  One ``ServingEngine`` is one tensor-parallel
+    group — replica scale-out happens at the instance level (the runtime
+    routes across engines), never inside the engine, so the data axis is
+    always 1.  CPU validation forces multiple host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before the
+    first jax import)."""
+    devs = jax.devices()
+    if len(devs) < tp:
+        raise ValueError(
+            f"tensor-parallel degree {tp} needs {tp} devices but only "
+            f"{len(devs)} are visible; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp} "
+            f"before importing jax")
+    return jax.make_mesh((1, tp), ("data", "model"), devices=devs[:tp])
+
+
 def dp_axes(mesh) -> tuple:
     """The data-parallel axis names of a mesh (pod axis folds into DP)."""
     names = mesh.axis_names

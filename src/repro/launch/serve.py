@@ -23,6 +23,10 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree per engine (needs >= tp "
+                         "visible devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count)")
     ap.add_argument("--router", default="round_robin",
                     help="any registered routing policy "
                          "(round_robin | least_loaded | prefix_aware)")
@@ -37,7 +41,7 @@ def main():
         mean_prompt=90, mean_output=24, max_prompt=args.max_len // 2,
         max_output=48, share_fraction=0.5 if args.prefix_cache else 0.0))
     kw = dict(max_batch=args.max_batch, max_len=args.max_len,
-              prefix_cache=args.prefix_cache)
+              prefix_cache=args.prefix_cache, tp=args.tp)
     if args.pd:
         p0 = ServingEngine(cfg, name="p0", role="prefill", **kw)
         engines = [p0, ServingEngine(cfg, params=p0.params, name="d0",

@@ -59,7 +59,7 @@ def fit_to_mesh(spec_tree, shape_tree, mesh):
         is_leaf=lambda x: isinstance(x, P))
 
 
-def _param_spec(path: Tuple[str, ...], leaf) -> P:
+def _param_spec(path: Tuple[str, ...], leaf, model_size: int = 16) -> P:
     name = path[-1]
     rank = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
     in_moe = "moe" in path
@@ -71,7 +71,7 @@ def _param_spec(path: Tuple[str, ...], leaf) -> P:
         # experts stacked at dim -3: expert parallelism when E divides the
         # TP axis; otherwise fall back to TP inside each expert.
         E = leaf.shape[-3]
-        if E % 16 == 0:
+        if E % model_size == 0:
             return _trailing(rank, -3)
         return _trailing(rank, -1 if name in ("w_gate", "w_up") else -2)
     if name in _REPL:
@@ -89,15 +89,19 @@ def _trailing(rank: int, dim: int) -> P:
     return P(*spec)
 
 
-def param_pspecs(params_shape: Any):
-    """Map a params (or opt-state) shape tree to PartitionSpecs."""
+def param_pspecs(params_shape: Any, model_size: int = 16):
+    """Map a params (or opt-state) shape tree to PartitionSpecs.
+
+    ``model_size`` is the model-axis extent divisibility heuristics use
+    (16 for the production mesh; the serving engine passes its tp degree).
+    """
     def walk(tree, path=()):
         if isinstance(tree, dict):
             return {k: walk(v, path + (k,)) for k, v in tree.items()}
         if isinstance(tree, (list, tuple)):
             vals = [walk(v, path + (str(i),)) for i, v in enumerate(tree)]
             return type(tree)(vals)
-        return _param_spec(path, tree)
+        return _param_spec(path, tree, model_size)
     return walk(params_shape)
 
 
@@ -139,12 +143,15 @@ def batch_pspecs(batch_shape, dp: Tuple[str, ...]):
 
 
 def cache_pspecs(cache_shape, dp: Tuple[str, ...], batch: int,
-                 seq_shard: bool = False):
+                 seq_shard: bool = False, model_size: int = 16):
     """KV caches (L,B,S,KV,dh) / SSM states -> specs.
 
     batch >= dp size: shard B on dp, KV heads on model.
     batch == 1 (long-context): shard cache sequence on 'data' (SP) and KV
     heads on model; SSM states shard heads on model only.
+    ``model_size`` is the model-axis extent (16 for the production mesh;
+    the serving engine passes its tp) used to choose between sharding the
+    KV-head dim and the head_dim.
     """
     sp = batch > 1
 
@@ -169,7 +176,7 @@ def cache_pspecs(cache_shape, dp: Tuple[str, ...], batch: int,
                 # axis (flash-decoding style split-K) instead of padding
                 # few KV heads / splitting head_dim
                 spec[-3] = MODEL
-            elif tree.shape[-2] % 16 == 0:  # enough KV heads for TP axis
+            elif tree.shape[-2] % model_size == 0:  # KV heads fill TP axis
                 spec[-2] = MODEL
             else:                           # shard head_dim (128/16=8)
                 spec[-1] = MODEL

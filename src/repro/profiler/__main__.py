@@ -8,6 +8,12 @@ hardware spec for devices you don't have):
   python -m repro.profiler profile --device cpu-engine \
       --arch llama3.1-8b-tiny --out traces/cpu-engine.json
 
+  # sweep tensor-parallel degrees: one hwtrace/2 artifact, one grid per tp
+  # (measured sweeps shard the engine; on CPU the needed host device count
+  # is forced automatically)
+  python -m repro.profiler profile --device cpu-engine --tp 1,2 \
+      --arch llama3.1-8b-tiny --out traces/cpu-engine.json
+
   # synthesize a never-measured accelerator from its spec sheet
   python -m repro.profiler profile --device tpu-v6e \
       --arch llama3.1-8b-tiny --out traces/tpu-v6e.json
@@ -25,7 +31,39 @@ invocations keep their legacy meaning (= ``ops``).
 """
 import argparse
 import json
+import os
 import sys
+
+
+def _parse_tp(value) -> list:
+    """``--tp 1,2`` -> sorted unique degrees [1, 2]."""
+    if isinstance(value, int):
+        value = str(value)
+    try:
+        tps = sorted({int(t) for t in value.split(",") if t.strip()})
+    except ValueError:
+        raise SystemExit(
+            f"--tp expects comma-separated integers (e.g. --tp 1,2), "
+            f"got {value!r}") from None
+    if not tps:
+        raise SystemExit("--tp needs at least one degree (e.g. --tp 1,2)")
+    if tps[0] < 1:
+        raise SystemExit(f"--tp degrees must be >= 1, got {tps[0]}")
+    return tps
+
+
+def _ensure_devices(n: int):
+    """A measured tp=n probe needs n local devices.  On a CPU host we can
+    force them (the whole point of the CPU-validated sharded engine) —
+    but only before jax initializes, hence this runs pre-import."""
+    if n <= 1 or "jax" in sys.modules:
+        return
+    if os.environ.get("JAX_PLATFORMS", "").startswith(("cuda", "tpu")):
+        return   # real accelerators: the visible device count is physical
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
 
 
 def _cmd_profile(args):
@@ -54,20 +92,33 @@ def _cmd_profile(args):
         register_hw(dataclasses.replace(
             get_hw(args.device), mmu_efficiency=args.mmu_efficiency))
 
+    tps = _parse_tp(args.tp)
     mode = args.mode
     if mode == "auto":
         mode = "measured" if args.device in ("cpu-engine", "local") \
             else "synthetic"
     if mode == "measured":
+        _ensure_devices(max(tps))
         from repro.profiler.runtime_profiler import runtime_trace
-        hwt = runtime_trace(args.arch, device=args.device,
-                            max_batch=args.max_batch, max_len=args.max_len,
-                            reps=args.reps, seed=args.seed)
+        hwt, wall = None, 0.0
+        for tp in tps:
+            one = runtime_trace(args.arch, device=args.device,
+                                max_batch=args.max_batch,
+                                max_len=args.max_len,
+                                reps=args.reps, seed=args.seed, tp=tp)
+            wall += one.meta.get("profile_wall_s", 0.0)
+            hwt = one if hwt is None else hwt.merge(one)
+        # merge() keeps the first probe's meta; restate artifact-wide facts
+        hwt.meta["profile_wall_s"] = wall
+        hwt.meta.pop("tp", None)
     else:
         from repro.hw.synthetic import synthetic_trace
         hwt = synthetic_trace(get_hw(args.device),
                               model_spec_from_arch(get_config(args.arch)),
-                              tp=args.tp, device=args.device)
+                              tp=tps, device=args.device)
+    hwt.meta["tp_degrees"] = hwt.tp_degrees()
+    hwt.meta["n_points"] = sum(
+        len(hwt.grid(t)) for t in hwt.tp_degrees())
     out = args.out or f"traces/{args.device}.json"
     hwt.save(out)
     # round-trip through the registry so a broken artifact fails HERE,
@@ -106,7 +157,12 @@ def main():
                         "(spec-derived) otherwise")
     p.add_argument("--out", default=None,
                    help="output path (default traces/<device>.json)")
-    p.add_argument("--tp", type=int, default=1)
+    p.add_argument("--tp", default="1",
+                   help="tensor-parallel degree(s) to profile, comma-"
+                        "separated (e.g. --tp 1,2); each degree becomes "
+                        "one grid in the emitted hwtrace/2 artifact. "
+                        "Measured sweeps shard the engine over that many "
+                        "devices (forced on CPU hosts)")
     p.add_argument("--max-batch", type=int, default=4)
     p.add_argument("--max-len", type=int, default=512)
     p.add_argument("--reps", type=int, default=3)

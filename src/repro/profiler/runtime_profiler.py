@@ -31,8 +31,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.config import (ENGINE_HW, InstanceCfg, PrefixCacheCfg,
-                               SchedulerCfg)
+from repro.core.config import (ENGINE_HW, InstanceCfg, ParallelismCfg,
+                               PrefixCacheCfg, SchedulerCfg)
 from repro.core.request import SimRequest
 from repro.core.trace import Trace
 from repro.hw.trace import HardwareTrace, InterconnectSpec
@@ -40,12 +40,13 @@ from repro.profiler.arch_spec import model_spec_from_arch
 
 
 def _probe_instance_cfg(arch: str, max_batch: int, max_len: int,
-                        chunk: int) -> InstanceCfg:
+                        chunk: int, tp: int = 1) -> InstanceCfg:
     """Engine-matched InstanceCfg for the probe backend (chunked prefill on
     so ``warmup`` pre-compiles the extend buckets we measure)."""
     return InstanceCfg(
         name="probe", hw=ENGINE_HW, model=model_spec_from_arch(
             get_config(arch)),
+        parallelism=ParallelismCfg(tp=tp),
         scheduler=SchedulerCfg(max_batch_size=max_batch,
                                max_batch_tokens=1 << 16,
                                chunked_prefill=True, prefill_chunk=chunk),
@@ -58,13 +59,16 @@ def runtime_trace(arch: str, *, device: str = "cpu-engine",
                   decode_ctxs: Sequence[int] = (32, 64, 128, 256),
                   extend_ctxs: Sequence[int] = (16, 64, 128),
                   extend_suffixes: Sequence[int] = (16, 64, 128),
-                  reps: int = 3, seed: int = 0,
+                  reps: int = 3, seed: int = 0, tp: int = 1,
                   engine=None) -> HardwareTrace:
     """Measure ``arch`` on the local device through ``JaxBackend``.
 
     ``engine`` may supply a pre-built ``ServingEngine`` (params reuse);
-    otherwise one is constructed.  Returns a portable ``HardwareTrace``
-    labeled ``device`` with the container's engine spec embedded.
+    otherwise one is constructed.  ``tp > 1`` probes a sharded engine over
+    a (1, tp) device mesh — the grid then prices tp-degree instances (the
+    CLI sweeps ``--tp 1,2`` into one multi-grid artifact).  Returns a
+    portable ``HardwareTrace`` labeled ``device`` with the container's
+    engine spec embedded.
     """
     from repro.runtime.backends.jax_engine import JaxBackend
     from repro.runtime.scheduler import ScheduledWork
@@ -73,13 +77,13 @@ def runtime_trace(arch: str, *, device: str = "cpu-engine",
     cfg = get_config(arch)
     t_start = time.time()
     eng = engine or ServingEngine(cfg, max_batch=max_batch, max_len=max_len,
-                                  name="probe", seed=seed)
+                                  name="probe", seed=seed, tp=tp)
     icfg = _probe_instance_cfg(arch, max_batch, max_len,
-                               chunk=max(extend_suffixes))
+                               chunk=max(extend_suffixes), tp=eng.tp)
     backend = JaxBackend(eng, icfg)
     backend.warmup()
 
-    trace = Trace(model=arch, hardware=device, tp=1)
+    trace = Trace(model=arch, hardware=device, tp=eng.tp)
     rng = np.random.default_rng(seed)
     rid = itertools.count()
 
@@ -151,7 +155,7 @@ def runtime_trace(arch: str, *, device: str = "cpu-engine",
     trace.meta.update({
         "mode": "runtime", "profile_wall_s": time.time() - t_start,
         "n_points": len(trace.points), "max_batch": max_batch,
-        "max_len": max_len,
+        "max_len": max_len, "tp": eng.tp,
     })
     return HardwareTrace.from_trace(
         trace, device=device, spec=ENGINE_HW,

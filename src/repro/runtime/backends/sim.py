@@ -29,7 +29,7 @@ class SimBackend:
         # prefix-cache restore / tier-fetch latency charged to the next
         # iteration (the request that hit pays for its own fetch)
         self._pending_fetch_s = 0.0
-        self._tput_hint = None   # lazily priced reference-batch tokens/s
+        self._tput_hint = {}     # phase -> lazily priced reference tokens/s
 
     def warmup(self):
         pass
@@ -37,20 +37,28 @@ class SimBackend:
     def prompt_cap(self, req: SimRequest):
         return None
 
-    def throughput_hint(self) -> float:
-        """Trace-priced tokens/s on a reference batch (one 256-token
-        prefill + a 4-wide decode at context 256) — the cold-start signal
-        ``hardware_aware`` routing uses before observed throughput exists."""
-        if self._tput_hint is None:
+    def throughput_hint(self, phase: Optional[str] = None) -> float:
+        """Trace-priced tokens/s on a reference batch — the cold-start
+        signal ``hardware_aware`` routing uses before observed throughput
+        exists.  ``phase`` selects the per-phase reference (a 256-token
+        prefill, or a 4-wide decode at context 256); ``None`` blends both
+        for unified-role instances.  P/D role-aware placement queries the
+        matching phase so a prefill-fast device is rated by its prefill
+        grid, not a blend it will never run."""
+        if None not in self._tput_hint:
             from repro.core.perfmodel import BatchItem
             pre = self.perf.iteration_latency(
                 [BatchItem(tokens=256, context=256, phase="prefill")])
             dec = self.perf.iteration_latency(
                 [BatchItem(tokens=1, context=256, phase="decode")
                  for _ in range(4)])
-            self._tput_hint = (256 + 4) / max(pre.total_s + dec.total_s,
-                                              1e-12)
-        return self._tput_hint
+            self._tput_hint["prefill"] = 256 / max(pre.total_s, 1e-12)
+            self._tput_hint["decode"] = 4 / max(dec.total_s, 1e-12)
+            self._tput_hint[None] = (256 + 4) / max(
+                pre.total_s + dec.total_s, 1e-12)
+        # unknown phase strings fall back to the blended estimate rather
+        # than crashing a custom routing policy
+        return self._tput_hint.get(phase, self._tput_hint[None])
 
     def execute(self, work: List[ScheduledWork], now: float) -> float:
         cost = self.perf.iteration_latency(to_batch_items(work))

@@ -81,6 +81,11 @@ class ServingRuntime:
                 # off-grid analytical fallback price the same hardware
                 icfg = dataclasses.replace(icfg, hw=hwt.spec)
             trace = hwt.to_trace()
+            # the trace also carries the device's interconnect parameters:
+            # links between two trace-resolved instances derive bandwidth/
+            # latency from the endpoint pair (min-bw rule), so mixed
+            # accelerator clusters see per-pair, not cluster-global, links
+            self.network.register_endpoint(icfg.name, hwt.interconnect)
         if icfg.hw is None:
             raise ValueError(
                 f"instance {icfg.name!r} has no hardware spec: set "
@@ -121,7 +126,12 @@ class ServingRuntime:
             # prefill-side backend state (e.g. the engine slot) must not leak
             src.backend.release(req)
             return
-        tgt = min(targets, key=lambda i: i.load())
+        # decode-throughput-weighted: a faster decode device absorbs
+        # proportionally more handoffs (phase-aware counterpart of the
+        # hardware_aware arrival policy; identical to least-loaded when
+        # the targets are homogeneous)
+        tgt = min(targets, key=lambda i: (i.load() + 1.0)
+                  / max(i.throughput_estimate("decode"), 1e-9))
         req.decode_instance = tgt.name
         handoff = src.backend.export_kv(req)
         kv_bytes = handoff.nbytes
@@ -192,4 +202,5 @@ class ServingRuntime:
         m["sim_events"] = self.queue.n_processed
         m["instances"] = {n: i.stats() for n, i in self.instances.items()}
         m["network_bytes"] = self.network.stats()
+        m["network_links"] = self.network.link_stats()
         return m

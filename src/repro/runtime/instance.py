@@ -15,7 +15,7 @@ backends for the same workload — only the time axis differs.
 from __future__ import annotations
 
 from collections import deque
-from typing import Callable, Deque, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.config import InstanceCfg
 from repro.core.engine import EventQueue
@@ -43,11 +43,22 @@ class RuntimeInstance:
         self.busy_time = 0.0
         self.iterations = 0
         self.total_tokens = 0
+        # per-phase observed throughput: pure-phase iterations attribute
+        # their latency+tokens to that phase (mixed iterations only feed
+        # the blended totals above) — the signal P/D role-aware routing
+        # prefers over the blended reference batch
+        self.phase_tokens: Dict[str, int] = {"prefill": 0, "decode": 0}
+        self.phase_time: Dict[str, float] = {"prefill": 0.0, "decode": 0.0}
+        self.phase_iters: Dict[str, int] = {"prefill": 0, "decode": 0}
         # (req_id, phase, tokens) per work item per iteration — the policy
         # trace the sim/real parity test compares across backends (bounded:
         # long production simulations keep only the most recent window)
         self.decisions: Deque[Tuple[Tuple[int, str, int], ...]] = \
             deque(maxlen=65536)
+        # KV-pool watermark timeline: (t, pool blocks in use, running reqs)
+        # sampled once per iteration — vLLM-style watermark plots
+        self.kv_watermark: Deque[Tuple[float, int, int]] = \
+            deque(maxlen=4096)
         # callbacks wired by the cluster
         self.on_prefill_done: Optional[Callable] = None   # P/D handoff
         self.on_request_done: Optional[Callable] = None
@@ -96,8 +107,15 @@ class RuntimeInstance:
             tuple((w.request.req_id, w.phase, w.tokens) for w in work))
         latency = self.backend.execute(work, self.queue.now)
         self.iterations += 1
-        self.total_tokens += sum(w.tokens for w in work)
+        tokens = sum(w.tokens for w in work)
+        self.total_tokens += tokens
         self.busy_time += latency
+        phases = {w.phase for w in work}
+        if len(phases) == 1:
+            phase = phases.pop()
+            self.phase_tokens[phase] += tokens
+            self.phase_time[phase] += latency
+            self.phase_iters[phase] += 1
         self.queue.schedule(latency, lambda: self._finish_iteration(work),
                             tag=f"{self.name}.iter")
 
@@ -105,6 +123,9 @@ class RuntimeInstance:
         if not self.alive:
             return
         now = self.queue.now
+        self.kv_watermark.append(
+            (now, self.mem.total_blocks - self.mem.free_blocks,
+             len(self.scheduler.running)))
         for w in work:
             req = w.request
             if w.phase == "prefill":
@@ -227,10 +248,23 @@ class RuntimeInstance:
         return (len(self.scheduler.waiting) + len(self.scheduler.running)
                 + len(self._pending_decode) + 2.0 * self.mem.utilization())
 
-    def throughput_estimate(self) -> float:
+    def throughput_estimate(self, phase: Optional[str] = None) -> float:
         """Tokens/s signal for hardware-aware routing: observed throughput
         once enough iterations ran, else the backend's static hint (the
-        trace-priced reference batch for ``SimBackend``)."""
+        trace-priced reference batch for ``SimBackend``).
+
+        ``phase`` ("prefill" | "decode") returns the phase-specific
+        estimate — observed from pure-phase iterations when available,
+        else the backend's per-phase hint — so P/D role-aware placement
+        stops rating a prefill-only instance by a blended batch it never
+        runs.  ``None`` keeps the blended estimate for unified instances.
+        """
+        if phase in self.phase_iters:    # unknown phase -> blended
+            if self.phase_iters[phase] >= 8 and self.phase_time[phase] > 0:
+                return self.phase_tokens[phase] / self.phase_time[phase]
+            hint = getattr(self.backend, "throughput_hint", None)
+            if hint is not None:
+                return hint(phase)
         if self.iterations >= 8 and self.busy_time > 0:
             return self.total_tokens / self.busy_time
         hint = getattr(self.backend, "throughput_hint", None)
@@ -241,7 +275,11 @@ class RuntimeInstance:
              "busy_s": self.busy_time, "backend": self.backend.name,
              "hw": self.cfg.hw_name or self.cfg.hw.name,
              "preemptions": self.scheduler.n_preemptions,
-             "mem_peak_blocks": self.mem.peak_used}
+             "mem_peak_blocks": self.mem.peak_used,
+             # scheduler ledger exposure: per-request blocks held right now
+             # plus the sampled pool watermark timeline (vLLM-style plots)
+             "kv_occupancy": self.scheduler.occupancy(),
+             "kv_watermark": list(self.kv_watermark)}
         if self.cache is not None:
             s["prefix_cache"] = self.cache.stats()
         s.update(self.backend.stats())

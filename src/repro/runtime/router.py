@@ -94,13 +94,20 @@ class HardwareAware(RoutingPolicy):
     backend's trace-priced hint), so a TPU-class instance that decodes 5x
     faster than a GPU-class sibling absorbs ~5x the queue before the router
     prefers the slower device.
+
+    The estimate is phase-aware: a prefill-role instance (P/D
+    disaggregation) is rated by its *prefill* throughput — arrival routing
+    only ever hands it prefill work — instead of the blended
+    prefill+decode reference batch.  Decode-side placement uses the decode
+    estimate symmetrically (``ServingRuntime._handoff``).
     """
     name = "hardware_aware"
 
     def choose(self, req, candidates, now):
         def score(inst):
-            return (inst.load() + 1.0) / max(inst.throughput_estimate(),
-                                             1e-9)
+            phase = "prefill" if inst.cfg.role == "prefill" else None
+            return (inst.load() + 1.0) / max(
+                inst.throughput_estimate(phase), 1e-9)
         return min(candidates, key=score)
 
 

@@ -119,6 +119,7 @@ class BatchScheduler:
         if not self.mem.allocate_blocks(need - have):
             return False
         self._reserved[req.req_id] = need
+        req.kv_blocks_peak = max(req.kv_blocks_peak, need)
         return True
 
     def _release(self, req: SimRequest):
@@ -128,6 +129,11 @@ class BatchScheduler:
 
     def reserved_blocks(self, req: SimRequest) -> int:
         return self._reserved.get(req.req_id, 0)
+
+    def occupancy(self) -> Dict[int, int]:
+        """Ledger snapshot: req_id -> KV blocks currently reserved (the
+        per-request occupancy ``Metrics`` exposes for watermark plots)."""
+        return dict(self._reserved)
 
     def _try_admit(self, req: SimRequest) -> bool:
         """Reserve KV blocks for prompt + a slice of the expected output."""
@@ -270,8 +276,9 @@ class BatchScheduler:
             got = min(self.mem.blocks_for(tokens), self.mem.free_blocks)
             if got > 0:
                 self.mem.allocate_blocks(got)
-            self._reserved[req.req_id] = \
-                self._reserved.get(req.req_id, 0) + got
+            held = self._reserved.get(req.req_id, 0) + got
+            self._reserved[req.req_id] = held
+            req.kv_blocks_peak = max(req.kv_blocks_peak, held)
         self.running.append(req)
         return True
 

@@ -19,8 +19,8 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.config import (ENGINE_HW, ClusterCfg, InstanceCfg,
-                               NetworkCfg, PrefixCacheCfg, RouterCfg,
-                               SchedulerCfg, engine_scheduler_cfg)
+                               NetworkCfg, ParallelismCfg, PrefixCacheCfg,
+                               RouterCfg, SchedulerCfg, engine_scheduler_cfg)
 from repro.core.request import SimRequest
 from repro.runtime.backends.jax_engine import JaxBackend
 from repro.runtime.cluster import ServingRuntime
@@ -41,8 +41,9 @@ def engine_instance_cfg(engine: ServingEngine,
         scheduler = dataclasses.replace(scheduler,
                                         max_batch_size=engine.max_batch)
     return InstanceCfg(
-        name=engine.name, hw=ENGINE_HW, model=spec, n_devices=1,
-        role=engine.role,
+        name=engine.name, hw=ENGINE_HW, model=spec,
+        n_devices=engine.tp, role=engine.role,
+        parallelism=ParallelismCfg(tp=engine.tp),
         scheduler=scheduler,
         prefix_cache=PrefixCacheCfg(
             enabled=engine.radix is not None,

@@ -86,20 +86,33 @@ class ServingEngine:
 
     Driven exclusively by ``repro.runtime.backends.jax_engine.JaxBackend``;
     see the module docstring for the division of labor.
+
+    ``tp > 1`` makes the engine a tensor-parallel group: params and the
+    slot KV cache are sharded over an explicit (data=1, model=tp) mesh
+    (``repro.launch.mesh.make_engine_mesh``) using the production sharding
+    rules (``repro.launch.sharding``), and every jit — prefill, extend,
+    decode, and the slot-copy plumbing — runs SPMD over that mesh with
+    GSPMD inserting the collectives.  On CPU this is validated by forcing
+    host device count (``XLA_FLAGS=--xla_force_host_platform_device_count``).
     """
 
     def __init__(self, cfg: ArchConfig, params=None, *, max_batch: int = 8,
                  max_len: int = 512, prefix_cache: bool = False,
-                 role: str = "unified", name: str = "engine0", seed: int = 0):
+                 role: str = "unified", name: str = "engine0", seed: int = 0,
+                 tp: int = 1):
         self.cfg = cfg
         self.name = name
         self.role = role
+        self.tp = max(int(tp), 1)
+        self.mesh = None
         self.model = Model(cfg, remat=False)
         self.params = params if params is not None else self.model.init(
             jax.random.PRNGKey(seed))
         self.max_batch = max_batch
         self.max_len = max_len
         self.cache = self.model.init_cache(max_batch, max_len)
+        if self.tp > 1:
+            self._shard_over_mesh()
         self.slot_free = list(range(max_batch))
         self.radix = RealRadixCache() if prefix_cache else None
         self._jit_decode = jax.jit(self.model.decode)
@@ -107,6 +120,34 @@ class ServingEngine:
                                     static_argnames=())
         self._jit_extend = jax.jit(self.model.extend)
         self._tokens_buf = np.zeros((max_batch, 1), np.int32)
+
+    def _shard_over_mesh(self):
+        """Lay params + slot cache out over the (data=1, model=tp) mesh.
+
+        Uses the same PartitionSpec rules as the production launcher
+        (params: column/row TP; KV: heads or head_dim on the model axis),
+        post-passed by ``fit_to_mesh`` so dims that do not divide the tp
+        degree are replicated explicitly.  The jits then pick the committed
+        shardings up from their inputs — no per-jit in_shardings needed.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch import sharding as shd
+        from repro.launch.mesh import make_engine_mesh
+        self.mesh = make_engine_mesh(self.tp)
+
+        def place(tree, spec_tree):
+            fitted = shd.fit_to_mesh(spec_tree, tree, self.mesh)
+            shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(self.mesh, s), fitted,
+                is_leaf=lambda x: isinstance(x, P))
+            return jax.device_put(tree, shardings)
+
+        self.params = place(
+            self.params, shd.param_pspecs(self.params, model_size=self.tp))
+        self.cache = place(
+            self.cache, shd.cache_pspecs(self.cache, ("data",),
+                                         self.max_batch,
+                                         model_size=self.tp))
 
     def warmup(self, buckets=(16, 32, 64, 128, 256)):
         """Compile prefill/extend/decode at every bucket so measured

@@ -99,6 +99,60 @@ def test_registry_resolve_respects_tp():
     assert reg2.resolve("tpu-v6e", MODEL_8B, tp=4).tp == 4
 
 
+def test_multi_tp_artifact_roundtrip_and_resolution(tmp_path):
+    """One hwtrace/2 artifact carries one grid per swept tp degree; the
+    registry serves the *matching grid* (not a synthetic rescale) for any
+    degree the device was profiled at."""
+    hwt = synthetic_trace(TPU_V6E, MODEL_8B, tp=(1, 2))
+    assert hwt.tp_degrees() == [1, 2]
+    path = str(tmp_path / "v6e.json")
+    hwt.save(path)
+    doc = json.load(open(path))
+    assert doc["schema"] == "hwtrace/2"
+    assert [g["tp"] for g in doc["grids"]] == [1, 2]
+    reg = HardwareRegistry()
+    loaded = reg.load_file(path)
+    assert loaded.tp_degrees() == [1, 2]
+    r1 = reg.resolve("tpu-v6e", MODEL_8B, tp=1)
+    r2 = reg.resolve("tpu-v6e", MODEL_8B, tp=2)
+    assert r1 is loaded                       # base grid: the artifact
+    assert r2.tp == 2 and r2.spec == TPU_V6E  # tp view, same device spec
+    # the tp=2 grid is the artifact's own, not a fresh synthetic object
+    l2 = r2.to_trace().interpolate("mlp", "prefill", 256, 256)
+    exp = loaded.to_trace(tp=2).interpolate("mlp", "prefill", 256, 256)
+    assert l2 == pytest.approx(exp, rel=1e-12)
+    # an unswept degree still falls back to synthetic at the right tp
+    assert reg.resolve("tpu-v6e", MODEL_8B, tp=8).tp == 8
+
+
+def test_hwtrace1_loads_and_migrates(tmp_path):
+    """Legacy hwtrace/1 artifacts (top-level tp+points) load unchanged and
+    re-save as hwtrace/2 with identical pricing."""
+    v2 = synthetic_trace(RTX3090, MODEL)
+    legacy = str(tmp_path / "legacy.json")
+    import dataclasses as dc
+    json.dump({
+        "schema": "hwtrace/1", "device": v2.device, "model": v2.model,
+        "tp": 1, "points": [dc.asdict(p) for p in v2.points],
+        "interconnect": dc.asdict(v2.interconnect),
+        "spec": dc.asdict(v2.spec), "meta": v2.meta,
+    }, open(legacy, "w"))
+    loaded = HardwareTrace.load(legacy)
+    assert loaded.tp_degrees() == [1]
+    assert loaded.spec == RTX3090
+    icfg = InstanceCfg(name="i0", hw=RTX3090, model=MODEL)
+    pm_v2 = PerfModel(icfg, trace=v2.to_trace())
+    pm_v1 = PerfModel(icfg, trace=loaded.to_trace())
+    for items in _items():
+        assert pm_v1.iteration_latency(items).total_s == pytest.approx(
+            pm_v2.iteration_latency(items).total_s, rel=1e-12)
+    migrated = str(tmp_path / "migrated.json")
+    loaded.save(migrated)
+    assert json.load(open(migrated))["schema"] == "hwtrace/2"
+    re = HardwareTrace.load(migrated)
+    assert len(re.points) == len(v2.points)
+
+
 def test_hetero_instance_tp_prices_through_resolved_trace():
     from repro.core import ParallelismCfg
     cfg1 = ClusterCfg(
@@ -225,6 +279,97 @@ def test_hw_name_with_pd_disaggregation():
     assert m["finished"] == 20
     assert m["instances"]["p0"]["tokens"] > 0
     assert m["instances"]["d0"]["tokens"] > 0
+
+
+def test_device_derived_links_are_asymmetric():
+    """Two instance pairs mixing devices with different InterconnectSpecs
+    get different per-link bandwidths: min-bw over the endpoints, not the
+    cluster-global NetworkCfg value."""
+    from repro.core.cluster import Cluster
+    cfg = ClusterCfg(
+        instances=(
+            InstanceCfg(name="p0", hw=None, model=MODEL_8B,
+                        hw_name="rtx3090", role="prefill"),
+            InstanceCfg(name="d0", hw=None, model=MODEL_8B,
+                        hw_name="tpu-v6e", role="decode"),
+            InstanceCfg(name="d1", hw=None, model=MODEL_8B,
+                        hw_name="tpu-v6e", role="decode"),
+        ),
+        router=RouterCfg("round_robin", model_affinity=False),
+        pd_map={"p0": ("d0", "d1")})
+    cluster = Cluster(cfg)
+    net = cluster.network
+    # gpu<->tpu pair: the GPU NIC (25e9) bottlenecks the TPU DCN (100e9)
+    assert net.link_params("p0", "d0") == (25e9, 10e-6)
+    # tpu<->tpu pair on the same cluster: full DCN rate — asymmetric links
+    assert net.link_params("d0", "d1") == (100e9, 10e-6)
+    # explicit override hook wins over the derived value
+    net.override_link("p0", "d0", bw=9e9)
+    assert net.link_params("p0", "d0") == (9e9, 10e-6)
+    # an endpoint with no device interconnect falls back to NetworkCfg
+    assert net.link_params("p0", "stranger") == \
+        (cfg.network.inter_instance_bw, cfg.network.inter_instance_latency)
+    # end-to-end on the same cluster: PD traffic moves at the derived
+    # (or overridden) per-pair rates
+    cluster.submit_workload(_workload(n=20))
+    m = cluster.run()
+    assert m["finished"] == 20
+    pd_links = {k: v["bw"] for k, v in m["network_links"].items()
+                if "p0" in k}
+    assert pd_links
+    for k, bw in pd_links.items():
+        assert bw == (9e9 if "d0" in k else 25e9)
+    # overriding a link that already carried traffic reprices it in place
+    # (queue state and byte counters preserved) — no silent no-op
+    moved = net.link("p0", "d1").bytes_moved
+    net.override_link("p0", "d1", bw=5e9)
+    assert net.link("p0", "d1").bw == 5e9
+    assert net.link("p0", "d1").bytes_moved == moved
+
+
+def test_per_phase_throughput_hint_role_aware():
+    """A prefill-role instance is rated by its prefill throughput, not the
+    blended reference batch (PR-2 follow-up)."""
+    from repro.core.cluster import Cluster
+    cfg = ClusterCfg(
+        instances=(InstanceCfg(name="p0", hw=None, model=MODEL_8B,
+                               hw_name="rtx3090", role="prefill"),
+                   InstanceCfg(name="d0", hw=None, model=MODEL_8B,
+                               hw_name="tpu-v6e", role="decode")),
+        router=RouterCfg("hardware_aware", model_affinity=False),
+        pd_map={"p0": ("d0",)})
+    cluster = Cluster(cfg)
+    p0 = cluster.instances["p0"]
+    pre = p0.throughput_estimate("prefill")
+    dec = p0.throughput_estimate("decode")
+    blended = p0.throughput_estimate()
+    # prefill pushes hundreds of tokens per iteration vs ~1/req for decode:
+    # the per-phase signals must differ and bracket the blend
+    assert pre > blended > dec
+    backend = p0.backend
+    assert backend.throughput_hint("prefill") == pre
+    assert backend.throughput_hint("decode") == dec
+    # role-aware placement completes end-to-end under hardware_aware
+    m = simulate(cfg, _workload(n=20))
+    assert m["finished"] == 20
+
+
+def test_metrics_expose_kv_ledger_occupancy():
+    """Scheduler-ledger satellite: per-request peak blocks in aggregate
+    metrics, plus per-instance occupancy snapshot + watermark timeline."""
+    m = simulate(_hetero_cfg("round_robin"), _workload(n=20))
+    assert m["finished"] == 20
+    assert m["kv_blocks_peak_max"] >= m["kv_blocks_peak_mean"] > 0
+    for stats in m["instances"].values():
+        assert stats["kv_occupancy"] == {}      # all requests completed
+        wm = stats["kv_watermark"]
+        if stats["iterations"]:
+            assert len(wm) > 0
+            times = [t for t, _, _ in wm]
+            assert times == sorted(times)
+            # the pool was actually exercised (samples run at iteration
+            # boundaries, before that iteration's completions free blocks)
+            assert max(used for _, used, _ in wm) > 0
 
 
 def test_trace_name_still_overrides_hw_name(tmp_path):

@@ -84,3 +84,28 @@ def test_over_free_impossible_on_completion_after_long_decode():
     assert req.generated >= req.output_len
     assert mem.free_blocks == mem.total_blocks
     assert 0 <= mem.free_blocks <= mem.total_blocks
+
+
+def test_ledger_exposes_per_request_occupancy_and_peak():
+    """The ledger is observable: ``occupancy()`` snapshots per-request
+    blocks mid-flight and ``kv_blocks_peak`` records each request's high
+    watermark (survives completion — the Metrics view)."""
+    sched, mem = _sched()
+    req = SimRequest(req_id=7, arrival=0.0, prompt_tokens=list(range(100)),
+                     output_len=40)
+    sched.enqueue(req)
+    work = sched.next_batch()
+    assert work and work[0].request is req
+    occ = sched.occupancy()
+    assert set(occ) == {7}
+    assert occ[7] == sched.reserved_blocks(req) > 0
+    assert occ[7] == mem.total_blocks - mem.free_blocks
+    assert req.kv_blocks_peak == occ[7]
+    occ[7] = 10_000                    # a snapshot copy, not the ledger
+    assert sched.reserved_blocks(req) != 10_000
+    _drive(sched, [req])
+    # decode growth past the admission reservation raised the peak, and
+    # the final ledger is empty while the peak survives for metrics
+    assert req.kv_blocks_peak >= mem.blocks_for(100 + 40)
+    assert sched.occupancy() == {}
+    assert mem.free_blocks == mem.total_blocks

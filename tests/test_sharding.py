@@ -1,0 +1,108 @@
+"""Sharding-rule unit coverage: ``fit_to_mesh`` uneven-shard replication
+and ``dp_axes`` pod folding.
+
+``fit_to_mesh`` and ``dp_axes`` only consume ``mesh.axis_names`` /
+``mesh.devices.shape`` / ``mesh.shape``, so a lightweight stand-in mesh
+lets these rules be tested at production extents (16-way model axis, 2-pod
+folding) without 512 real devices.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.launch.mesh import dp_axes, dp_size  # noqa: E402
+from repro.launch.sharding import (cache_pspecs, fit_to_mesh,  # noqa: E402
+                                   param_pspecs)
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis names + extents, no devices."""
+
+    def __init__(self, shape, axes):
+        self.axis_names = tuple(axes)
+        self.devices = np.empty(shape, dtype=object)
+        self.shape = dict(zip(axes, shape))
+
+
+class Leaf:
+    def __init__(self, *shape):
+        self.shape = shape
+        self.ndim = len(shape)
+
+
+MESH16 = FakeMesh((16, 16), ("data", "model"))
+
+
+def test_fit_to_mesh_replicates_uneven_heads():
+    """36 heads x 16 shards does not divide: the sharded dim must fall
+    back to replication (pjit boundary shardings divide exactly)."""
+    spec = {"wq": P(None, "model")}
+    shapes = {"wq": Leaf(512, 36 * 64)}      # 2304 % 16 == 0: kept
+    assert fit_to_mesh(spec, shapes, MESH16)["wq"] == P(None, "model")
+    shapes = {"wq": Leaf(512, 36)}           # heads dim itself: replicated
+    assert fit_to_mesh(spec, shapes, MESH16)["wq"] == P(None, None)
+
+
+def test_fit_to_mesh_replicates_uneven_experts():
+    """40 experts on a 16-way model axis (stacked dim -3) replicate; 64
+    experts shard."""
+    spec = {"w_gate": P("model", None, None)}
+    uneven = {"w_gate": Leaf(40, 64, 32)}
+    even = {"w_gate": Leaf(64, 64, 32)}
+    assert fit_to_mesh(spec, uneven, MESH16)["w_gate"] == P(None, None, None)
+    assert fit_to_mesh(spec, even, MESH16)["w_gate"] == P("model", None, None)
+
+
+def test_fit_to_mesh_pads_missing_trailing_dims():
+    """A spec shorter than the leaf rank is right-padded with None."""
+    spec = {"x": P("model")}
+    shapes = {"x": Leaf(32, 7, 5)}
+    assert fit_to_mesh(spec, shapes, MESH16)["x"] == P("model", None, None)
+
+
+def test_fit_to_mesh_folded_axes_tuple_entries():
+    """A dim sharded over folded ('pod','data') axes needs divisibility by
+    the product of the extents."""
+    mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    spec = {"b": P(("pod", "data"), None)}
+    ok = {"b": Leaf(64, 8)}      # 64 % (2*16) == 0
+    bad = {"b": Leaf(24, 8)}     # 24 % 32 != 0
+    assert fit_to_mesh(spec, ok, mesh)["b"] == P(("pod", "data"), None)
+    assert fit_to_mesh(spec, bad, mesh)["b"] == P(None, None)
+
+
+def test_dp_axes_pod_folding():
+    """The pod axis folds into data-parallelism; the model axis never."""
+    single = FakeMesh((16, 16), ("data", "model"))
+    multi = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    assert dp_axes(single) == ("data",)
+    assert dp_size(single) == 16
+    assert dp_axes(multi) == ("pod", "data")
+    assert dp_size(multi) == 32
+    engine = FakeMesh((1, 2), ("data", "model"))
+    assert dp_axes(engine) == ("data",)
+    assert dp_size(engine) == 1
+
+
+def test_param_pspecs_model_size_picks_expert_layout():
+    """The MoE expert-stacking heuristic follows the model-axis extent:
+    4 experts shard on a tp=2 engine mesh but not on the 16-way pod."""
+    params = {"stage0": {"moe": {"w_gate": Leaf(4, 64, 32)}}}
+    prod = param_pspecs(params)["stage0"]["moe"]["w_gate"]
+    engine = param_pspecs(params, model_size=2)["stage0"]["moe"]["w_gate"]
+    assert prod == P(None, None, "model")       # per-expert TP fallback
+    assert engine == P("model", None, None)     # expert parallelism
+
+
+def test_cache_pspecs_model_size_picks_kv_layout():
+    """KV-head sharding follows the model-axis extent too: 2 KV heads
+    shard the head dim on the 16-way mesh but the KV-head dim at tp=2."""
+    cache = {"lengths": Leaf(4),
+             "stage0": {"k": Leaf(2, 4, 128, 2, 64),
+                        "v": Leaf(2, 4, 128, 2, 64)}}
+    prod = cache_pspecs(cache, ("data",), batch=4)
+    eng = cache_pspecs(cache, ("data",), batch=4, model_size=2)
+    assert prod["stage0"]["k"] == P(None, ("data",), None, None, "model")
+    assert eng["stage0"]["k"] == P(None, ("data",), None, "model", None)
