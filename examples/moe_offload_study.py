@@ -1,5 +1,13 @@
 """MoE expert-offloading exploration (paper §II-C): sweep offload target
-(host vs PIM) x fraction x prefetch and report latency/throughput.
+(host vs PIM) x fraction x prefetch under a *replayable* zipf expert-skew
+trace, and report latency/throughput plus the expert-load imbalance the
+trace induced.
+
+The skew is an ``ExpertRoutingTrace`` artifact (``repro.moe``), not a
+statistical knob: the exact same trace can be replayed on the real engine
+(``ServingEngine(routing=trace)``) and the reported
+``metrics()["expert_load"]`` compared one-to-one — see
+``tests/test_expert_routing.py`` for the pinned sim/real parity.
 
   PYTHONPATH=src python examples/moe_offload_study.py
 """
@@ -8,34 +16,51 @@ from repro.core import (ClusterCfg, InstanceCfg, MoECfg, ParallelismCfg,
 from repro.core.config import TPU_V5E
 from repro.profiler import model_spec_from_arch
 from repro.configs import get_config
-from repro.workload import ShareGPTConfig, generate
+from repro.moe import register_routing
+from repro.workload import ShareGPTConfig, SkewConfig, generate
+from repro.workload.expert_skew import routing_for_model
+
+SWEEP = [("none", 0.0, False),
+         ("host", 0.25, False), ("host", 0.25, True),
+         ("host", 0.5, False), ("host", 0.5, True),
+         ("pim", 0.5, True), ("pim", 0.75, True)]
 
 
-def main():
+def main(n_requests: int = 100):
     model = model_spec_from_arch(get_config("granite-moe-3b-a800m"))
-    reqs = generate(ShareGPTConfig(n_requests=100, rate=15.0, vocab=32000))
+    # one zipf routing trace drives every point of the sweep (and could
+    # drive the real engine): offload traffic and imbalance are priced
+    # from its per-layer expert counts, not redrawn per run
+    trace = routing_for_model(
+        model, SkewConfig(kind="zipf", zipf_a=1.1, period=512, seed=0))
+    register_routing("offload-study", trace)
+    reqs = generate(ShareGPTConfig(n_requests=n_requests, rate=15.0,
+                                   vocab=32000))
 
     rows = []
-    for offload, frac, prefetch in [
-            ("none", 0.0, False),
-            ("host", 0.25, False), ("host", 0.25, True),
-            ("host", 0.5, False), ("host", 0.5, True),
-            ("pim", 0.5, True), ("pim", 0.75, True)]:
+    for offload, frac, prefetch in SWEEP:
         icfg = InstanceCfg(
             name="i0", hw=TPU_V5E, model=model, n_devices=8,
             parallelism=ParallelismCfg(tp=8, ep=8),
             scheduler=SchedulerCfg(max_batch_size=48),
             moe=MoECfg(offload=offload, offload_fraction=frac,
-                       prefetch=prefetch, routing="zipf"))
+                       prefetch=prefetch, routing_trace="offload-study"))
         m = simulate(ClusterCfg((icfg,)), reqs)
         rows.append((offload, frac, prefetch, m))
 
+    print(f"routing trace: zipf a=1.1, static imbalance "
+          f"{trace.static_imbalance():.2f} over {trace.n_experts} experts")
     print(f"{'target':7s} {'frac':>5s} {'prefetch':>8s} {'TPOT(ms)':>9s} "
-          f"{'TTFT(ms)':>9s} {'tok/s':>8s}")
+          f"{'TTFT(ms)':>9s} {'tok/s':>8s} {'imb(ep)':>8s}")
     for off, frac, pre, m in rows:
+        # the instance-level metric is sharded over the instance's ep=8
+        # ranks (the cluster rollup in m["expert_load"] reports the
+        # per-expert max/mean instead)
+        imb = m["instances"]["i0"]["expert_load"]["imbalance"]
         print(f"{off:7s} {frac:5.2f} {str(pre):>8s} "
               f"{m['tpot_mean_s']*1e3:9.2f} {m['ttft_mean_s']*1e3:9.1f} "
-              f"{m['throughput_tok_s']:8.0f}")
+              f"{m['throughput_tok_s']:8.0f} {imb:8.2f}")
+    return rows
 
 
 if __name__ == "__main__":

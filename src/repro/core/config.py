@@ -128,6 +128,13 @@ class MoECfg:
     prefetch: bool = True            # overlap expert fetch with compute
     routing: str = "uniform"         # uniform | zipf | correlated
     zipf_a: float = 1.1
+    # named ExpertRoutingTrace (resolved through repro.moe's registry at
+    # instance build time, like InstanceCfg.hw_name).  When set, expert
+    # load is *replayed* from the trace instead of drawn statistically:
+    # the simulator prices per-layer counts from it and the real engine
+    # forces the same assignments through its routing hook, so both
+    # backends report identical metrics()["expert_load"].
+    routing_trace: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

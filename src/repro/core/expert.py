@@ -17,6 +17,22 @@ import numpy as np
 from repro.core.config import HardwareSpec, InstanceCfg, MoECfg, ModelSpec
 
 
+def imbalance_factor(counts, ep: int = 1) -> float:
+    """max-shard / mean-shard load with experts split over ``ep`` ranks.
+
+    The one definition of the expert-parallel imbalance metric — shared by
+    the statistical router below, the trace-driven expert-load accounting
+    (``repro.moe.ExpertLoadTracker``) and the cluster-level metric merge,
+    so sim and real report comparable numbers.
+    """
+    counts = np.asarray(counts, float)
+    ep = max(int(ep), 1)
+    per_rank = np.array([c.sum() for c in np.array_split(counts, ep)])
+    if per_rank.sum() <= 0:
+        return 1.0
+    return float(per_rank.max() / max(per_rank.mean(), 1e-9))
+
+
 class ExpertRouter:
     """Statistical stand-in for the gate; pluggable like the real one."""
 
@@ -50,13 +66,7 @@ class ExpertRouter:
 
     def imbalance(self, counts: np.ndarray, ep: int) -> float:
         """max-shard / mean-shard load with experts split over ep ranks."""
-        E = len(counts)
-        per_rank = counts.reshape(ep, E // ep).sum(axis=1) if E % ep == 0 \
-            else np.array_split(counts, ep) and np.array(
-                [c.sum() for c in np.array_split(counts, ep)])
-        mean = per_rank.mean() if per_rank.sum() else 1.0
-        return float(per_rank.max() / max(mean, 1e-9)) if per_rank.sum() \
-            else 1.0
+        return imbalance_factor(counts, ep)
 
 
 @dataclasses.dataclass
@@ -83,12 +93,23 @@ class ExpertExecutionModel:
         self.pim = pim
         self.moe = icfg.moe
 
-    def layer_cost(self, tokens: int) -> MoELayerCost:
+    def layer_cost(self, tokens: int,
+                   counts: Optional[np.ndarray] = None) -> MoELayerCost:
+        """Cost of one MoE layer for ``tokens`` batch tokens.
+
+        ``counts`` (per-expert token counts) overrides the statistical
+        router — the trace-driven path: a replayed ``ExpertRoutingTrace``
+        supplies the exact per-layer load, so imbalance, the active expert
+        set, and offload fetch traffic are all priced from the trace.
+        """
         m = self.model
         hw = self.hw
         ep = max(self.icfg.parallelism.ep, 1)
-        counts = self.router.route(tokens)
-        kappa = self.router.imbalance(counts, ep)
+        if counts is None:
+            counts = self.router.route(tokens)
+        else:
+            counts = np.asarray(counts, float)
+        kappa = imbalance_factor(counts, ep)
         # compute: top_k experts' FFN on the hottest shard
         flops = 2 * 3 * m.d_model * m.moe_d_expert * counts.sum() / ep * kappa
         active = (counts > 0).sum()

@@ -5,7 +5,47 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.core.expert import imbalance_factor
 from repro.core.request import FINISHED, SimRequest
+
+
+def merge_expert_load(loads: List[Dict], timeline_len: int = 4096) -> Dict:
+    """Cluster-level expert-load view: elementwise-sum the per-instance
+    (layer, expert) count matrices, recompute the imbalance over the
+    merged counts, and interleave the bounded hot-expert timelines by
+    time.  Instances serving a different MoE shape (other model, other
+    trace) cannot be summed; the rollup anchors on the *most common*
+    shape across instances — not dict order — and reports how many
+    instances merged."""
+    all_shapes = [np.asarray(l["counts"]).shape for l in loads]
+    shape = max(set(all_shapes), key=all_shapes.count)
+    counts = np.zeros(shape, np.int64)
+    tokens = 0
+    merged = 0
+    timeline = []
+    for load in loads:
+        c = np.asarray(load["counts"])
+        if c.shape != shape:
+            continue
+        counts += c
+        tokens += int(load.get("tokens", 0))
+        timeline.extend(load.get("hot_timeline", ()))
+        merged += 1
+    timeline = sorted(timeline, key=lambda e: e[0])[-timeline_len:]
+    total = counts.sum(axis=0)
+    # per-expert imbalance (max/mean over experts): the cluster view has
+    # no single expert-parallel sharding to report against
+    shards = shape[1]
+    return {
+        "counts": counts.tolist(),
+        "tokens": tokens,
+        "instances_merged": merged,
+        "imbalance": imbalance_factor(total, shards),
+        "per_layer_imbalance": [imbalance_factor(c, shards)
+                                for c in counts],
+        "hot_expert": int(total.argmax()) if total.sum() else None,
+        "hot_timeline": timeline,
+    }
 
 
 def aggregate(requests: List[SimRequest]) -> Dict:

@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.config import InstanceCfg
 from repro.core.expert import ExpertExecutionModel, ExpertRouter
 from repro.core.network import allreduce_time
@@ -44,15 +46,40 @@ class IterationCost:
     breakdown: dict
 
 
+def _item_positions(it: BatchItem) -> np.ndarray:
+    """KV positions of the tokens a batch item processes — the lookup key
+    into an ``ExpertRoutingTrace``.  Follows the ``to_batch_items``
+    convention: prefill work covers ``[start, start + tokens)``; a decode
+    item's single token lands at ``context - 2`` (its ``context`` is
+    ``context_len + 1`` and the new token's 0-based KV index is
+    ``context_len - 1``)."""
+    if it.phase == "prefill":
+        return np.arange(it.start, it.start + it.tokens)
+    return np.full(max(it.tokens, 1), max(it.context - 2, 0))
+
+
+def batch_positions(items: List[BatchItem]) -> np.ndarray:
+    """All KV positions of one batch — the single implementation shared by
+    MoE trace pricing (``_moe_layer_cost``) and the backends' expert-load
+    accounting, so the position convention cannot drift between them."""
+    return np.concatenate([_item_positions(i) for i in items]) \
+        if items else np.zeros(0, np.int64)
+
+
 class PerfModel:
     def __init__(self, cfg: InstanceCfg, trace: Optional[Trace] = None,
-                 expert_model: Optional[ExpertExecutionModel] = None):
+                 expert_model: Optional[ExpertExecutionModel] = None,
+                 routing=None):
+        """``routing`` (an ``repro.moe.ExpertRoutingTrace``) switches MoE
+        pricing from the statistical router to replayed per-layer counts;
+        see ``_moe_layer_cost``."""
         self.cfg = cfg
         self.trace = trace
         self.m = cfg.model
         self.hw = cfg.hw
         self.tp = max(cfg.parallelism.tp, 1)
         self.pp = max(cfg.parallelism.pp, 1)
+        self.routing = routing
         self.expert_model = expert_model
         if self.m.is_moe and expert_model is None:
             self.expert_model = ExpertExecutionModel(
@@ -158,6 +185,28 @@ class PerfModel:
             total += v
         return IterationCost(total, {"iter": total})
 
+    def _moe_layer_cost(self, items: List[BatchItem], T: int,
+                        routing_counts=None) -> float:
+        """Mean per-MoE-layer analytical cost for this batch.
+
+        With a routing trace attached, each of the trace's layers is
+        priced from its *replayed* per-expert counts at the batch's token
+        positions (imbalance, active expert set and offload traffic all
+        follow the trace); the mean keeps the ``L * cost`` composition in
+        ``iteration_latency`` exact even when the sim model's layer count
+        differs from the trace's MoE-layer count.  Without a trace, the
+        statistical router draws one representative layer.
+        """
+        if self.routing is not None:
+            if routing_counts is None:
+                pos = batch_positions(items)
+                routing_counts = [self.routing.counts_for(l, pos)
+                                  for l in range(self.routing.n_layers)]
+            per = [self.expert_model.layer_cost(T, counts=c).total
+                   for c in routing_counts]
+            return float(np.mean(per))
+        return self.expert_model.layer_cost(T).total
+
     def kv_copy_cost(self, tokens: int) -> float:
         """Slot copy cost (export/restore) for ``tokens`` of KV, from the
         measured kv_export trace; 0 when unprofiled."""
@@ -167,7 +216,12 @@ class PerfModel:
                                    self._bucket(tokens), self._bucket(tokens))
         return v or 0.0
 
-    def iteration_latency(self, items: List[BatchItem]) -> IterationCost:
+    def iteration_latency(self, items: List[BatchItem],
+                          routing_counts=None) -> IterationCost:
+        """``routing_counts`` optionally supplies the per-MoE-layer expert
+        counts for this batch (derived once by the caller from the routing
+        trace) so pricing and expert-load accounting share one bincount
+        pass per iteration instead of each recomputing it."""
         if not items:
             return IterationCost(0.0, {})
         lvl = self._iter_level(items)
@@ -188,8 +242,9 @@ class PerfModel:
         t_attn = L * self._op(
             "attn_score", phase, T, ctx, self._attn_context_cost(items))
         if m.is_moe:
-            c = self.expert_model.layer_cost(T)
-            t_ffn = L * self._op("moe_ffn", phase, T, ctx, c.total)
+            t_ffn = L * self._op("moe_ffn", phase, T, ctx,
+                                 self._moe_layer_cost(items, T,
+                                                      routing_counts))
         else:
             mults = 3 if m.mlp_gated else 2
             t_ffn = L * self._op(

@@ -72,6 +72,18 @@ class HardwareRegistry:
                     f"{fp}: not a HardwareTrace artifact (no 'schema' "
                     f"key) — skipped")
                 continue
+            schema = str(doc["schema"])
+            if schema.startswith("moetrace/"):
+                # expert-routing artifacts share traces/ by design
+                # (profile --experts emits them next to the hw trace):
+                # silently not ours, exactly as RoutingRegistry silently
+                # skips hwtrace files
+                continue
+            if not schema.startswith("hwtrace/"):
+                warnings.warn(
+                    f"{fp}: not a HardwareTrace artifact (schema "
+                    f"{schema!r}) — skipped")
+                continue
             names.append(self.load_file(fp).device)
         return names
 

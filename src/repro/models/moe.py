@@ -34,24 +34,52 @@ def router_topk(x, w_router, top_k: int):
 
 
 def moe_ffn(x, params, *, top_k: int, capacity_factor: float = 1.25,
-            gated: bool = True, shard_experts: bool = False):
-    """x: (T, d). params: router (d,E), w_gate/w_up (E,d,de), w_down (E,de,d)."""
+            gated: bool = True, shard_experts: bool = False,
+            router_fn=None, positions=None, layer=None, valid=None):
+    """x: (T, d). params: router (d,E), w_gate/w_up (E,d,de), w_down (E,de,d).
+
+    ``router_fn`` is the injectable routing hook (``repro.moe.hooks``):
+    called as ``router_fn(logits, positions=(T,), layer=scalar,
+    top_k=int, valid=(T,) bool or None)`` and returning ``(expert_idx
+    (T,k) int32, combine_w (T,k), aux scalar)``.  It replaces only the
+    *assignment* step — dispatch, capacity and combine run unchanged — so
+    a replayed skew exercises the real grouped-GEMM path end-to-end.
+    ``valid`` flags which rows are real workload tokens (pad tails and
+    empty decode slots are False); recording taps mask on it, and dispatch
+    sends invalid rows straight to the overflow slot so they never consume
+    a real token's expert capacity (forced replay would otherwise route
+    every empty decode slot to the same table row and let it evict real
+    work from the capacity buffers).
+    """
     T, d = x.shape
     E = params["router"].shape[-1]
-    expert_idx, combine_w, aux = router_topk(x, params["router"], top_k)
+    if router_fn is None:
+        expert_idx, combine_w, aux = router_topk(x, params["router"], top_k)
+    else:
+        logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+        expert_idx, combine_w, aux = router_fn(
+            logits, positions=positions, layer=layer, top_k=top_k,
+            valid=valid)
+        expert_idx = expert_idx.astype(jnp.int32)
     C = int(max(1, round(T * top_k * capacity_factor / E)))
 
     # --- dispatch: sort (token, k) pairs by expert --------------------------
     flat_e = expert_idx.reshape(-1)                    # (T*k,)
-    order = jnp.argsort(flat_e)                        # stable
+    if valid is None:
+        sort_e = flat_e
+    else:
+        # invalid rows sort into a trash bucket past every real expert
+        sort_e = jnp.where(jnp.repeat(valid, top_k), flat_e, E)
+    order = jnp.argsort(sort_e)                        # stable
     tok_of = order // top_k                            # token index per entry
     e_sorted = flat_e[order]
+    s_sorted = sort_e[order]
     # position within expert group = rank - group_start[expert]
-    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    counts = jnp.zeros((E + 1,), jnp.int32).at[sort_e].add(1)
     starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
                               jnp.cumsum(counts)[:-1]])
-    pos_in_e = jnp.arange(T * top_k, dtype=jnp.int32) - starts[e_sorted]
-    keep = pos_in_e < C                                # capacity drop
+    pos_in_e = jnp.arange(T * top_k, dtype=jnp.int32) - starts[s_sorted]
+    keep = (pos_in_e < C) & (s_sorted < E)             # capacity drop
     dst_e = jnp.where(keep, e_sorted, 0)
     dst_c = jnp.where(keep, pos_in_e, C)               # C = overflow slot
 

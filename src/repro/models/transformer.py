@@ -220,7 +220,8 @@ def _attn_mlp_block(p, x, cfg, *, positions, lengths, window, mode, cache,
 
 
 def _attn_moe_block(p, x, cfg, *, positions, lengths, window, mode, cache,
-                    attn_impl, unroll=False, shard_experts=False):
+                    attn_impl, unroll=False, shard_experts=False,
+                    layer_idx=None, routing_hook=None, row_valid=None):
     h, new_cache = _attention(
         p["attn"], rmsnorm(x, p["norm1"], cfg.norm_eps), cfg,
         positions=positions, lengths=lengths, window=window, mode=mode,
@@ -228,9 +229,31 @@ def _attn_moe_block(p, x, cfg, *, positions, lengths, window, mode, cache,
     x = x + h
     B, S, d = x.shape
     xn = rmsnorm(x, p["norm2"], cfg.norm_eps).reshape(B * S, d)
+    pos_flat = valid = None
+    if routing_hook is not None:
+        # flattened (B*S,) token positions line up with xn's rows — the
+        # routing hook keys its per-position expert table on them.  The
+        # validity mask flags pad-tail rows (bucketed prefill/extend
+        # process positions >= the sequence's real length) so recording
+        # taps don't histogram padding.  In decode — a full-buffer batch
+        # where empty AND occupied-but-unscheduled (mid-prefill) slots
+        # are routed too — ``row_valid`` (derived from the tokens-buffer
+        # sentinel in ``decode``) identifies the really-scheduled rows;
+        # position 0 additionally screens empty slots for direct callers
+        # that pass plain token ids.
+        pos_flat = positions.reshape(B * S)
+        if mode == "decode":
+            valid = pos_flat > 0
+            if row_valid is not None:
+                valid = valid & jnp.broadcast_to(row_valid[:, None],
+                                                 (B, S)).reshape(B * S)
+        elif lengths is not None:
+            valid = (positions < lengths[:, None]).reshape(B * S)
     y, aux = moe_ffn(xn, p["moe"], top_k=cfg.moe.top_k,
                      capacity_factor=cfg.moe.capacity_factor,
-                     gated=cfg.mlp_gated, shard_experts=shard_experts)
+                     gated=cfg.mlp_gated, shard_experts=shard_experts,
+                     router_fn=routing_hook, positions=pos_flat,
+                     layer=layer_idx, valid=valid)
     x = x + y.reshape(B, S, d)
     return x, new_cache, aux
 
@@ -289,6 +312,11 @@ class Model:
     fuse_qkv: bool = False          # single QKV matmul (Perf iteration 1)
     shard_experts: bool = False     # pin MoE buffers to model axis (Perf it.2)
     norm_ct16: bool = False         # bf16 cotangent boundary at norms (it.4)
+    # injectable MoE routing hook (repro.moe.hooks): replaces the top-k
+    # assignment step of every MoE layer — forced replay of a recorded/
+    # synthetic ExpertRoutingTrace, logit biasing, or a recording tap.
+    # Must be set at construction (the jitted closures capture it).
+    routing_hook: Optional[Any] = None
 
     # ---- init ----
     def init(self, key) -> dict:
@@ -348,11 +376,15 @@ class Model:
                          jnp.int32(cfg.sliding_window))
 
     def _run_stage(self, idx, stage, params, x, *, positions, lengths, mode,
-                   cache, shared_attn):
+                   cache, shared_attn, row_valid=None):
         cfg = self.cfg
         sp = params[f"stage{idx}"]
         kind = stage.kind
         L = stage.n_layers
+        # global MoE-layer index base: routing hooks key their per-layer
+        # tables on the model-wide MoE layer, not the stage-local one
+        moe_off = sum(s.n_layers for s in cfg.stages[:idx]
+                      if s.kind == ATTN_MOE)
 
         def layer(x, li, p, kcache):
             if kind == ATTN_MLP:
@@ -367,7 +399,9 @@ class Model:
                     p, x, cfg, positions=positions, lengths=lengths,
                     window=None, mode=mode, cache=kcache,
                     attn_impl=self.attn_impl, unroll=self.unroll,
-                    shard_experts=self.shard_experts)
+                    shard_experts=self.shard_experts,
+                    layer_idx=moe_off + li,
+                    routing_hook=self.routing_hook, row_valid=row_valid)
             if kind == MAMBA2:
                 return _mamba_block(p, x, cfg, mode=mode, cache=kcache)
             if kind == ZAMBA_SUPER:
@@ -500,6 +534,15 @@ class Model:
         is written at index lengths (then lengths+1 is returned).
         """
         cfg = self.cfg
+        # MoE routing-hook row mask for the full-buffer batch: a negative
+        # token id is the engine's sentinel for a slot that is NOT
+        # scheduled this iteration (free, or occupied mid-prefill) — its
+        # row still computes, but must neither be recorded as workload
+        # routing nor consume expert capacity under forced replay
+        row_valid = None
+        if jnp.issubdtype(tokens.dtype, jnp.integer):
+            row_valid = tokens.reshape(tokens.shape[0], -1)[:, 0] >= 0
+            tokens = jnp.maximum(tokens, 0)
         x = self._embed(params, tokens)
         B = x.shape[0]
         lengths = cache["lengths"] + 1       # include current token
@@ -509,7 +552,8 @@ class Model:
             x, nc, _ = self._run_stage(
                 i, st, params, x, positions=positions, lengths=lengths,
                 mode="decode", cache=cache[f"stage{i}"],
-                shared_attn=params.get("shared_attn"))
+                shared_attn=params.get("shared_attn"),
+                row_valid=row_valid)
             new_cache[f"stage{i}"] = nc
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         logits = self._head(params, x)

@@ -1,0 +1,105 @@
+"""Injectable routing hooks for the real MoE model.
+
+Each hook plugs into ``repro.models.moe.moe_ffn`` via
+``Model(routing_hook=...)`` (most conveniently through
+``ServingEngine(routing=<trace>)``) and replaces the top-k assignment step
+of every MoE layer while the dispatch / capacity / grouped-GEMM / combine
+path runs unchanged.  Contract::
+
+    hook(logits, *, positions, layer, top_k, valid=None)
+        -> (expert_idx (T, k) int32, combine_w (T, k) f32, aux scalar)
+
+``logits`` are the router's pre-softmax scores ``(T, E)``; ``positions``
+the flattened (T,) token KV positions; ``layer`` the model-wide MoE layer
+index (traced inside the scan); ``valid`` (when given) flags which rows
+are real workload tokens — bucketed prefill/extend pad tails and empty
+decode slots are False, and recording taps must mask on it.
+
+Hooks must be installed *before* any jit traces (the jitted closures
+capture them) — ``ServingEngine`` does this at construction.
+
+Three hooks cover the trace workflow:
+
+* :func:`make_replay_hook` — **forced assignment**: every token routes to
+  exactly ``trace.layers[layer][position % period]``.  This is what the
+  sim/real expert-load parity suite replays.
+* :func:`make_bias_hook` — **logit biasing**: the trace's per-layer expert
+  frequencies are added as a log-frequency bias, steering (not forcing)
+  the learned router toward the trace's skew.
+* :func:`make_recording_hook` — free-running routing plus a host tap that
+  streams ``(layer, positions, expert_idx)`` into a
+  ``repro.moe.record.RoutingRecorder`` for artifact capture.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _tables(trace):
+    import jax.numpy as jnp
+    return jnp.asarray(
+        np.stack([np.asarray(t, np.int32) for t in trace.layers]))
+
+
+def make_replay_hook(trace):
+    """Force every MoE layer's assignments to the trace's table."""
+    import jax.numpy as jnp
+    trace.validate()
+    tables = _tables(trace)           # (L, period, k)
+    period = trace.period
+
+    def hook(logits, *, positions, layer, top_k, valid=None):
+        # layer is None when moe_ffn is driven directly (single layer)
+        idx = tables[0 if layer is None else layer,
+                     positions % period]                 # (T, k)
+        w = jnp.full(idx.shape, 1.0 / top_k, jnp.float32)
+        return idx, w, jnp.zeros((), jnp.float32)
+    return hook
+
+
+def make_bias_hook(trace, strength: float = 2.0):
+    """Bias the learned router's logits toward the trace's expert
+    frequencies (``strength`` scales the log-frequency bias; 0 is a
+    no-op).  Softer than forced replay: combine weights stay learned."""
+    import jax
+    import jax.numpy as jnp
+    trace.validate()
+    pos = np.arange(trace.period)
+    freq = np.stack([trace.counts_for(l, pos) + 1.0
+                     for l in range(trace.n_layers)])    # (L, E), laplace
+    freq = freq / freq.sum(axis=1, keepdims=True)
+    bias = jnp.asarray(strength * (np.log(freq)
+                                   - np.log(freq).mean(axis=1,
+                                                       keepdims=True)),
+                       jnp.float32)
+
+    def hook(logits, *, positions, layer, top_k, valid=None):
+        probs = jax.nn.softmax(
+            logits + bias[0 if layer is None else layer], axis=-1)
+        combine_w, expert_idx = jax.lax.top_k(probs, top_k)
+        combine_w = combine_w / jnp.maximum(
+            combine_w.sum(-1, keepdims=True), 1e-9)
+        return (expert_idx.astype(jnp.int32), combine_w,
+                jnp.zeros((), jnp.float32))
+    return hook
+
+
+def make_recording_hook(recorder):
+    """Route exactly like the default learned router, but stream every
+    layer's ``(positions, expert_idx)`` to ``recorder`` via a host
+    callback (``repro.moe.record.RoutingRecorder``)."""
+    import jax
+    import jax.numpy as jnp
+
+    def hook(logits, *, positions, layer, top_k, valid=None):
+        probs = jax.nn.softmax(logits, axis=-1)
+        combine_w, expert_idx = jax.lax.top_k(probs, top_k)
+        combine_w = combine_w / jnp.maximum(
+            combine_w.sum(-1, keepdims=True), 1e-9)
+        expert_idx = expert_idx.astype(jnp.int32)
+        if valid is None:
+            valid = jnp.ones(positions.shape, bool)
+        jax.debug.callback(recorder.tap, layer, positions, expert_idx,
+                           valid)
+        return expert_idx, combine_w, jnp.zeros((), jnp.float32)
+    return hook

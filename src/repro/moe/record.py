@@ -1,0 +1,117 @@
+"""Record an ``ExpertRoutingTrace`` from a real ``JaxBackend`` run.
+
+The recording hook (``repro.moe.hooks.make_recording_hook``) streams every
+MoE layer's routing decisions to a :class:`RoutingRecorder` while the
+unified runtime serves a workload through the real engine — the exact
+production code paths (bucketed prefill, extend, batched decode).  The
+recorder buckets observations by token position (``position % period``,
+like the latency grids bucket shapes) and distills them into the
+deterministic per-layer assignment tables the artifact carries: for each
+(layer, position bucket), the top-k most frequently observed experts.
+
+CLI: ``python -m repro.profiler record-routing --arch <moe-arch> --out
+traces/<arch>.routing.json`` (also ``profile --experts`` to ride along
+with a hardware profile).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.moe.trace import ExpertRoutingTrace, moe_layer_count
+
+
+class RoutingRecorder:
+    """Host-side accumulator for routed (layer, position, expert) triples.
+
+    ``enabled`` gates accumulation at *runtime* (the tap checks it on the
+    host each call), so warmup/compile traffic can be excluded without
+    retracing any jit.
+    """
+
+    def __init__(self, n_layers: int, n_experts: int, top_k: int,
+                 period: int = 256):
+        self.n_layers = n_layers
+        self.n_experts = n_experts
+        self.top_k = top_k
+        self.period = period
+        self.hist = np.zeros((n_layers, period, n_experts), np.int64)
+        self.enabled = True
+
+    def tap(self, layer, positions, expert_idx, valid=None):
+        """Callback target (``jax.debug.callback``): one MoE layer's
+        assignments for one executed batch.  ``valid`` masks pad-tail
+        rows and empty decode slots (the jitted batch routes them too,
+        but they are not workload tokens and must not bias the tables)."""
+        if not self.enabled:
+            return
+        l = int(layer)
+        if not 0 <= l < self.n_layers:
+            return
+        pos = np.asarray(positions).reshape(-1)
+        idx = np.asarray(expert_idx).reshape(pos.size, -1)
+        if valid is not None:
+            keep = np.asarray(valid).reshape(-1).astype(bool)
+            pos, idx = pos[keep], idx[keep]
+        pos = pos % self.period
+        for j in range(idx.shape[1]):
+            np.add.at(self.hist[l], (pos, idx[:, j]), 1)
+
+    def to_trace(self, model: str = "*",
+                 meta: Optional[Dict] = None) -> ExpertRoutingTrace:
+        """Distill the histograms into a deterministic artifact: per
+        (layer, position) the top-k most observed experts (ties -> lower
+        expert id); positions never observed fall back to the layer's
+        global top-k."""
+        layers = []
+        for l in range(self.n_layers):
+            h = self.hist[l]
+            glob = np.argsort(-h.sum(axis=0), kind="stable")[:self.top_k]
+            table = np.argsort(-h, axis=1, kind="stable")[:, :self.top_k]
+            unseen = h.sum(axis=1) == 0
+            table[unseen] = glob
+            layers.append(table.astype(np.int32))
+        info = {"source": "recorded", "period": self.period,
+                "observations": int(self.hist.sum())}
+        info.update(meta or {})
+        return ExpertRoutingTrace(
+            model=model, n_experts=self.n_experts, top_k=self.top_k,
+            layers=layers, meta=info).validate()
+
+
+def record_routing(arch: str, *, n_requests: int = 8, rate: float = 50.0,
+                   max_batch: int = 4, max_len: int = 256,
+                   period: int = 256, seed: int = 0,
+                   mean_prompt: int = 40, mean_output: int = 8
+                   ) -> ExpertRoutingTrace:
+    """Serve a synthetic workload through the real engine with a recording
+    hook installed and distill the observed routing into an artifact."""
+    from repro.configs import get_config
+    from repro.moe.hooks import make_recording_hook
+    from repro.serve.driver import ServeDriver
+    from repro.serve.engine import ServingEngine
+    from repro.workload import ShareGPTConfig, generate
+
+    cfg = get_config(arch)
+    if cfg.moe is None:
+        raise ValueError(f"{arch!r} is not a MoE architecture; "
+                         f"record-routing needs one")
+    recorder = RoutingRecorder(moe_layer_count(cfg), cfg.moe.n_experts,
+                               cfg.moe.top_k, period=period)
+    recorder.enabled = False          # exclude warmup/compile traffic
+    eng = ServingEngine(cfg, max_batch=max_batch, max_len=max_len,
+                        name="rec0", seed=seed,
+                        routing=make_recording_hook(recorder))
+    drv = ServeDriver([eng])
+    drv.runtime.warmup()
+    recorder.enabled = True
+    reqs = generate(ShareGPTConfig(
+        n_requests=n_requests, rate=rate, vocab=cfg.vocab, seed=seed,
+        mean_prompt=mean_prompt, mean_output=mean_output,
+        max_prompt=max(max_len // 2, 16), max_output=max(mean_output, 4)))
+    drv.runtime.submit_workload(reqs)
+    drv.runtime.run()
+    return recorder.to_trace(model=cfg.name,
+                             meta={"arch": arch, "n_requests": n_requests,
+                                   "seed": seed})

@@ -25,6 +25,21 @@ The artifact loads via ``repro.hw`` (``load_traces("traces/")``) and is
 referenced from cluster configs by ``InstanceCfg(hw_name="<device>")`` —
 see docs/adding-hardware.md for the full walkthrough.
 
+MoE architectures have a second artifact: the expert-routing trace
+(``repro.moe``, schema ``moetrace/2``), replayable on both backends:
+
+  # record what the real model routes (free-running, recording tap)
+  python -m repro.profiler record-routing --arch granite-moe-1b-a400m-tiny \
+      --out traces/granite-tiny.routing.json
+
+  # or synthesize a parameterized skew without touching the engine
+  python -m repro.profiler record-routing --arch granite-moe-1b-a400m-tiny \
+      --mode synthetic --skew zipf --zipf-a 1.3 --out traces/zipf.json
+
+  # ride along with a hardware profile (MoE archs, measured mode)
+  python -m repro.profiler profile --device cpu-engine \
+      --arch granite-moe-1b-a400m-tiny --experts
+
 The operator-level profiler (raw ``Trace``, no artifact wrapper) remains as
 the ``ops`` subcommand; bare ``python -m repro.profiler --arch ...``
 invocations keep their legacy meaning (= ``ops``).
@@ -124,8 +139,57 @@ def _cmd_profile(args):
     # round-trip through the registry so a broken artifact fails HERE,
     # not at simulation time
     HardwareRegistry().load_file(out)
-    print(json.dumps({"trace": out, "device": hwt.device,
-                      "model": hwt.model, **hwt.meta}, indent=1))
+    summary = {"trace": out, "device": hwt.device,
+               "model": hwt.model, **hwt.meta}
+    if args.experts is not None:
+        rout = args.experts if args.experts != "auto" \
+            else f"traces/{args.device}.routing.json"
+        summary["routing_trace"] = _emit_routing(
+            args, out=rout, synthetic=(mode != "measured"))
+    print(json.dumps(summary, indent=1))
+
+
+def _emit_routing(args, out: str, synthetic: bool) -> str:
+    """Shared by ``profile --experts`` and ``record-routing``: emit (and
+    round-trip check) one ExpertRoutingTrace artifact for ``args.arch``."""
+    from repro.configs import get_config
+    from repro.moe import RoutingRegistry, moe_layer_count
+
+    cfg = get_config(args.arch)
+    if cfg.moe is None:
+        raise SystemExit(
+            f"--arch {args.arch} is not a MoE architecture; expert-routing "
+            f"traces need one (e.g. granite-moe-1b-a400m-tiny)")
+    if synthetic:
+        from repro.workload.expert_skew import SkewConfig, synthesize_routing
+        trace = synthesize_routing(
+            moe_layer_count(cfg), cfg.moe.n_experts, cfg.moe.top_k,
+            SkewConfig(kind=getattr(args, "skew", "zipf"),
+                       zipf_a=getattr(args, "zipf_a", 1.1),
+                       period=args.period, seed=args.seed),
+            model=cfg.name)
+    else:
+        from repro.moe.record import record_routing
+        trace = record_routing(
+            args.arch, n_requests=getattr(args, "requests", 8),
+            max_batch=args.max_batch, max_len=args.max_len,
+            period=args.period, seed=args.seed)
+    trace.save(out)
+    RoutingRegistry().load_file(out)   # broken artifacts fail at emit time
+    return out
+
+
+def _cmd_record_routing(args):
+    out = _emit_routing(args,
+                        out=args.out or f"traces/{args.arch}.routing.json",
+                        synthetic=(args.mode == "synthetic"))
+    from repro.moe import ExpertRoutingTrace
+    trace = ExpertRoutingTrace.load(out)
+    print(json.dumps({"trace": out, "model": trace.model,
+                      "n_layers": trace.n_layers,
+                      "n_experts": trace.n_experts, "top_k": trace.top_k,
+                      "static_imbalance": trace.static_imbalance(),
+                      **trace.meta}, indent=1))
 
 
 def _cmd_ops(args):
@@ -176,7 +240,42 @@ def main():
                    help="achievable fraction of peak on matmuls (default "
                         "0.85 for new specs; overrides a known spec's "
                         "value when given alone)")
-    p.set_defaults(fn=_cmd_profile)
+    p.add_argument("--experts", nargs="?", const="auto", default=None,
+                   metavar="PATH",
+                   help="MoE archs: also emit an ExpertRoutingTrace "
+                        "artifact (recorded through the engine in "
+                        "measured mode, synthesized otherwise) to PATH "
+                        "(default traces/<device>.routing.json)")
+    p.add_argument("--period", type=int, default=256,
+                   help="routing-trace position-bucket length")
+    p.set_defaults(fn=_cmd_profile, requests=8)
+
+    r = sub.add_parser(
+        "record-routing",
+        help="emit an ExpertRoutingTrace artifact (repro.moe) for a MoE "
+             "arch: record the real model's routing through JaxBackend, "
+             "or synthesize a parameterized skew")
+    r.add_argument("--arch", required=True,
+                   help="MoE architecture (e.g. granite-moe-1b-a400m-tiny)")
+    r.add_argument("--mode", default="measured",
+                   choices=["measured", "synthetic"],
+                   help="measured: free-running recording tap on the real "
+                        "engine; synthetic: parameterized skew generator")
+    r.add_argument("--out", default=None,
+                   help="output path (default traces/<arch>.routing.json)")
+    r.add_argument("--requests", type=int, default=8,
+                   help="workload size for measured recording")
+    r.add_argument("--max-batch", type=int, default=4)
+    r.add_argument("--max-len", type=int, default=256)
+    r.add_argument("--period", type=int, default=256,
+                   help="position-bucket length of the assignment tables")
+    r.add_argument("--seed", type=int, default=0)
+    r.add_argument("--skew", default="zipf",
+                   choices=["uniform", "zipf", "correlated"],
+                   help="synthetic mode: skew family")
+    r.add_argument("--zipf-a", type=float, default=1.1,
+                   help="synthetic mode: zipf exponent")
+    r.set_defaults(fn=_cmd_record_routing)
 
     o = sub.add_parser(
         "ops", help="operator-level trace (raw Trace, legacy format)")

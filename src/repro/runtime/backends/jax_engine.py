@@ -48,6 +48,37 @@ class JaxBackend:
         # real work done outside execute() (prefix store, P/D export) is
         # wall-timed and charged to the next iteration
         self._carry_s = 0.0
+        # expert-load accounting for a replayed ExpertRoutingTrace: the
+        # engine's replay hook forces every token's assignment in-graph
+        # (ServingEngine(routing=trace)); this mirror maps the *executed
+        # slot positions* — tracked independently of the scheduler's
+        # bookkeeping — through the same table, so the metrics state what
+        # really routed and the parity suite can pin sim == real.  The
+        # engine's own trace is the only valid source: a cfg-named trace
+        # the engine does not replay would make these metrics fiction
+        # (the model routed with its learned router), so that mismatch is
+        # an error, not a fallback.
+        from repro.moe import ExpertLoadTracker, resolve_routing
+        self.routing = getattr(engine, "routing_trace", None)
+        if getattr(cfg.moe, "routing_trace", None):
+            if self.routing is None:
+                raise ValueError(
+                    f"instance {cfg.name!r} names routing_trace="
+                    f"{cfg.moe.routing_trace!r} but its engine replays no "
+                    f"trace; build it with ServingEngine(routing=<trace>) "
+                    f"so the reported expert_load is what actually routed")
+            named = resolve_routing(cfg)
+            if named is not self.routing \
+                    and named.to_json() != self.routing.to_json():
+                raise ValueError(
+                    f"instance {cfg.name!r} names routing_trace="
+                    f"{cfg.moe.routing_trace!r} but its engine replays a "
+                    f"different trace ({self.routing.model!r}); the "
+                    f"accounting table must be the one the model executes")
+        self.expert_load = ExpertLoadTracker(
+            self.routing, ep=cfg.parallelism.ep) \
+            if self.routing is not None else None
+        self._routed_pos: List[int] = []     # positions routed this iter
 
     # ---- helpers ----
     def prompt_cap(self, req: SimRequest) -> int:
@@ -113,26 +144,59 @@ class JaxBackend:
         self._iterations += 1
         latency = time.perf_counter() - t0 + self._carry_s
         self._carry_s = 0.0
+        if self.expert_load is not None:
+            self.expert_load.observe(self._routed_pos, now)
+            self._routed_pos = []
         return latency
 
     def _decode_step(self, decodes: List[ScheduledWork]):
         import jax.numpy as jnp
         from repro.serve.sampler import greedy
         eng = self.eng
+        tokens = eng._tokens_buf
+        if self.routing is not None or self.eng.model.routing_hook \
+                is not None:
+            # routing-hook runs: mark every NON-scheduled slot (free, or
+            # occupied mid-prefill) with the sentinel token -1 so the
+            # model's decode mask excludes its row from MoE recording and
+            # capacity — the full-buffer decode computes it regardless,
+            # but it is not workload routing.  The engine buffer itself
+            # is left untouched (mid-prefill slots keep their pending
+            # first token).
+            tokens = tokens.copy()
+            scheduled_slots = {self._slot[w.request.req_id]
+                               for w in decodes}
+            for slot in range(eng.max_batch):
+                if slot not in scheduled_slots:
+                    tokens[slot, 0] = -1
         logits, eng.cache = eng._jit_decode(
-            eng.params, eng.cache, jnp.asarray(eng._tokens_buf))
+            eng.params, eng.cache, jnp.asarray(tokens))
         nxt = np.asarray(greedy(logits, eng.cfg.vocab))
         scheduled = set()
         for w in decodes:
             slot = self._slot[w.request.req_id]
             eng._tokens_buf[slot, 0] = int(nxt[slot, 0])
+            if self.expert_load is not None:
+                # the decode wrote this slot's token at KV index _len
+                self._routed_pos.append(self._len[slot])
             self._len[slot] += 1
             scheduled.add(slot)
-        if scheduled != set(self._len):
-            # the full-buffer decode bumped every slot's length; restore the
-            # authoritative lengths of mid-prefill / unscheduled slots (free
-            # slots may hold garbage lengths, as in the legacy engine loop —
-            # the next prefill write resets them)
+        hooked = self.routing is not None \
+            or eng.model.routing_hook is not None
+        if scheduled != set(self._len) \
+                or (hooked and len(self._len) < eng.max_batch):
+            # the full-buffer decode bumped every slot's length; restore
+            # the authoritative lengths of mid-prefill / unscheduled
+            # slots.  With a MoE routing hook installed, ALSO zero the
+            # free slots every iteration: free slots may otherwise keep
+            # garbage lengths (harmless for attention — nothing reads
+            # them), but the hook's validity mask identifies an empty
+            # slot by its zero length (position 0), and letting the bump
+            # accumulate across consecutive decode-only iterations would
+            # mark phantom rows valid — contaminating recorded routing
+            # traces and letting empty slots consume real tokens' expert
+            # capacity under forced replay.  Unhooked engines keep the
+            # old fast path.
             lengths = np.zeros((eng.max_batch,), np.int32)
             for s, n in self._len.items():
                 lengths[s] = n
@@ -174,6 +238,9 @@ class JaxBackend:
                 logits, new_sub = eng._jit_extend(eng.params, sub,
                                                   jnp.asarray(pad), n_new)
                 eng._write_slot(slot, new_sub, start + len(chunk))
+            if self.expert_load is not None:
+                # the chunk's tokens occupy KV positions [start, start+n)
+                self._routed_pos.extend(range(start, start + len(chunk)))
             self._len[slot] = start + len(chunk)
         if self._len[slot] >= len(toks) and logits is not None:
             # prompt complete: the last chunk's logits give the first token
@@ -253,6 +320,7 @@ class JaxBackend:
         self._slot.clear()
         self._len.clear()
         self._restore.clear()
+        self._routed_pos = []
         eng.slot_free = list(range(eng.max_batch))
         eng.cache["lengths"] = jnp.zeros((eng.max_batch,), jnp.int32)
 
@@ -261,6 +329,8 @@ class JaxBackend:
         if self.eng.radix is not None:
             s["kv_store_hits"] = self.eng.radix.hits
             s["kv_store_misses"] = self.eng.radix.misses
+        if self.expert_load is not None:
+            s["expert_load"] = self.expert_load.metrics()
         return s
 
 

@@ -11,7 +11,7 @@ from typing import List, Optional
 
 from repro.core.config import InstanceCfg
 from repro.core.memory import MemoryModel
-from repro.core.perfmodel import PerfModel
+from repro.core.perfmodel import PerfModel, batch_positions
 from repro.core.request import SimRequest
 from repro.core.trace import Trace
 from repro.runtime.backend import KvHandoff
@@ -25,7 +25,17 @@ class SimBackend:
     def __init__(self, cfg: InstanceCfg, trace: Optional[Trace] = None):
         self.cfg = cfg
         self.memory = MemoryModel(cfg)
-        self.perf = PerfModel(cfg, trace=trace)
+        # replayable expert-routing trace (MoECfg.routing_trace): prices
+        # per-layer expert load and feeds the uniform expert_load metrics.
+        # Imported lazily: repro.moe sits above repro.core in the layering
+        # (it consumes core.expert), so a cold import of this module must
+        # not re-enter it mid-initialization.
+        from repro.moe import ExpertLoadTracker, resolve_routing
+        self.routing = resolve_routing(cfg)
+        self.expert_load = ExpertLoadTracker(
+            self.routing, ep=cfg.parallelism.ep) \
+            if self.routing is not None else None
+        self.perf = PerfModel(cfg, trace=trace, routing=self.routing)
         # prefix-cache restore / tier-fetch latency charged to the next
         # iteration (the request that hit pays for its own fetch)
         self._pending_fetch_s = 0.0
@@ -61,9 +71,22 @@ class SimBackend:
         return self._tput_hint.get(phase, self._tput_hint[None])
 
     def execute(self, work: List[ScheduledWork], now: float) -> float:
-        cost = self.perf.iteration_latency(to_batch_items(work))
+        items = to_batch_items(work)
+        counts = n_tokens = None
+        if self.routing is not None:
+            # one bincount pass per iteration, shared by pricing and the
+            # expert-load accounting (the real engine accounts
+            # independently, from its slot lengths — that independence is
+            # what the parity suite tests)
+            pos = batch_positions(items)
+            n_tokens = int(pos.size)
+            counts = [self.routing.counts_for(l, pos)
+                      for l in range(self.routing.n_layers)]
+        cost = self.perf.iteration_latency(items, routing_counts=counts)
         latency = cost.total_s + self._pending_fetch_s
         self._pending_fetch_s = 0.0
+        if self.expert_load is not None:
+            self.expert_load.observe_counts(counts, n_tokens, now)
         return latency
 
     def on_prefix_hit(self, req: SimRequest, match: MatchResult,
@@ -98,4 +121,6 @@ class SimBackend:
         pass
 
     def stats(self) -> dict:
+        if self.expert_load is not None:
+            return {"expert_load": self.expert_load.metrics()}
         return {}

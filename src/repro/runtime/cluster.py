@@ -19,7 +19,7 @@ from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 
 from repro.core.config import ClusterCfg, InstanceCfg
 from repro.core.engine import EventQueue
-from repro.core.metrics import aggregate
+from repro.core.metrics import aggregate, merge_expert_load
 from repro.core.network import NetworkModel
 from repro.core.request import QUEUED, SimRequest
 from repro.core.trace import Trace, TraceRegistry
@@ -203,4 +203,11 @@ class ServingRuntime:
         m["instances"] = {n: i.stats() for n, i in self.instances.items()}
         m["network_bytes"] = self.network.stats()
         m["network_links"] = self.network.link_stats()
+        # trace-driven MoE: cluster-level expert-load rollup (per-instance
+        # detail stays under instances[<name>]["expert_load"]) — reported
+        # identically by both backends, pinned by the parity suite
+        loads = [s["expert_load"] for s in m["instances"].values()
+                 if "expert_load" in s]
+        if loads:
+            m["expert_load"] = merge_expert_load(loads)
         return m

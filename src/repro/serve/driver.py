@@ -30,8 +30,15 @@ from repro.workload.sharegpt import Request
 
 def engine_instance_cfg(engine: ServingEngine,
                         scheduler: Optional[SchedulerCfg] = None,
-                        trace_name: Optional[str] = None) -> InstanceCfg:
-    """Runtime InstanceCfg mirroring a live ``ServingEngine``."""
+                        trace_name: Optional[str] = None,
+                        moe=None) -> InstanceCfg:
+    """Runtime InstanceCfg mirroring a live ``ServingEngine``.
+
+    ``moe`` (a ``repro.core.MoECfg``) lets the simulated twin of a MoE
+    engine name the same ``routing_trace`` the engine replays, so
+    sim-vs-real comparisons report comparable ``expert_load`` metrics.
+    """
+    from repro.core.config import MoECfg
     from repro.profiler import model_spec_from_arch
     spec = model_spec_from_arch(engine.cfg)
     scheduler = scheduler or engine_scheduler_cfg(engine.max_batch)
@@ -49,6 +56,7 @@ def engine_instance_cfg(engine: ServingEngine,
             enabled=engine.radix is not None,
             block_tokens=engine.radix.block if engine.radix else 16,
             capacity_fraction=0.5),
+        moe=moe if moe is not None else MoECfg(),
         trace_name=trace_name)
 
 

@@ -99,13 +99,36 @@ class ServingEngine:
     def __init__(self, cfg: ArchConfig, params=None, *, max_batch: int = 8,
                  max_len: int = 512, prefix_cache: bool = False,
                  role: str = "unified", name: str = "engine0", seed: int = 0,
-                 tp: int = 1):
+                 tp: int = 1, routing=None):
         self.cfg = cfg
         self.name = name
         self.role = role
         self.tp = max(int(tp), 1)
         self.mesh = None
-        self.model = Model(cfg, remat=False)
+        # MoE routing injection must happen here, before any jit traces:
+        # the jitted closures capture the model's routing hook, so a hook
+        # installed later would be silently ignored by cached traces.
+        # ``routing`` is either an ExpertRoutingTrace (replayed verbatim —
+        # forced assignment — and remembered so JaxBackend accounts
+        # expert-load metrics from the same table) or a raw hook callable
+        # (bias / recording; see repro.moe.hooks).
+        self.routing_trace = None
+        hook = None
+        if routing is not None:
+            if callable(routing):
+                hook = routing
+            else:
+                from repro.moe.hooks import make_replay_hook
+                from repro.moe.trace import moe_layer_count
+                routing.check_model(cfg)
+                if routing.n_layers != moe_layer_count(cfg):
+                    raise ValueError(
+                        f"routing trace {routing.model!r} has "
+                        f"{routing.n_layers} MoE layers but {cfg.name!r} "
+                        f"has {moe_layer_count(cfg)}")
+                self.routing_trace = routing
+                hook = make_replay_hook(routing)
+        self.model = Model(cfg, remat=False, routing_hook=hook)
         self.params = params if params is not None else self.model.init(
             jax.random.PRNGKey(seed))
         self.max_batch = max_batch

@@ -1,6 +1,9 @@
 from repro.workload.arrival import gamma, poisson, uniform
 from repro.workload.sharegpt import Request, ShareGPTConfig, generate, stats
 from repro.workload.datasets import DataConfig, token_batches
+from repro.workload.expert_skew import (SkewConfig, routing_for_model,
+                                        synthesize_routing)
 
 __all__ = ["gamma", "poisson", "uniform", "Request", "ShareGPTConfig",
-           "generate", "stats", "DataConfig", "token_batches"]
+           "generate", "stats", "DataConfig", "token_batches",
+           "SkewConfig", "synthesize_routing", "routing_for_model"]

@@ -1,0 +1,463 @@
+"""Trace-driven MoE expert routing: sim/real expert-load parity, artifact
+round-trip + legacy migration, routing-hook contract, and trace-driven
+pricing (in the style of ``tests/test_hw_trace.py``).
+
+The parity tests replay one synthetic zipf ``ExpertRoutingTrace`` through
+both execution backends on the same workload and pin *identical* per-layer
+expert token counts — the backends derive token positions independently
+(sim from the scheduler's request bookkeeping, real from the engine's slot
+lengths), so agreement means the unified runtime's chunking/position
+accounting matches what the real engine executed.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ClusterCfg, InstanceCfg, MoECfg, RouterCfg
+from repro.core.cluster import Cluster
+from repro.core.config import TPU_V5E, ModelSpec, ParallelismCfg, SchedulerCfg
+from repro.core.perfmodel import BatchItem, PerfModel
+from repro.moe import (SCHEMA_VERSION, ExpertRoutingTrace, RoutingRegistry,
+                       moe_layer_count, register_routing)
+from repro.workload import ShareGPTConfig, generate
+from repro.workload.expert_skew import SkewConfig, synthesize_routing
+
+ARCH = "granite-moe-1b-a400m-tiny"
+
+
+def _tiny_trace(seed=7, kind="zipf", zipf_a=1.4, period=128):
+    cfg = get_config(ARCH)
+    return synthesize_routing(
+        moe_layer_count(cfg), cfg.moe.n_experts, cfg.moe.top_k,
+        SkewConfig(kind=kind, zipf_a=zipf_a, period=period, seed=seed),
+        model=cfg.name)
+
+
+def _workload(vocab, n=6, seed=3):
+    reqs = generate(ShareGPTConfig(
+        n_requests=n, rate=50.0, vocab=vocab, seed=seed,
+        mean_prompt=40, mean_output=6, sigma_prompt=0.4, sigma_output=0.3,
+        max_prompt=90, max_output=8, share_fraction=0.0))
+    for r in reqs:
+        r.arrival = 0.0     # decision parity must not depend on latencies
+    return reqs
+
+
+# --------------------------------------------------------------------------
+# sim/real parity
+# --------------------------------------------------------------------------
+
+def _run_parity_pair(scheduler: SchedulerCfg):
+    from repro.serve import DriverCfg, ServeDriver, ServingEngine
+    from repro.serve.driver import engine_instance_cfg
+
+    cfg = get_config(ARCH)
+    trace = _tiny_trace()
+    register_routing("parity-zipf", trace)
+    reqs = _workload(vocab=cfg.vocab)
+
+    eng = ServingEngine(cfg, max_batch=2, max_len=256, name="e0",
+                        routing=trace)
+    drv = ServeDriver([eng], DriverCfg(scheduler=scheduler))
+    real = drv.run(reqs, warmup=False)
+
+    icfg = engine_instance_cfg(eng, scheduler,
+                               moe=MoECfg(routing_trace="parity-zipf"))
+    sim_cluster = Cluster(ClusterCfg(instances=(icfg,),
+                                     router=RouterCfg("round_robin")))
+    sim_cluster.submit_workload(reqs)
+    sim = sim_cluster.run()
+    return trace, real, sim
+
+
+def test_sim_real_expert_load_parity_chunked():
+    """One zipf trace, two engines, identical per-layer expert counts —
+    with chunked prefill, so extend-path positions are exercised too."""
+    sched = SchedulerCfg(max_batch_size=2, max_batch_tokens=64,
+                         chunked_prefill=True, prefill_chunk=16)
+    trace, real, sim = _run_parity_pair(sched)
+    assert real["finished"] == sim["finished"] == 6
+    r = real["instances"]["e0"]["expert_load"]
+    s = sim["instances"]["e0"]["expert_load"]
+    assert r["tokens"] == s["tokens"] > 0
+    assert r["counts"] == s["counts"]
+    assert np.asarray(r["counts"]).shape == (trace.n_layers,
+                                             trace.n_experts)
+    # counts conserve tokens: every routed token hits exactly top_k experts
+    assert np.asarray(r["counts"]).sum() == \
+        r["tokens"] * trace.top_k * trace.n_layers
+    assert r["imbalance"] == pytest.approx(s["imbalance"])
+    assert r["per_layer_imbalance"] == pytest.approx(
+        s["per_layer_imbalance"])
+    assert r["hot_expert"] == s["hot_expert"]
+    # the replayed zipf skew is actually visible in the counts
+    total = np.asarray(s["counts"]).sum(axis=0)
+    assert total.max() > 1.5 * total.min()
+
+
+def test_sim_real_expert_load_parity_engine_matched():
+    """Whole-prompt prefill semantics (the engine's historical loop)."""
+    from repro.core.config import engine_scheduler_cfg
+    trace, real, sim = _run_parity_pair(engine_scheduler_cfg(2))
+    r = real["instances"]["e0"]["expert_load"]
+    s = sim["instances"]["e0"]["expert_load"]
+    assert r["counts"] == s["counts"]
+    assert r["tokens"] == s["tokens"] > 0
+
+
+def test_cluster_level_expert_load_on_both_paths():
+    """metrics()["expert_load"] is the acceptance surface: reported by the
+    sim cluster and the real driver alike, rolled up over instances."""
+    sched = SchedulerCfg(max_batch_size=2, max_batch_tokens=64,
+                         chunked_prefill=True, prefill_chunk=16)
+    trace, real, sim = _run_parity_pair(sched)
+    for m in (real, sim):
+        el = m["expert_load"]
+        assert el["counts"] == real["expert_load"]["counts"]
+        assert el["instances_merged"] == 1
+        assert el["imbalance"] > 1.0
+        assert el["hot_expert"] is not None
+        times = [t for t, _, _ in el["hot_timeline"]]
+        assert times == sorted(times) and len(times) > 0
+
+
+# --------------------------------------------------------------------------
+# routing hook contract (real model side)
+# --------------------------------------------------------------------------
+
+def test_replay_hook_returns_trace_assignments():
+    import jax.numpy as jnp
+    from repro.moe.hooks import make_replay_hook
+    trace = _tiny_trace(period=16)
+    hook = make_replay_hook(trace)
+    positions = jnp.asarray([0, 5, 15, 16, 33])   # wraps mod period
+    idx, w, aux = hook(jnp.zeros((5, trace.n_experts)),
+                       positions=positions, layer=0, top_k=trace.top_k)
+    expect = trace.assignments_for(0, np.asarray([0, 5, 15, 16, 33]))
+    np.testing.assert_array_equal(np.asarray(idx), expect)
+    np.testing.assert_allclose(np.asarray(w), 1.0 / trace.top_k)
+    assert float(aux) == 0.0
+
+
+def test_replay_hook_changes_real_model_routing():
+    """Forcing two different (balanced, capacity-safe) routings through
+    the same params must change the computed output — the hook really
+    routes in-graph, it is not just metric bookkeeping."""
+    import jax
+    from repro.models import Model
+    from repro.moe.hooks import make_replay_hook
+
+    cfg = get_config(ARCH)
+    E, k, L = cfg.moe.n_experts, cfg.moe.top_k, moe_layer_count(cfg)
+
+    def forced(shift):
+        # position p -> experts [(p+shift) % E, (p+shift+1) % E]: balanced
+        # across experts, so no token is dropped by the capacity buffers
+        # (an everyone-to-one-expert table would overflow capacity and
+        # zero the late tokens' contributions under EVERY forcing)
+        p = np.arange(32)[:, None]
+        table = ((p + shift + np.arange(k)[None, :]) % E).astype(np.int32)
+        return ExpertRoutingTrace(model=cfg.name, n_experts=E, top_k=k,
+                                  layers=[table.copy() for _ in range(L)])
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab)
+    base = Model(cfg, remat=False)
+    params = base.init(jax.random.PRNGKey(0))
+    out = {}
+    for shift in (0, 2):
+        model = Model(cfg, remat=False,
+                      routing_hook=make_replay_hook(forced(shift)))
+        logits, _ = model.forward(params, toks)
+        out[shift] = np.asarray(logits, np.float32)
+    assert not np.allclose(out[0], out[2])
+    # determinism: the same forced trace reproduces identical logits
+    model = Model(cfg, remat=False,
+                  routing_hook=make_replay_hook(forced(0)))
+    again, _ = model.forward(params, toks)
+    np.testing.assert_array_equal(out[0], np.asarray(again, np.float32))
+
+
+def test_invalid_rows_never_consume_expert_capacity():
+    """Pad tails / empty decode slots are routed by the jitted batch too;
+    under forced replay they would all hit the same table row and could
+    evict real tokens from the capacity buffers — dispatch must send them
+    straight to overflow so a real token's output is identical with or
+    without invalid neighbors."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.moe import moe_ffn
+    from repro.moe.hooks import make_replay_hook
+
+    d, de, E, k = 16, 8, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    params = {"router": jax.random.normal(ks[0], (d, E)),
+              "w_gate": jax.random.normal(ks[1], (E, d, de)) * 0.1,
+              "w_up": jax.random.normal(ks[2], (E, d, de)) * 0.1,
+              "w_down": jax.random.normal(ks[3], (E, de, d)) * 0.1}
+    def replay(table):
+        return make_replay_hook(ExpertRoutingTrace(
+            model="m", n_experts=E, top_k=k,
+            layers=[np.asarray(table, np.int32)]))
+
+    x = jax.random.normal(ks[4], (4, d))
+    pos = jnp.arange(4)
+    # capacity C = round(4*2*1.25/4) = 3.  Mixed batch: two INVALID rows
+    # forced onto the same experts {0,1} as the two real rows — stable
+    # sorting would hand them capacity slots 0,1 and push a real entry
+    # past C if they were not excluded from dispatch.
+    hot = replay([[0, 1]] * 4)
+    y_mixed, _ = moe_ffn(x, params, top_k=k, router_fn=hot,
+                         positions=pos,
+                         valid=jnp.asarray([False, False, True, True]))
+    # reference at the SAME T (same capacity): extra rows are valid but
+    # routed to disjoint experts, so the real rows face no competition
+    apart = replay([[2, 3], [2, 3], [0, 1], [0, 1]])
+    y_ref, _ = moe_ffn(x, params, top_k=k, router_fn=apart,
+                       positions=pos,
+                       valid=jnp.asarray([True, True, True, True]))
+    np.testing.assert_allclose(np.asarray(y_mixed[2:], np.float32),
+                               np.asarray(y_ref[2:], np.float32),
+                               rtol=1e-5, atol=1e-6)
+    # and invalid rows contribute nothing
+    np.testing.assert_array_equal(np.asarray(y_mixed[:2], np.float32), 0.0)
+
+
+def test_bias_hook_steers_toward_trace_skew():
+    import jax
+    import jax.numpy as jnp
+    from repro.moe.hooks import make_bias_hook
+    trace = _tiny_trace(zipf_a=2.5, period=64)
+    hook = make_bias_hook(trace, strength=25.0)
+    logits = jax.random.normal(jax.random.PRNGKey(0),
+                               (256, trace.n_experts))
+    idx, w, _ = hook(logits, positions=jnp.arange(256), layer=0,
+                     top_k=trace.top_k)
+    counts = np.bincount(np.asarray(idx).reshape(-1),
+                         minlength=trace.n_experts)
+    ref = np.zeros(trace.n_experts, np.int64)
+    for l in range(trace.n_layers):
+        ref += trace.counts_for(l, np.arange(trace.period))
+    # a strong bias concentrates load on the trace's hot expert
+    assert counts.argmax() == ref.argmax()
+
+
+def test_engine_rejects_mismatched_trace():
+    from repro.serve import ServingEngine
+    cfg = get_config(ARCH)
+    bad = synthesize_routing(moe_layer_count(cfg), 8, 2,
+                             SkewConfig(period=32), model="other")
+    with pytest.raises(ValueError, match="experts"):
+        ServingEngine(cfg, max_batch=2, max_len=64, routing=bad)
+
+
+# --------------------------------------------------------------------------
+# artifact round-trip / schema / registry
+# --------------------------------------------------------------------------
+
+def test_trace_roundtrip_and_deterministic_bytes(tmp_path):
+    t = synthesize_routing(2, 8, 2, SkewConfig(zipf_a=1.2, period=64,
+                                               seed=3), model="m")
+    p1 = t.save(str(tmp_path / "a.json"))
+    loaded = ExpertRoutingTrace.load(p1)
+    assert loaded.n_layers == 2 and loaded.period == 64
+    assert (loaded.model, loaded.n_experts, loaded.top_k) == ("m", 8, 2)
+    for a, b in zip(t.layers, loaded.layers):
+        np.testing.assert_array_equal(a, b)
+    assert json.load(open(p1))["schema"] == SCHEMA_VERSION
+    # replay equivalence: same counts for arbitrary positions
+    pos = np.asarray([0, 1, 63, 64, 200])
+    np.testing.assert_array_equal(t.counts_for(1, pos),
+                                  loaded.counts_for(1, pos))
+    # fixed seed => byte-identical artifact
+    t2 = synthesize_routing(2, 8, 2, SkewConfig(zipf_a=1.2, period=64,
+                                                seed=3), model="m")
+    p2 = t2.save(str(tmp_path / "b.json"))
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+
+
+def test_legacy_moetrace1_loads_and_migrates(tmp_path):
+    """moetrace/1 (one shared table + n_layers) loads by replication and
+    re-saves as moetrace/2 with identical routing."""
+    shared = synthesize_routing(1, 4, 2, SkewConfig(period=32, seed=1))
+    legacy = str(tmp_path / "legacy.json")
+    json.dump({
+        "schema": "moetrace/1", "model": "m", "n_experts": 4, "top_k": 2,
+        "n_layers": 3, "assignments": shared.layers[0].tolist(),
+        "meta": {"source": "synthetic"},
+    }, open(legacy, "w"))
+    loaded = ExpertRoutingTrace.load(legacy)
+    assert loaded.n_layers == 3
+    pos = np.arange(48)
+    for l in range(3):
+        np.testing.assert_array_equal(loaded.counts_for(l, pos),
+                                      shared.counts_for(0, pos))
+    migrated = str(tmp_path / "migrated.json")
+    loaded.save(migrated)
+    doc = json.load(open(migrated))
+    assert doc["schema"] == "moetrace/2"
+    assert [g["layer"] for g in doc["layers"]] == [0, 1, 2]
+    re = ExpertRoutingTrace.load(migrated)
+    np.testing.assert_array_equal(re.counts_for(2, pos),
+                                  shared.counts_for(0, pos))
+
+
+def test_schema_gate_and_validation(tmp_path):
+    t = synthesize_routing(1, 4, 2, SkewConfig(period=16))
+    path = t.save(str(tmp_path / "t.json"))
+    doc = json.load(open(path))
+    doc["schema"] = "moetrace/999"
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ValueError, match="schema"):
+        ExpertRoutingTrace.load(path)
+    # out-of-range expert ids never reach disk
+    bad = synthesize_routing(1, 4, 2, SkewConfig(period=16))
+    bad.layers[0][0, 0] = 9
+    with pytest.raises(ValueError, match="out of range"):
+        bad.save(str(tmp_path / "bad.json"))
+    with pytest.raises(ValueError, match="top_k"):
+        ExpertRoutingTrace(model="m", n_experts=2, top_k=4,
+                           layers=[np.zeros((4, 4), np.int32)]).validate()
+
+
+def test_registry_resolution_and_model_check(tmp_path):
+    from repro.moe import resolve_routing
+    reg = RoutingRegistry()
+    t = synthesize_routing(2, 8, 2, SkewConfig(period=32), model="m")
+    reg.load_file(t.save(str(tmp_path / "routing.json")))
+    assert reg.names() == ["routing"]
+    model = ModelSpec(name="m", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_head=16, d_ff=128, vocab=256,
+                      moe_experts=8, moe_top_k=2, moe_d_expert=32)
+    icfg = InstanceCfg(name="i0", hw=TPU_V5E, model=model,
+                       moe=MoECfg(routing_trace="routing"))
+    assert resolve_routing(icfg, reg) is reg.get("routing")
+    # structural mismatch is an error, not a silent clamp
+    wrong = dataclasses.replace(model, moe_experts=16, moe_top_k=4)
+    bad = dataclasses.replace(icfg, model=wrong)
+    with pytest.raises(ValueError, match="experts"):
+        resolve_routing(bad, reg)
+    # unknown names fail with guidance
+    missing = dataclasses.replace(icfg,
+                                  moe=MoECfg(routing_trace="nope"))
+    with pytest.raises(KeyError, match="record-routing"):
+        resolve_routing(missing, reg)
+    # hw registry must skip routing artifacts in traces/ silently (the
+    # profile --experts workflow puts them there by design)
+    import warnings
+    from repro.hw import HardwareRegistry
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert HardwareRegistry().load_dir(str(tmp_path)) == []
+
+
+# --------------------------------------------------------------------------
+# trace-driven pricing (SimBackend / PerfModel)
+# --------------------------------------------------------------------------
+
+def test_skewed_trace_prices_prefill_slower_than_uniform():
+    """Expert-parallel prefill pays the trace's imbalance factor: the same
+    batch under a hot zipf trace is slower than under a uniform one."""
+    model = ModelSpec(name="m", n_layers=4, d_model=1536, n_heads=24,
+                      n_kv_heads=8, d_head=64, d_ff=512, vocab=32000,
+                      moe_experts=40, moe_top_k=8, moe_d_expert=512)
+    icfg = InstanceCfg(name="i0", hw=TPU_V5E, model=model,
+                       parallelism=ParallelismCfg(tp=8, ep=8))
+    uni = synthesize_routing(4, 40, 8, SkewConfig(kind="uniform",
+                                                  period=512, seed=0))
+    hot = synthesize_routing(4, 40, 8, SkewConfig(kind="zipf", zipf_a=2.0,
+                                                  period=512, seed=0))
+    items = [BatchItem(tokens=4096, context=4096, phase="prefill")]
+    lat_u = PerfModel(icfg, routing=uni).iteration_latency(items).total_s
+    lat_h = PerfModel(icfg, routing=hot).iteration_latency(items).total_s
+    assert lat_h > lat_u > 0
+    # and the statistical-router fallback still works with no trace
+    assert PerfModel(icfg).iteration_latency(items).total_s > 0
+
+
+def test_recorder_distills_bucketed_tables():
+    from repro.moe.record import RoutingRecorder
+    rec = RoutingRecorder(n_layers=1, n_experts=4, top_k=2, period=8)
+    # position 0 overwhelmingly routes to {3, 1}; position 1 to {0, 2}
+    for _ in range(5):
+        rec.tap(0, np.asarray([0, 1]), np.asarray([[3, 1], [0, 2]]))
+    rec.tap(0, np.asarray([0]), np.asarray([[2, 0]]))
+    t = rec.to_trace(model="m")
+    assert sorted(t.layers[0][0].tolist()) == [1, 3]
+    assert sorted(t.layers[0][1].tolist()) == [0, 2]
+    # unseen positions fall back to the layer-global top-k
+    glob = sorted(t.layers[0][5].tolist())
+    assert glob == sorted(np.argsort(-rec.hist[0].sum(0),
+                                     kind="stable")[:2].tolist())
+    assert t.meta["source"] == "recorded"
+    # pad-tail / empty-slot rows are masked out, not histogrammed
+    before = rec.hist.copy()
+    rec.tap(0, np.asarray([0, 6]), np.asarray([[0, 1], [0, 1]]),
+            valid=np.asarray([False, True]))
+    delta = rec.hist - before
+    assert delta[0, 0].sum() == 0 and delta[0, 6].sum() == 2
+    # disabled recorder ignores taps (warmup exclusion)
+    rec.enabled = False
+    before = rec.hist.copy()
+    rec.tap(0, np.asarray([0]), np.asarray([[0, 1]]))
+    np.testing.assert_array_equal(before, rec.hist)
+
+
+def test_recording_counts_exactly_the_workload_tokens():
+    """Pad tails, free decode slots, AND occupied-but-unscheduled slots
+    (mid-chunked-prefill during a decode iteration) must contribute zero
+    observations: the full-buffer decode computes their rows anyway, so
+    both historical leaks — free slots' stale length bumps across
+    consecutive decode-only iterations, and mid-prefill slots riding in
+    the decode batch — once inflated recorded traces with phantom rows."""
+    from repro.moe.hooks import make_recording_hook
+    from repro.moe.record import RoutingRecorder
+    from repro.serve import DriverCfg, ServeDriver, ServingEngine
+
+    cfg = get_config(ARCH)
+    rec = RoutingRecorder(moe_layer_count(cfg), cfg.moe.n_experts,
+                          cfg.moe.top_k, period=64)
+    rec.enabled = False
+    # max_batch 4, 3 requests, chunked prefill with a tiny token budget:
+    # decode iterations overlap other requests' prefill chunks AND a slot
+    # stays free throughout — both phantom-row geometries at once
+    eng = ServingEngine(cfg, max_batch=4, max_len=128, name="r0",
+                        routing=make_recording_hook(rec))
+    sched = SchedulerCfg(max_batch_size=4, max_batch_tokens=32,
+                         chunked_prefill=True, prefill_chunk=16)
+    drv = ServeDriver([eng], DriverCfg(scheduler=sched))
+    drv.runtime.warmup()
+    rec.enabled = True
+    reqs = generate(ShareGPTConfig(
+        n_requests=3, rate=50.0, vocab=cfg.vocab, seed=2, mean_prompt=30,
+        mean_output=10, max_prompt=60, max_output=12, share_fraction=0.0))
+    drv.runtime.submit_workload(reqs)
+    drv.runtime.run()
+    # prompt tokens + (output - 1) decode steps, top_k entries each, per
+    # MoE layer — nothing more, nothing less
+    rows = sum(r.prompt_len + r.output_len - 1 for r in reqs)
+    assert int(rec.hist.sum()) == \
+        rows * cfg.moe.top_k * moe_layer_count(cfg)
+
+
+def test_jax_backend_rejects_unreplayed_cfg_trace():
+    """A cfg-named routing trace the engine does not replay must fail
+    loudly: accounting it anyway would report routing that never ran."""
+    from repro.runtime.backends.jax_engine import JaxBackend
+    from repro.serve import ServingEngine
+    from repro.serve.driver import engine_instance_cfg
+    cfg = get_config(ARCH)
+    register_routing("unreplayed", _tiny_trace())
+    eng = ServingEngine(cfg, max_batch=2, max_len=64)   # no routing=
+    icfg = engine_instance_cfg(eng,
+                               moe=MoECfg(routing_trace="unreplayed"))
+    with pytest.raises(ValueError, match="replays no trace"):
+        JaxBackend(eng, icfg)
+    # an engine replaying a DIFFERENT trace than cfg names is just as
+    # wrong: accounting and execution would use different tables
+    other = _tiny_trace(seed=99)
+    eng2 = ServingEngine(cfg, max_batch=2, max_len=64, routing=other)
+    with pytest.raises(ValueError, match="different trace"):
+        JaxBackend(eng2, icfg)

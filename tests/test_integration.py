@@ -52,6 +52,27 @@ def test_engine_vs_sim_fidelity_smoke():
     assert 0.05 < ratio_tpot < 20.0, ratio_tpot
 
 
+def test_moe_offload_study_example_smoke():
+    """The MoE offload example must stay runnable end-to-end (it rotted
+    silently once when it read sim-only skew knobs): it sweeps offload
+    targets under one replayable routing trace and reports expert load."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from examples.moe_offload_study import SWEEP, main
+    rows = main(n_requests=8)
+    assert len(rows) == len(SWEEP)
+    for offload, frac, prefetch, m in rows:
+        assert m["finished"] == 8, (offload, frac, prefetch)
+        el = m["expert_load"]
+        assert np.asarray(el["counts"]).sum() > 0
+        assert el["imbalance"] > 1.0
+    # offloading half the experts over the host link costs decode latency
+    base = next(m for off, f, _, m in rows if off == "none")
+    host = next(m for off, f, pre, m in rows
+                if (off, f, pre) == ("host", 0.5, False))
+    assert host["tpot_mean_s"] > base["tpot_mean_s"]
+
+
 def test_checkpoint_save_restore_resume(tmp_path):
     from repro.launch.train import get_train_config
     from repro.train import AdamW, TrainState, init_state, make_train_step
