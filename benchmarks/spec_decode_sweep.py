@@ -1,0 +1,88 @@
+"""Speculative-decoding sweep: acceptance rate x draft size, sim-priced.
+
+Synthesizes one ``AcceptanceTrace`` per target acceptance rate, replays
+each on the simulator at several draft lengths, and reports the TPOT
+speedup over vanilla decode plus the wasted-draft-token volume — the two
+sides of the speculative-decoding economics: a spec step's cost is fixed
+(k + 1 draft decodes + one k+1-token verification) while its progress is
+the acceptance draw + 1, so low acceptance with a deep draft *slows
+decoding down* (the wasted-compute crossover), while high acceptance
+approaches a (mean accepted + 1)x speedup.  Every trace is also
+replayable on the real engine via
+``ServingEngine(spec=SpecDecodeCfg(acceptance=trace))``.
+
+  PYTHONPATH=src python benchmarks/spec_decode_sweep.py
+"""
+import dataclasses
+
+from repro.configs import get_config
+from repro.core import (ClusterCfg, InstanceCfg, RouterCfg, SchedulerCfg,
+                        SpecCfg, simulate)
+from repro.core.config import TPU_V6E
+from repro.profiler import model_spec_from_arch
+from repro.spec import register_acceptance
+from repro.workload import (AcceptanceConfig, ShareGPTConfig, generate,
+                            synthesize_acceptance)
+
+
+def run(n_requests: int = 40, alphas=(0.3, 0.6, 0.9), ks=(2, 4, 8),
+        draft_scale: float = 0.25):
+    model = model_spec_from_arch(get_config("llama3.1-8b"))
+    reqs = generate(ShareGPTConfig(n_requests=n_requests, rate=15.0,
+                                   vocab=32000, seed=3))
+
+    def simulate_one(spec: SpecCfg, decode_tokens: int):
+        icfg = InstanceCfg(
+            name="i0", hw=TPU_V6E, model=model,
+            scheduler=SchedulerCfg(max_batch_size=32,
+                                   decode_tokens=decode_tokens),
+            spec=spec)
+        return simulate(ClusterCfg((icfg,), router=RouterCfg("round_robin")),
+                        reqs)
+
+    base = simulate_one(SpecCfg(), 1)
+    rows = []
+    for alpha in alphas:
+        for k in ks:
+            name = f"sweep-a{alpha}-k{k}"
+            register_acceptance(name, synthesize_acceptance(
+                AcceptanceConfig(alpha=alpha, k=k, period=256, seed=0)))
+            m = simulate_one(
+                SpecCfg(enabled=True, k=k, draft_scale=draft_scale,
+                        acceptance_trace=name), k + 1)
+            rows.append((alpha, k, m))
+    return base, rows
+
+
+def main():
+    base, rows = run()
+    print(f"vanilla TPOT {base['tpot_mean_s'] * 1e3:.2f} ms")
+    print(f"{'alpha':>5s} {'k':>3s} {'TPOT(ms)':>9s} {'speedup':>8s} "
+          f"{'acc rate':>8s} {'mean acc':>8s} {'wasted':>7s}")
+    speedup = {}
+    for alpha, k, m in rows:
+        sd = m["spec_decode"]
+        speedup[(alpha, k)] = base["tpot_mean_s"] / m["tpot_mean_s"]
+        print(f"{alpha:5.1f} {k:3d} {m['tpot_mean_s'] * 1e3:9.2f} "
+              f"{speedup[(alpha, k)]:8.2f} {sd['acceptance_rate']:8.2f} "
+              f"{sd['mean_accepted_len']:8.2f} "
+              f"{sd['wasted_draft_tokens']:7d}")
+    alphas = sorted({a for a, _, _ in rows})
+    ks = sorted({k for _, k, _ in rows})
+    # acceptance buys speedup at every draft size
+    for k in ks:
+        ordered = [speedup[(a, k)] for a in alphas]
+        assert ordered == sorted(ordered), (k, ordered)
+    # the wasted-compute crossover: a spec step's cost is fixed while its
+    # progress follows acceptance, so at low acceptance deep drafts burn
+    # more verification compute than they advance — slower than the
+    # shallow draft AND slower than not speculating at all — while at
+    # high acceptance every draft size beats vanilla decode
+    assert speedup[(alphas[0], ks[-1])] < speedup[(alphas[0], ks[0])]
+    assert speedup[(alphas[0], ks[-1])] < 1.0
+    assert all(speedup[(alphas[-1], k)] > 1.0 for k in ks)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

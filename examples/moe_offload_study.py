@@ -13,7 +13,7 @@ statistical knob: the exact same trace can be replayed on the real engine
 """
 from repro.core import (ClusterCfg, InstanceCfg, MoECfg, ParallelismCfg,
                         SchedulerCfg, simulate)
-from repro.core.config import TPU_V5E
+from repro.core.config import PIM_DEVICE, TPU_V5E
 from repro.profiler import model_spec_from_arch
 from repro.configs import get_config
 from repro.moe import register_routing
@@ -44,7 +44,11 @@ def main(n_requests: int = 100):
             parallelism=ParallelismCfg(tp=8, ep=8),
             scheduler=SchedulerCfg(max_batch_size=48),
             moe=MoECfg(offload=offload, offload_fraction=frac,
-                       prefetch=prefetch, routing_trace="offload-study"))
+                       prefetch=prefetch, routing_trace="offload-study"),
+            # memory-side accelerator the pim points execute offloaded
+            # experts on (InstanceCfg.pim; PerfModel would fall back to
+            # this same preset, but the study names its device explicitly)
+            pim=PIM_DEVICE)
         m = simulate(ClusterCfg((icfg,)), reqs)
         rows.append((offload, frac, prefetch, m))
 

@@ -52,6 +52,7 @@ class ModelSpec:
     moe_experts: int = 0
     moe_top_k: int = 0
     moe_d_expert: int = 0
+    moe_capacity_factor: float = 1.25   # per-expert capacity buffer scale
     mlp_gated: bool = True
     param_bytes: float = 0.0     # total weight bytes (computed if 0)
     dtype_bytes: int = 2
@@ -109,6 +110,11 @@ class SchedulerCfg:
     prefill_exclusive: bool = False
     decode_pad_to: int = 0
     bucket_prefill: bool = False
+    # tokens one decode step may verify/write (speculative decoding sets
+    # this to draft k + 1 so the KV ledger reserves the verification
+    # window and the token budget charges the real compute width; the
+    # step still *emits* a variable 1..k+1 tokens per the acceptance draw)
+    decode_tokens: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +144,29 @@ class MoECfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpecCfg:
+    """Speculative decoding (draft/verify) for one instance.
+
+    The simulator prices every spec step as draft-cost + verify-cost and
+    advances requests by accepted + 1 tokens drawn deterministically from
+    the named ``AcceptanceTrace`` (resolved through ``repro.spec``'s
+    registry at instance build time, like ``MoECfg.routing_trace``); the
+    real engine runs an actual draft model + batched target verification
+    (``ServingEngine(spec=...)``) and, when replaying the same trace,
+    reports identical ``metrics()["spec_decode"]``.
+    """
+    enabled: bool = False
+    k: int = 4                       # draft proposal length per step
+    # sim draft pricing model; None -> repro.spec.draft_model_spec scales
+    # the target down by ``draft_scale``
+    draft: Optional[ModelSpec] = None
+    draft_scale: float = 0.25
+    # named AcceptanceTrace — required for simulation (the sim has no
+    # draft/target pair to measure acceptance from)
+    acceptance_trace: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class InstanceCfg:
     name: str
     hw: HardwareSpec
@@ -147,6 +176,13 @@ class InstanceCfg:
     scheduler: SchedulerCfg = SchedulerCfg()
     prefix_cache: PrefixCacheCfg = PrefixCacheCfg()
     moe: MoECfg = MoECfg()
+    spec: SpecCfg = SpecCfg()
+    # memory-side accelerator spec for MoE expert offloading
+    # (``MoECfg.offload="pim"``): offloaded experts execute on this device
+    # in ``ExpertExecutionModel``.  None falls back to the ``PIM_DEVICE``
+    # preset when pim offload is configured, so the offload path always
+    # prices against a real spec.
+    pim: Optional[HardwareSpec] = None
     role: str = "unified"            # unified | prefill | decode
     kv_block_tokens: int = 16        # PagedAttention block size
     trace_name: Optional[str] = None  # perf-model trace to use

@@ -17,6 +17,16 @@ import numpy as np
 from repro.core.config import HardwareSpec, InstanceCfg, MoECfg, ModelSpec
 
 
+def expert_capacity(tokens: int, top_k: int, n_experts: int,
+                    capacity_factor: float) -> int:
+    """Per-expert capacity-buffer size — the single definition shared by
+    trace-driven pricing and the drop-rate metric, mirroring the real
+    dispatch in ``repro.models.moe.moe_ffn``
+    (``C = round(T * top_k * cf / E)``, floored at 1)."""
+    return int(max(1, round(tokens * top_k * capacity_factor
+                            / max(n_experts, 1))))
+
+
 def imbalance_factor(counts, ep: int = 1) -> float:
     """max-shard / mean-shard load with experts split over ``ep`` ranks.
 
@@ -94,13 +104,22 @@ class ExpertExecutionModel:
         self.moe = icfg.moe
 
     def layer_cost(self, tokens: int,
-                   counts: Optional[np.ndarray] = None) -> MoELayerCost:
+                   counts: Optional[np.ndarray] = None,
+                   capacity_factor: Optional[float] = None) -> MoELayerCost:
         """Cost of one MoE layer for ``tokens`` batch tokens.
 
         ``counts`` (per-expert token counts) overrides the statistical
         router — the trace-driven path: a replayed ``ExpertRoutingTrace``
         supplies the exact per-layer load, so imbalance, the active expert
         set, and offload fetch traffic are all priced from the trace.
+
+        ``capacity_factor`` (trace-driven path only) clamps each expert's
+        load at the standard top-k capacity ``C = round(tokens * top_k *
+        cf / E)``: overflow tokens are *dropped* by the real engine's
+        dispatch (they never reach the grouped GEMM), so a hot expert's
+        compute saturates at C instead of growing unboundedly with skew —
+        the drop rate itself is surfaced via
+        ``ExpertLoadTracker.metrics()["drop_rate"]``.
         """
         m = self.model
         hw = self.hw
@@ -109,6 +128,9 @@ class ExpertExecutionModel:
             counts = self.router.route(tokens)
         else:
             counts = np.asarray(counts, float)
+            if capacity_factor and tokens > 0:
+                counts = np.minimum(counts, expert_capacity(
+                    tokens, m.moe_top_k, m.moe_experts, capacity_factor))
         kappa = imbalance_factor(counts, ep)
         # compute: top_k experts' FFN on the hottest shard
         flops = 2 * 3 * m.d_model * m.moe_d_expert * counts.sum() / ep * kappa

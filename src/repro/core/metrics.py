@@ -23,12 +23,16 @@ def merge_expert_load(loads: List[Dict], timeline_len: int = 4096) -> Dict:
     tokens = 0
     merged = 0
     timeline = []
+    dropped = 0
+    routed = 0
     for load in loads:
         c = np.asarray(load["counts"])
         if c.shape != shape:
             continue
         counts += c
         tokens += int(load.get("tokens", 0))
+        dropped += int(load.get("dropped", 0))
+        routed += int(load.get("routed", 0))
         timeline.extend(load.get("hot_timeline", ()))
         merged += 1
     timeline = sorted(timeline, key=lambda e: e[0])[-timeline_len:]
@@ -45,6 +49,47 @@ def merge_expert_load(loads: List[Dict], timeline_len: int = 4096) -> Dict:
                                 for c in counts],
         "hot_expert": int(total.argmax()) if total.sum() else None,
         "hot_timeline": timeline,
+        "dropped": dropped,
+        "routed": routed,
+        "drop_rate": dropped / max(routed, 1),
+    }
+
+
+def merge_spec_decode(stats: List[Dict], timeline_len: int = 4096) -> Dict:
+    """Cluster-level speculative-decoding view: sum per-instance step /
+    proposal / acceptance counters, recompute the rates over the merged
+    totals, and interleave the bounded per-step timelines by time.
+    Instances speculating a different draft length cannot be summed; the
+    rollup anchors on the most common ``k`` and reports how many
+    instances merged (mirroring ``merge_expert_load``)."""
+    ks = [int(s["k"]) for s in stats]
+    k = max(set(ks), key=ks.count)
+    hist = np.zeros(k + 1, np.int64)
+    steps = proposed = accepted = 0
+    merged = 0
+    timeline = []
+    for s in stats:
+        if int(s["k"]) != k:
+            continue
+        steps += int(s["steps"])
+        proposed += int(s["proposed_tokens"])
+        accepted += int(s["accepted_tokens"])
+        hist += np.asarray(s["accepted_hist"], np.int64)
+        timeline.extend(s.get("step_timeline", ()))
+        merged += 1
+    timeline = sorted(timeline, key=lambda e: e[0])[-timeline_len:]
+    return {
+        "k": k,
+        "instances_merged": merged,
+        "steps": steps,
+        "proposed_tokens": proposed,
+        "accepted_tokens": accepted,
+        "emitted_tokens": accepted + steps,
+        "acceptance_rate": accepted / max(proposed, 1),
+        "mean_accepted_len": accepted / max(steps, 1),
+        "wasted_draft_tokens": proposed - accepted,
+        "accepted_hist": hist.tolist(),
+        "step_timeline": timeline,
     }
 
 

@@ -50,12 +50,15 @@ def _item_positions(it: BatchItem) -> np.ndarray:
     """KV positions of the tokens a batch item processes — the lookup key
     into an ``ExpertRoutingTrace``.  Follows the ``to_batch_items``
     convention: prefill work covers ``[start, start + tokens)``; a decode
-    item's single token lands at ``context - 2`` (its ``context`` is
-    ``context_len + 1`` and the new token's 0-based KV index is
-    ``context_len - 1``)."""
+    item's ``tokens`` consecutive slots end at ``context - 2`` (its
+    ``context`` is ``context_len + tokens`` and the first new token's
+    0-based KV index is ``context_len - 1``) — one token classically,
+    the k + 1 verification window under speculative decoding."""
     if it.phase == "prefill":
         return np.arange(it.start, it.start + it.tokens)
-    return np.full(max(it.tokens, 1), max(it.context - 2, 0))
+    n = max(it.tokens, 1)
+    first = max(it.context - n - 1, 0)
+    return first + np.arange(n)
 
 
 def batch_positions(items: List[BatchItem]) -> np.ndarray:
@@ -82,8 +85,15 @@ class PerfModel:
         self.routing = routing
         self.expert_model = expert_model
         if self.m.is_moe and expert_model is None:
+            # PIM offload prices against the instance's memory-side
+            # accelerator spec; the preset keeps offload="pim" from
+            # silently degenerating into a free no-op when unset
+            pim = cfg.pim
+            if pim is None and cfg.moe.offload == "pim":
+                from repro.core.config import PIM_DEVICE
+                pim = PIM_DEVICE
             self.expert_model = ExpertExecutionModel(
-                cfg, ExpertRouter(cfg.moe, self.m))
+                cfg, ExpertRouter(cfg.moe, self.m), pim=pim)
 
     # ---- analytical op costs (per layer-stack, per device) ----
     def _roof(self, flops: float, nbytes: float) -> float:
@@ -202,6 +212,11 @@ class PerfModel:
                 pos = batch_positions(items)
                 routing_counts = [self.routing.counts_for(l, pos)
                                   for l in range(self.routing.n_layers)]
+            # counts are priced unclamped: capacity overflow is surfaced
+            # as expert_load["drop_rate"] (a quality signal, dropped
+            # tokens emit no output), while latency keeps charging the
+            # full routed load — pass capacity_factor to ``layer_cost``
+            # explicitly to study capacity-saturated pricing instead
             per = [self.expert_model.layer_cost(T, counts=c).total
                    for c in routing_counts]
             return float(np.mean(per))

@@ -73,11 +73,11 @@ class HardwareRegistry:
                     f"key) — skipped")
                 continue
             schema = str(doc["schema"])
-            if schema.startswith("moetrace/"):
-                # expert-routing artifacts share traces/ by design
-                # (profile --experts emits them next to the hw trace):
-                # silently not ours, exactly as RoutingRegistry silently
-                # skips hwtrace files
+            if schema.startswith(("moetrace/", "spectrace/")):
+                # expert-routing / acceptance artifacts share traces/ by
+                # design (profile --experts/--spec emits them next to the
+                # hw trace): silently not ours, exactly as their own
+                # registries silently skip hwtrace files
                 continue
             if not schema.startswith("hwtrace/"):
                 warnings.warn(

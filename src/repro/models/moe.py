@@ -61,7 +61,10 @@ def moe_ffn(x, params, *, top_k: int, capacity_factor: float = 1.25,
             logits, positions=positions, layer=layer, top_k=top_k,
             valid=valid)
         expert_idx = expert_idx.astype(jnp.int32)
-    C = int(max(1, round(T * top_k * capacity_factor / E)))
+    # the one capacity definition shared with the simulator's pricing and
+    # the drop-rate metric (T is a static Python int under jit)
+    from repro.core.expert import expert_capacity
+    C = expert_capacity(T, top_k, E, capacity_factor)
 
     # --- dispatch: sort (token, k) pairs by expert --------------------------
     flat_e = expert_idx.reshape(-1)                    # (T*k,)

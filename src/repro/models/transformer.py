@@ -559,10 +559,10 @@ class Model:
         logits = self._head(params, x)
         return logits, new_cache
 
-    def extend(self, params, cache, tokens, n_new=None):
-        """Cached/chunked prefill: append up to S tokens (``n_new`` (B,)
-        real, rest padding) to a cache holding cache["lengths"] tokens per
-        sequence. Returns (last-real-token logits, cache)."""
+    def _extend_states(self, params, cache, tokens, n_new):
+        """Shared body of ``extend``/``verify``: append up to S tokens to
+        the cache and return the final-norm hidden states of every
+        position, ``(B, S, d)``, plus the new cache."""
         cfg = self.cfg
         x = self._embed(params, tokens)
         B, S = x.shape[:2]
@@ -579,9 +579,30 @@ class Model:
                 shared_attn=params.get("shared_attn"))
             new_cache[f"stage{i}"] = nc
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x, new_cache, n_new
+
+    def extend(self, params, cache, tokens, n_new=None):
+        """Cached/chunked prefill: append up to S tokens (``n_new`` (B,)
+        real, rest padding) to a cache holding cache["lengths"] tokens per
+        sequence. Returns (last-real-token logits, cache)."""
+        x, new_cache, n_new = self._extend_states(params, cache, tokens,
+                                                  n_new)
         idx = jnp.maximum(n_new - 1, 0)
-        x_last = x[jnp.arange(B), idx][:, None]
+        x_last = x[jnp.arange(x.shape[0]), idx][:, None]
         logits = self._head(params, x_last)
+        return logits, new_cache
+
+    def verify(self, params, cache, tokens, n_new=None):
+        """Speculative-decoding verification: ``extend`` the cache with up
+        to S tokens (the pending token + the draft's proposals) but return
+        logits at EVERY position — ``(B, S, Vpad)`` — so the caller can
+        compare each draft token against the target's greedy prediction
+        and pick the accepted prefix + bonus token.  KV for all S slots is
+        written; the caller rolls ``lengths`` back to the accepted prefix
+        (unaccepted rows are dead weight overwritten by the next write at
+        the same indices)."""
+        x, new_cache, _ = self._extend_states(params, cache, tokens, n_new)
+        logits = self._head(params, x)
         return logits, new_cache
 
     # ---- cache construction ----

@@ -260,11 +260,25 @@ class ExpertLoadTracker:
     """
 
     def __init__(self, trace: ExpertRoutingTrace, ep: int = 1,
-                 timeline_len: int = 4096):
+                 timeline_len: int = 4096,
+                 capacity_factor: Optional[float] = None):
         self.trace = trace
         self.ep = max(int(ep), 1)
+        self.capacity_factor = capacity_factor
         self.counts = np.zeros((trace.n_layers, trace.n_experts), np.int64)
         self.tokens = 0
+        # capacity-overflow accounting: routed (token, expert) entries
+        # exceeding the per-iteration expert capacity C = round(T *
+        # top_k * cf / E) at the iteration's *workload* token count —
+        # the one definition in ``repro.core.expert.expert_capacity``,
+        # computed identically on both backends, so the metric is
+        # backend-parity by construction.  It models what capacity-
+        # exact top-k dispatch drops for this workload; the real
+        # engine's jitted buffers compute C over the padded batch width
+        # instead, so its physical drop count can be lower when slots
+        # are padded (same formula, different T).
+        self.dropped = 0
+        self.routed = 0
         # (t, hot expert id, hot expert's share of this iteration's load)
         self.hot_timeline = deque(maxlen=timeline_len)
 
@@ -282,10 +296,20 @@ class ExpertLoadTracker:
         instead of recomputing the same bincounts per iteration."""
         if not tokens:
             return
+        cap = None
+        if self.capacity_factor:
+            from repro.core.expert import expert_capacity
+            cap = expert_capacity(int(tokens), self.trace.top_k,
+                                  self.trace.n_experts,
+                                  self.capacity_factor)
         iter_counts = np.zeros(self.trace.n_experts, np.int64)
         for l, c in enumerate(per_layer_counts):
             self.counts[l] += c
             iter_counts += c
+            if cap is not None:
+                self.dropped += int(np.maximum(
+                    np.asarray(c, np.int64) - cap, 0).sum())
+                self.routed += int(np.asarray(c, np.int64).sum())
         self.tokens += int(tokens)
         hot = int(iter_counts.argmax())
         self.hot_timeline.append(
@@ -303,4 +327,10 @@ class ExpertLoadTracker:
                                     for c in self.counts],
             "hot_expert": int(total.argmax()) if total.sum() else None,
             "hot_timeline": list(self.hot_timeline),
+            # capacity-overflow drops (0.0 when no capacity_factor set;
+            # "routed" is the denominator — (token, expert) entries that
+            # went through capacity-checked dispatch)
+            "dropped": int(self.dropped),
+            "routed": int(self.routed),
+            "drop_rate": self.dropped / max(self.routed, 1),
         }

@@ -40,6 +40,21 @@ MoE architectures have a second artifact: the expert-routing trace
   python -m repro.profiler profile --device cpu-engine \
       --arch granite-moe-1b-a400m-tiny --experts
 
+Speculative decoding has a third artifact: the acceptance trace
+(``repro.spec``, schema ``spectrace/1``), replayable on both backends:
+
+  # record real draft/target acceptance (greedy-lossless verification)
+  python -m repro.profiler record-acceptance --arch llama3.1-8b-tiny \
+      --k 4 --out traces/llama-tiny.acceptance.json
+
+  # or synthesize from a target per-token acceptance rate
+  python -m repro.profiler record-acceptance --arch llama3.1-8b-tiny \
+      --mode synthetic --alpha 0.7 --out traces/alpha07.json
+
+  # ride along with a hardware profile
+  python -m repro.profiler profile --device cpu-engine \
+      --arch llama3.1-8b-tiny --spec
+
 The operator-level profiler (raw ``Trace``, no artifact wrapper) remains as
 the ``ops`` subcommand; bare ``python -m repro.profiler --arch ...``
 invocations keep their legacy meaning (= ``ops``).
@@ -146,6 +161,11 @@ def _cmd_profile(args):
             else f"traces/{args.device}.routing.json"
         summary["routing_trace"] = _emit_routing(
             args, out=rout, synthetic=(mode != "measured"))
+    if args.spec is not None:
+        acc = args.spec if args.spec != "auto" \
+            else f"traces/{args.device}.acceptance.json"
+        summary["acceptance_trace"] = _emit_acceptance(
+            args, out=acc, synthetic=(mode != "measured"))
     print(json.dumps(summary, indent=1))
 
 
@@ -177,6 +197,48 @@ def _emit_routing(args, out: str, synthetic: bool) -> str:
     trace.save(out)
     RoutingRegistry().load_file(out)   # broken artifacts fail at emit time
     return out
+
+
+def _emit_acceptance(args, out: str, synthetic: bool) -> str:
+    """Shared by ``profile --spec`` and ``record-acceptance``: emit (and
+    round-trip check) one AcceptanceTrace artifact for ``args.arch``."""
+    from repro.spec import AcceptanceRegistry
+
+    k = getattr(args, "k", 4)
+    if synthetic:
+        from repro.workload.acceptance import (AcceptanceConfig,
+                                               synthesize_acceptance)
+        trace = synthesize_acceptance(
+            AcceptanceConfig(alpha=getattr(args, "alpha", 0.7), k=k,
+                             period=args.period,
+                             jitter=getattr(args, "jitter", 0.0),
+                             seed=args.seed),
+            model=args.arch)
+    else:
+        from repro.spec import record_acceptance
+        trace = record_acceptance(
+            args.arch, getattr(args, "draft_arch", None), k=k,
+            n_requests=getattr(args, "requests", 8),
+            max_batch=args.max_batch, max_len=args.max_len,
+            period=args.period, seed=args.seed,
+            draft_seed=getattr(args, "draft_seed", 1))
+    trace.save(out)
+    AcceptanceRegistry().load_file(out)  # broken artifacts fail at emit
+    return out
+
+
+def _cmd_record_acceptance(args):
+    out = _emit_acceptance(
+        args, out=args.out or f"traces/{args.arch}.acceptance.json",
+        synthetic=(args.mode == "synthetic"))
+    from repro.spec import AcceptanceTrace
+    trace = AcceptanceTrace.load(out)
+    print(json.dumps({"trace": out, "model": trace.model,
+                      "draft": trace.draft, "k": trace.k,
+                      "period": trace.period,
+                      "mean_accepted": trace.mean_accepted(),
+                      "acceptance_rate": trace.acceptance_rate(),
+                      **trace.meta}, indent=1))
 
 
 def _cmd_record_routing(args):
@@ -247,8 +309,17 @@ def main():
                         "measured mode, synthesized otherwise) to PATH "
                         "(default traces/<device>.routing.json)")
     p.add_argument("--period", type=int, default=256,
-                   help="routing-trace position-bucket length")
-    p.set_defaults(fn=_cmd_profile, requests=8)
+                   help="routing/acceptance-trace position-bucket length")
+    p.add_argument("--spec", nargs="?", const="auto", default=None,
+                   metavar="PATH",
+                   help="also emit an AcceptanceTrace artifact (recorded "
+                        "through a speculating engine in measured mode, "
+                        "synthesized otherwise) to PATH (default "
+                        "traces/<device>.acceptance.json)")
+    p.add_argument("--k", type=int, default=4,
+                   help="speculative draft length for --spec")
+    p.set_defaults(fn=_cmd_profile, requests=8, alpha=0.7, jitter=0.0,
+                   draft_arch=None, draft_seed=1)
 
     r = sub.add_parser(
         "record-routing",
@@ -276,6 +347,41 @@ def main():
     r.add_argument("--zipf-a", type=float, default=1.1,
                    help="synthetic mode: zipf exponent")
     r.set_defaults(fn=_cmd_record_routing)
+
+    a = sub.add_parser(
+        "record-acceptance",
+        help="emit an AcceptanceTrace artifact (repro.spec): record real "
+             "draft/target acceptance through a speculating engine, or "
+             "synthesize from a target acceptance rate")
+    a.add_argument("--arch", required=True,
+                   help="target architecture (e.g. llama3.1-8b-tiny)")
+    a.add_argument("--draft-arch", default=None,
+                   help="draft architecture (default: the target arch "
+                        "itself with a different parameter seed)")
+    a.add_argument("--mode", default="measured",
+                   choices=["measured", "synthetic"],
+                   help="measured: real draft proposals verified by the "
+                        "real target; synthetic: truncated-geometric "
+                        "distributions from --alpha")
+    a.add_argument("--out", default=None,
+                   help="output path (default "
+                        "traces/<arch>.acceptance.json)")
+    a.add_argument("--k", type=int, default=4,
+                   help="draft proposal length per spec step")
+    a.add_argument("--requests", type=int, default=8,
+                   help="workload size for measured recording")
+    a.add_argument("--max-batch", type=int, default=4)
+    a.add_argument("--max-len", type=int, default=256)
+    a.add_argument("--period", type=int, default=256,
+                   help="position-bucket count of the distributions")
+    a.add_argument("--seed", type=int, default=0)
+    a.add_argument("--draft-seed", type=int, default=1,
+                   help="measured mode: draft parameter seed")
+    a.add_argument("--alpha", type=float, default=0.7,
+                   help="synthetic mode: per-token target acceptance rate")
+    a.add_argument("--jitter", type=float, default=0.0,
+                   help="synthetic mode: per-bucket alpha perturbation")
+    a.set_defaults(fn=_cmd_record_acceptance)
 
     o = sub.add_parser(
         "ops", help="operator-level trace (raw Trace, legacy format)")

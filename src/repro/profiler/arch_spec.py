@@ -20,5 +20,6 @@ def model_spec_from_arch(cfg: ArchConfig) -> ModelSpec:
         moe_experts=moe.n_experts if moe else 0,
         moe_top_k=moe.top_k if moe else 0,
         moe_d_expert=moe.d_expert if moe else 0,
+        moe_capacity_factor=moe.capacity_factor if moe else 1.25,
         mlp_gated=cfg.mlp_gated,
         param_bytes=cfg.param_count() * 2)

@@ -60,6 +60,64 @@ class JaxBackend:
         # an error, not a fallback.
         from repro.moe import ExpertLoadTracker, resolve_routing
         self.routing = getattr(engine, "routing_trace", None)
+        # output-token capture: req_id -> emitted token ids, in order.
+        # Cheap, always on — it is what the greedy-losslessness suite
+        # compares (speculative vs vanilla emission, token-for-token).
+        self.out_tokens: Dict[int, List[int]] = {}
+        # speculative decoding: the engine carries the mechanism (draft
+        # engine + verify jit, ServingEngine(spec=...)); this backend
+        # orchestrates propose/verify/rollback per scheduled iteration
+        # and accounts metrics()["spec_decode"].  Mirrors the MoE rule:
+        # a cfg that names spec decoding the engine does not run (or a
+        # different acceptance trace than the engine replays) is a hard
+        # error, never silently-diverging accounting.
+        self.spec = getattr(engine, "spec", None)
+        self.spec_tracker = None
+        if getattr(cfg.spec, "enabled", False) \
+                or getattr(cfg.spec, "acceptance_trace", None):
+            if self.spec is None:
+                raise ValueError(
+                    f"instance {cfg.name!r} configures speculative "
+                    f"decoding but its engine has no draft; build it "
+                    f"with ServingEngine(spec=SpecDecodeCfg(...)) so the "
+                    f"scheduler's multi-token accounting matches what "
+                    f"actually executes")
+        if self.spec is not None:
+            from repro.spec import SpecDecodeTracker, resolve_acceptance
+            if cfg.spec.acceptance_trace:
+                named = resolve_acceptance(cfg)
+                if self.spec.acceptance is None:
+                    raise ValueError(
+                        f"instance {cfg.name!r} names acceptance_trace="
+                        f"{cfg.spec.acceptance_trace!r} but its engine "
+                        f"replays no trace; build it with ServingEngine("
+                        f"spec=SpecDecodeCfg(acceptance=<trace>)) so the "
+                        f"reported spec_decode is what actually ran")
+                if named is not self.spec.acceptance \
+                        and named.to_json() != self.spec.acceptance.to_json():
+                    raise ValueError(
+                        f"instance {cfg.name!r} names acceptance_trace="
+                        f"{cfg.spec.acceptance_trace!r} but its engine "
+                        f"replays a different trace; the accounting "
+                        f"table must be the one the engine draws from")
+            dt = cfg.scheduler.decode_tokens
+            if dt != self.spec.k + 1:
+                raise ValueError(
+                    f"instance {cfg.name!r} speculates k={self.spec.k} "
+                    f"but its scheduler reserves decode_tokens={dt}; set "
+                    f"SchedulerCfg(decode_tokens=k + 1) (engine_instance_"
+                    f"cfg does this automatically) so the KV ledger "
+                    f"covers the verification window")
+            self.spec_tracker = SpecDecodeTracker(self.spec.k)
+        # spec bookkeeping, all keyed by engine slot and tracked
+        # independently of the scheduler (that independence is what the
+        # sim/real parity suite tests): token history in target KV,
+        # draft KV length, emitted-token count
+        self._hist: Dict[int, List[int]] = {}
+        self._draft_len: Dict[int, int] = {}
+        self._emit: Dict[int, int] = {}
+        self._steps: Dict[int, int] = {}     # slot -> spec-step ordinal
+        self._emitted: Dict[int, int] = {}   # req_id -> last step's tokens
         if getattr(cfg.moe, "routing_trace", None):
             if self.routing is None:
                 raise ValueError(
@@ -76,7 +134,9 @@ class JaxBackend:
                     f"different trace ({self.routing.model!r}); the "
                     f"accounting table must be the one the model executes")
         self.expert_load = ExpertLoadTracker(
-            self.routing, ep=cfg.parallelism.ep) \
+            self.routing, ep=cfg.parallelism.ep,
+            capacity_factor=engine.cfg.moe.capacity_factor
+            if engine.cfg.moe is not None else None) \
             if self.routing is not None else None
         self._routed_pos: List[int] = []     # positions routed this iter
 
@@ -84,8 +144,11 @@ class JaxBackend:
     def prompt_cap(self, req: SimRequest) -> int:
         """Slot capacity: prompt + generated output + 1 must fit max_len.
         The runtime truncates the request on submit, so the scheduler's
-        chunk plan and the backend's KV state always agree."""
-        return max(self.eng.max_len - req.output_len - 1, 1)
+        chunk plan and the backend's KV state always agree.  Speculative
+        decoding additionally writes up to k draft rows past the accepted
+        context before rollback, so the window shrinks by k."""
+        extra = self.eng.spec.k if self.eng.spec is not None else 0
+        return max(self.eng.max_len - req.output_len - 1 - extra, 1)
 
     def _prompt(self, req: SimRequest) -> List[int]:
         toks = list(req.prompt_tokens)
@@ -129,6 +192,13 @@ class JaxBackend:
                 payload = eng._export_slot(0, blen)
                 eng._restore_slot(0, payload, blen)
             eng._release_slot(0)
+        if eng.spec is not None:
+            # draft prefill/decode buckets + the one verify shape
+            eng.draft.warmup()
+            vt = jnp.zeros((eng.max_batch, eng.spec.k + 1), jnp.int32)
+            n0 = jnp.zeros((eng.max_batch,), jnp.int32)
+            jax.block_until_ready(
+                eng._jit_verify(eng.params, eng.cache, vt, n0)[0])
 
     # ---- execution ----
     def execute(self, work: List[ScheduledWork], now: float) -> float:
@@ -137,7 +207,10 @@ class JaxBackend:
         decodes = [w for w in work if w.phase == "decode"]
         prefills = [w for w in work if w.phase == "prefill"]
         if decodes:
-            self._decode_step(decodes)
+            if self.eng.spec is not None:
+                self._spec_decode_step(decodes, now)
+            else:
+                self._decode_step(decodes)
         for w in prefills:
             self._prefill_chunk(w)
         jax.block_until_ready(self.eng.cache)
@@ -176,6 +249,8 @@ class JaxBackend:
         for w in decodes:
             slot = self._slot[w.request.req_id]
             eng._tokens_buf[slot, 0] = int(nxt[slot, 0])
+            self.out_tokens.setdefault(w.request.req_id, []).append(
+                int(nxt[slot, 0]))
             if self.expert_load is not None:
                 # the decode wrote this slot's token at KV index _len
                 self._routed_pos.append(self._len[slot])
@@ -202,6 +277,118 @@ class JaxBackend:
                 lengths[s] = n
             eng.cache["lengths"] = jnp.asarray(lengths)
 
+    def _spec_decode_step(self, decodes: List[ScheduledWork], now: float):
+        """One speculative iteration for the scheduled decode set: the
+        draft proposes k tokens per slot (k + 1 sequential full-buffer
+        draft decodes — the extra call consumes the last proposal so the
+        draft KV stays one-pending-token behind, exactly like the
+        target), the target verifies all proposals in one batched
+        ``verify`` (an extend returning every position's logits), and
+        each slot keeps the accepted prefix + the target's bonus token,
+        rolling both KV lengths back to the accepted context.
+
+        Acceptance is the true greedy match (lossless) unless the engine
+        replays an ``AcceptanceTrace``, in which case the decision is
+        forced from the trace's deterministic draw at this slot's emitted
+        position — the spec-decode analogue of forced MoE routing, and
+        what the sim/real parity suite pins.
+        """
+        import jax.numpy as jnp
+        from repro.serve.sampler import accept_length, greedy
+        eng = self.eng
+        dr = eng.draft
+        k = eng.spec.k
+        trace = eng.spec.acceptance
+        recorder = eng.spec.recorder
+
+        # 1. draft context sync: (re)build a slot's draft KV from the
+        # token history whenever it diverged (first spec step, preemption
+        # restart, P/D arrival) — one bucketed draft prefill per slot
+        for w in decodes:
+            slot = self._slot[w.request.req_id]
+            hist = self._hist[slot]
+            if self._draft_len.get(slot) != len(hist):
+                from repro.serve.engine import _bucket
+                P = _bucket(max(len(hist), 1))
+                pad = np.zeros((1, P), np.int32)
+                pad[0, :len(hist)] = np.asarray(hist, np.int32)
+                _, c1 = dr._jit_prefill(
+                    dr.params, jnp.asarray(pad),
+                    lengths=jnp.asarray([len(hist)], jnp.int32))
+                dr._write_slot_from_prefill(slot, c1, len(hist))
+                self._draft_len[slot] = len(hist)
+
+        # 2. propose: k + 1 sequential full-buffer draft decodes
+        cur = np.maximum(np.asarray(eng._tokens_buf), 0)
+        drafts = np.zeros((eng.max_batch, k), np.int32)
+        for j in range(k + 1):
+            dlogits, dr.cache = dr._jit_decode(dr.params, dr.cache,
+                                               jnp.asarray(cur))
+            cur = np.asarray(greedy(dlogits, eng.cfg.vocab))
+            if j < k:
+                drafts[:, j] = cur[:, 0]
+
+        # 3. batched target verification over [pending, d1..dk]
+        vt = np.concatenate(
+            [np.maximum(np.asarray(eng._tokens_buf), 0), drafts], axis=1)
+        n_new = np.zeros((eng.max_batch,), np.int32)
+        for w in decodes:
+            n_new[self._slot[w.request.req_id]] = k + 1
+        vlogits, eng.cache = eng._jit_verify(
+            eng.params, eng.cache, jnp.asarray(vt), jnp.asarray(n_new))
+        target = np.asarray(greedy(vlogits, eng.cfg.vocab))  # (B, k+1)
+        matched = accept_length(drafts, target)
+
+        # 4. acceptance + rollback per scheduled slot
+        for w in decodes:
+            req = w.request
+            slot = self._slot[req.req_id]
+            pos = self._emit[slot] - 1       # last emitted token's index
+            step = self._steps.get(slot, 0)
+            self._steps[slot] = step + 1
+            if trace is not None:
+                accepted = trace.accepted_for(pos, step)
+            else:
+                accepted = int(matched[slot])
+            if recorder is not None:
+                recorder.observe(pos, int(matched[slot]))
+            if self.spec_tracker is not None:
+                self.spec_tracker.observe(pos, accepted, now)
+            bonus = int(target[slot, accepted])
+            emitted = [int(t) for t in drafts[slot, :accepted]] + [bonus]
+            remaining = max(req.output_len - req.generated, 1)
+            emitted = emitted[:remaining]
+            t0 = int(eng._tokens_buf[slot, 0])
+            self._hist[slot].extend(
+                [t0] + [int(t) for t in drafts[slot, :accepted]])
+            self._len[slot] += 1 + accepted
+            self._draft_len[slot] += 1 + accepted
+            # truncation only happens on the request's final step (its
+            # slot is released before any further decode), so the bonus
+            # is always the correct next pending token
+            eng._tokens_buf[slot, 0] = bonus
+            self.out_tokens.setdefault(req.req_id, []).extend(emitted)
+            self._emit[slot] += len(emitted)
+            self._emitted[req.req_id] = len(emitted)
+
+        # 5. restore authoritative lengths on both caches: verify bumped
+        # scheduled slots to the full window; draft decodes bumped every
+        # row.  Unaccepted rows become dead weight overwritten by the
+        # next write at the same indices.
+        lengths = np.zeros((eng.max_batch,), np.int32)
+        for s, n in self._len.items():
+            lengths[s] = n
+        eng.cache["lengths"] = jnp.asarray(lengths)
+        dlen = np.zeros((eng.max_batch,), np.int32)
+        for s, n in self._draft_len.items():
+            dlen[s] = n
+        dr.cache["lengths"] = jnp.asarray(dlen)
+
+    def decode_emitted(self, req: SimRequest) -> int:
+        """Tokens the last decode step emitted for ``req`` (1 for vanilla
+        decode; accepted + 1 under speculative decoding)."""
+        return self._emitted.pop(req.req_id, 1)
+
     def _prefill_chunk(self, w: ScheduledWork):
         import jax.numpy as jnp
         from repro.serve.engine import _bucket
@@ -214,12 +401,15 @@ class JaxBackend:
             slot = eng.slot_free.pop()
             self._slot[req.req_id] = slot
             self._len[slot] = 0
+            self._hist[slot] = []
+            self._draft_len.pop(slot, None)
             restore = self._restore.pop(req.req_id, None)
             if restore is not None and req.cached_prefix > 0:
                 payload, length = restore
                 length = min(length, req.cached_prefix)
                 eng._restore_slot(slot, payload, length)
                 self._len[slot] = length
+                self._hist[slot] = list(toks[:length])
         start = self._len[slot]
         end = min(start + w.tokens, len(toks))
         chunk = toks[start:end]
@@ -242,10 +432,13 @@ class JaxBackend:
                 # the chunk's tokens occupy KV positions [start, start+n)
                 self._routed_pos.extend(range(start, start + len(chunk)))
             self._len[slot] = start + len(chunk)
+            self._hist[slot].extend(int(t) for t in chunk)
         if self._len[slot] >= len(toks) and logits is not None:
             # prompt complete: the last chunk's logits give the first token
             first = int(np.asarray(greedy(logits, eng.cfg.vocab))[0, 0])
             eng._tokens_buf[slot, 0] = first
+            self.out_tokens.setdefault(req.req_id, []).append(first)
+            self._emit[slot] = 1
 
     # ---- prefix cache payloads ----
     def on_prefix_hit(self, req: SimRequest, match: MatchResult,
@@ -275,6 +468,9 @@ class JaxBackend:
 
     def on_preempt(self, req: SimRequest) -> int:
         self.release(req)
+        # the restart regenerates the whole output from scratch — drop the
+        # partial capture or out_tokens would hold it twice over
+        self.out_tokens.pop(req.req_id, None)
         # re-match the store so the restart restores whatever KV survives
         return self.on_prefix_hit(req, None, req.cached_prefix) \
             if req.cached_prefix > 0 else 0
@@ -282,9 +478,14 @@ class JaxBackend:
     def release(self, req: SimRequest):
         slot = self._slot.pop(req.req_id, None)
         self._restore.pop(req.req_id, None)
+        self._emitted.pop(req.req_id, None)
         if slot is None:
             return
         self._len.pop(slot, None)
+        self._hist.pop(slot, None)
+        self._draft_len.pop(slot, None)
+        self._emit.pop(slot, None)
+        self._steps.pop(slot, None)
         self.eng._release_slot(slot)
 
     # ---- P/D handoff ----
@@ -312,6 +513,12 @@ class JaxBackend:
         self.eng._restore_slot(slot, p["kv"], p["len"])
         self.eng._tokens_buf[slot, 0] = p["first"]
         self._len[slot] = p["len"]
+        # spec bookkeeping: the transferred KV holds exactly the (possibly
+        # truncated) prompt; the pending first token is the 1 emitted
+        self._hist[slot] = list(self._prompt(req))[:p["len"]]
+        self._draft_len.pop(slot, None)
+        self._emit[slot] = 1
+        self.out_tokens.setdefault(req.req_id, []).append(p["first"])
 
     # ---- lifecycle ----
     def reset(self):
@@ -321,8 +528,16 @@ class JaxBackend:
         self._len.clear()
         self._restore.clear()
         self._routed_pos = []
+        self._hist.clear()
+        self._draft_len.clear()
+        self._emit.clear()
+        self._steps.clear()
+        self._emitted.clear()
         eng.slot_free = list(range(eng.max_batch))
         eng.cache["lengths"] = jnp.zeros((eng.max_batch,), jnp.int32)
+        if eng.spec is not None:
+            eng.draft.cache["lengths"] = jnp.zeros((eng.max_batch,),
+                                                   jnp.int32)
 
     def stats(self) -> dict:
         s = {"engine_iterations": self._iterations}
@@ -331,6 +546,8 @@ class JaxBackend:
             s["kv_store_misses"] = self.eng.radix.misses
         if self.expert_load is not None:
             s["expert_load"] = self.expert_load.metrics()
+        if self.spec_tracker is not None:
+            s["spec_decode"] = self.spec_tracker.metrics()
         return s
 
 

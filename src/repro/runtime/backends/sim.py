@@ -11,7 +11,7 @@ from typing import List, Optional
 
 from repro.core.config import InstanceCfg
 from repro.core.memory import MemoryModel
-from repro.core.perfmodel import PerfModel, batch_positions
+from repro.core.perfmodel import BatchItem, PerfModel, batch_positions
 from repro.core.request import SimRequest
 from repro.core.trace import Trace
 from repro.runtime.backend import KvHandoff
@@ -33,9 +33,55 @@ class SimBackend:
         from repro.moe import ExpertLoadTracker, resolve_routing
         self.routing = resolve_routing(cfg)
         self.expert_load = ExpertLoadTracker(
-            self.routing, ep=cfg.parallelism.ep) \
+            self.routing, ep=cfg.parallelism.ep,
+            capacity_factor=cfg.model.moe_capacity_factor) \
             if self.routing is not None else None
         self.perf = PerfModel(cfg, trace=trace, routing=self.routing)
+        # speculative decoding (SpecCfg): every decode step becomes a
+        # draft-propose + target-verify pair priced below, advancing the
+        # request by accepted + 1 tokens drawn deterministically from the
+        # named AcceptanceTrace (repro.spec — lazily imported, same
+        # layering rule as repro.moe above).
+        self.spec = cfg.spec if getattr(cfg.spec, "enabled", False) else None
+        self.spec_trace = None
+        self.spec_tracker = None
+        self.draft_perf = None
+        self._emitted = {}       # req_id -> tokens emitted by the last step
+        self._spec_steps = {}    # req_id -> spec-step ordinal (quantile key)
+        if self.spec is not None:
+            import dataclasses
+
+            from repro.spec import (SpecDecodeTracker, draft_model_spec,
+                                    resolve_acceptance)
+            if self.routing is not None:
+                raise ValueError(
+                    f"instance {cfg.name!r} enables both a routing trace "
+                    f"and speculative decoding — the combination is not "
+                    f"supported (positions of draft tokens that fail "
+                    f"verification have no expert-load semantics)")
+            self.spec_trace = resolve_acceptance(cfg)
+            if self.spec_trace is None:
+                raise ValueError(
+                    f"instance {cfg.name!r} enables speculative decoding "
+                    f"but names no acceptance_trace; the simulator draws "
+                    f"accepted lengths from the trace — record one with "
+                    f"`python -m repro.profiler record-acceptance` or "
+                    f"synthesize one with repro.workload.acceptance")
+            if cfg.scheduler.decode_tokens != self.spec.k + 1:
+                raise ValueError(
+                    f"instance {cfg.name!r} speculates k={self.spec.k} "
+                    f"but its scheduler reserves decode_tokens="
+                    f"{cfg.scheduler.decode_tokens}; set SchedulerCfg("
+                    f"decode_tokens=k + 1) so the KV ledger covers the "
+                    f"verification window")
+            self.spec_tracker = SpecDecodeTracker(self.spec.k)
+            draft = self.spec.draft or draft_model_spec(
+                cfg.model, self.spec.draft_scale)
+            self.draft_perf = PerfModel(
+                dataclasses.replace(cfg, model=draft,
+                                    spec=dataclasses.replace(
+                                        cfg.spec, enabled=False)),
+                trace=None)
         # prefix-cache restore / tier-fetch latency charged to the next
         # iteration (the request that hit pays for its own fetch)
         self._pending_fetch_s = 0.0
@@ -56,7 +102,6 @@ class SimBackend:
         matching phase so a prefill-fast device is rated by its prefill
         grid, not a blend it will never run."""
         if None not in self._tput_hint:
-            from repro.core.perfmodel import BatchItem
             pre = self.perf.iteration_latency(
                 [BatchItem(tokens=256, context=256, phase="prefill")])
             dec = self.perf.iteration_latency(
@@ -71,6 +116,12 @@ class SimBackend:
         return self._tput_hint.get(phase, self._tput_hint[None])
 
     def execute(self, work: List[ScheduledWork], now: float) -> float:
+        spec_s = 0.0
+        if self.spec is not None:
+            decodes = [w for w in work if w.phase == "decode"]
+            if decodes:
+                spec_s = self._spec_step(decodes, now)
+            work = [w for w in work if w.phase != "decode"]
         items = to_batch_items(work)
         counts = n_tokens = None
         if self.routing is not None:
@@ -83,11 +134,53 @@ class SimBackend:
             counts = [self.routing.counts_for(l, pos)
                       for l in range(self.routing.n_layers)]
         cost = self.perf.iteration_latency(items, routing_counts=counts)
-        latency = cost.total_s + self._pending_fetch_s
+        latency = cost.total_s + spec_s + self._pending_fetch_s
         self._pending_fetch_s = 0.0
         if self.expert_load is not None:
             self.expert_load.observe_counts(counts, n_tokens, now)
         return latency
+
+    def _spec_step(self, decodes: List[ScheduledWork], now: float) -> float:
+        """Price one speculative decode step for the scheduled decode set
+        and draw each request's accepted length from the trace.
+
+        Cost model mirrors what the real engine executes: ``k + 1``
+        sequential draft decode iterations (propose d1..dk, then consume
+        dk so the draft KV stays in sync) plus one batched target
+        verification — an ``extend`` over the pending token + k drafts,
+        priced through the measured extend grid when the hardware trace
+        has one.  Acceptance does not change the step's cost, only its
+        progress: that asymmetry is exactly the wasted-compute crossover
+        ``benchmarks/spec_decode_sweep.py`` sweeps.
+        """
+        k = self.spec.k
+        verify_items = []
+        draft_items = []
+        for w in decodes:
+            ctx = w.request.context_len
+            verify_items.append(BatchItem(
+                tokens=k + 1, context=ctx + k, phase="prefill",
+                start=max(ctx - 1, 0), completes=False))
+            draft_items.append(BatchItem(
+                tokens=1, context=ctx + 1, phase="decode"))
+        latency = self.perf.iteration_latency(verify_items).total_s \
+            + (k + 1) * self.draft_perf.iteration_latency(
+                draft_items).total_s
+        for w in decodes:
+            req = w.request
+            pos = max(req.generated - 1, 0)
+            step = self._spec_steps.get(req.req_id, 0)
+            self._spec_steps[req.req_id] = step + 1
+            accepted = self.spec_trace.accepted_for(pos, step)
+            self._emitted[req.req_id] = max(
+                1, min(accepted + 1, req.output_len - req.generated))
+            self.spec_tracker.observe(pos, accepted, now)
+        return latency
+
+    def decode_emitted(self, req: SimRequest) -> int:
+        """Tokens the last decode step emitted for ``req`` (1 without
+        speculative decoding; accepted + 1 with it)."""
+        return self._emitted.pop(req.req_id, 1)
 
     def on_prefix_hit(self, req: SimRequest, match: MatchResult,
                       usable: int) -> int:
@@ -105,10 +198,16 @@ class SimBackend:
         pass     # insert cost is modeled inside the perf trace (kv_export)
 
     def on_preempt(self, req: SimRequest) -> int:
+        # a preempted request restarts its decode from scratch, so its
+        # spec-step ordinal restarts too (the real backend's counter is
+        # slot-scoped and resets the same way on release)
+        self._spec_steps.pop(req.req_id, None)
+        self._emitted.pop(req.req_id, None)
         return req.cached_prefix   # simulated KV prefix stays restorable
 
     def release(self, req: SimRequest):
-        pass
+        self._spec_steps.pop(req.req_id, None)
+        self._emitted.pop(req.req_id, None)
 
     def export_kv(self, req: SimRequest) -> KvHandoff:
         return KvHandoff(
@@ -118,9 +217,13 @@ class SimBackend:
         pass
 
     def reset(self):
-        pass
+        self._emitted.clear()
+        self._spec_steps.clear()
 
     def stats(self) -> dict:
+        s = {}
         if self.expert_load is not None:
-            return {"expert_load": self.expert_load.metrics()}
-        return {}
+            s["expert_load"] = self.expert_load.metrics()
+        if self.spec_tracker is not None:
+            s["spec_decode"] = self.spec_tracker.metrics()
+        return s

@@ -19,7 +19,8 @@ from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 
 from repro.core.config import ClusterCfg, InstanceCfg
 from repro.core.engine import EventQueue
-from repro.core.metrics import aggregate, merge_expert_load
+from repro.core.metrics import (aggregate, merge_expert_load,
+                                merge_spec_decode)
 from repro.core.network import NetworkModel
 from repro.core.request import QUEUED, SimRequest
 from repro.core.trace import Trace, TraceRegistry
@@ -210,4 +211,10 @@ class ServingRuntime:
                  if "expert_load" in s]
         if loads:
             m["expert_load"] = merge_expert_load(loads)
+        # trace-driven speculative decoding: same rollup shape (per-
+        # instance detail stays under instances[<name>]["spec_decode"])
+        specs = [s["spec_decode"] for s in m["instances"].values()
+                 if "spec_decode" in s]
+        if specs:
+            m["spec_decode"] = merge_spec_decode(specs)
         return m

@@ -133,8 +133,18 @@ class RuntimeInstance:
                 if req.remaining_prefill == 0:
                     self._prefill_complete(req)
             else:
-                req.generated += 1
-                req.token_times.append(now)
+                # a decode step emits 1 token classically; a speculative
+                # step emits accepted + 1 (backends report the count —
+                # the trace draw in sim, the verification outcome for the
+                # real engine), capped at the request's output budget
+                emitted = 1
+                fn = getattr(self.backend, "decode_emitted", None)
+                if fn is not None:
+                    emitted = fn(req)
+                emitted = max(1, min(emitted,
+                                     req.output_len - req.generated))
+                req.generated += emitted
+                req.token_times.extend([now] * emitted)
                 if req.t_first_token is None:
                     req.t_first_token = now
                 if req.generated >= req.output_len:

@@ -168,9 +168,13 @@ class BatchScheduler:
         self.n_preemptions += 1
 
     def _ensure_decode_capacity(self, req: SimRequest, protected) -> bool:
-        """Grow the reservation for the next decode token; preempt (others
-        first, then ``req`` itself) under memory pressure."""
-        need = self._tokens_held(req) + 1
+        """Grow the reservation for the next decode step; preempt (others
+        first, then ``req`` itself) under memory pressure.  A step writes
+        up to ``decode_tokens`` KV entries (1 classically; the k-draft +
+        bonus verification window under speculative decoding), so the
+        ledger reserves the full window even though acceptance may emit
+        fewer — the backend really writes that many rows before rollback."""
+        need = self._tokens_held(req) + max(self.cfg.decode_tokens, 1)
         while not self._reserve_tokens(req, need):
             if self._preempt_one(protected=protected) is None:
                 self._preempt(req)
@@ -184,6 +188,7 @@ class BatchScheduler:
         work: List[ScheduledWork] = []
         scheduled: List[SimRequest] = []   # never preempt these: their work
         tokens_left = cfg.max_batch_tokens  # items execute this iteration
+        dt = max(cfg.decode_tokens, 1)     # decode step width (spec: k + 1)
 
         # 1. decode steps for all running decode-phase requests
         for req in list(self.running):
@@ -191,9 +196,9 @@ class BatchScheduler:
                 if not self._ensure_decode_capacity(
                         req, protected=scheduled + [req]):
                     continue
-                work.append(ScheduledWork(req, 1, "decode"))
+                work.append(ScheduledWork(req, dt, "decode"))
                 scheduled.append(req)
-                tokens_left -= 1
+                tokens_left -= dt
 
         # 2. continue chunked prefills already running
         for req in list(self.running):
@@ -237,9 +242,9 @@ class BatchScheduler:
             elif req.remaining_prefill == 0:
                 # fully prefix-cached prompt: go straight to decode
                 req.state = DECODING
-                work.append(ScheduledWork(req, 1, "decode"))
+                work.append(ScheduledWork(req, dt, "decode"))
                 scheduled.append(req)
-                tokens_left -= 1
+                tokens_left -= dt
         return work
 
     def _next_batch_exclusive(self) -> List[ScheduledWork]:
@@ -256,10 +261,11 @@ class BatchScheduler:
                     return [ScheduledWork(req, n, "prefill")]
                 req.state = DECODING
         work = []
+        dt = max(cfg.decode_tokens, 1)
         for req in list(self.running):
             if req.state == DECODING and self._ensure_decode_capacity(
                     req, protected=[w.request for w in work] + [req]):
-                work.append(ScheduledWork(req, 1, "decode"))
+                work.append(ScheduledWork(req, dt, "decode"))
         return work
 
     def admit_remote(self, req: SimRequest, force: bool = False) -> bool:
@@ -306,11 +312,12 @@ class BatchScheduler:
 
 
 def to_batch_items(work: List[ScheduledWork]) -> List[BatchItem]:
-    """PerfModel view of scheduled work (shared by scheduler + SimBackend)."""
+    """PerfModel view of scheduled work (shared by scheduler + SimBackend).
+    A decode step's context covers its full verification window
+    (``context_len + tokens``; tokens is 1 classically, draft k + 1 under
+    speculative decoding)."""
     return [BatchItem(tokens=w.tokens,
-                      context=w.request.context_len + w.tokens
-                      if w.phase == "prefill"
-                      else w.request.context_len + 1,
+                      context=w.request.context_len + w.tokens,
                       phase=w.phase,
                       start=(w.request.cached_prefix
                              + w.request.prefill_done_tokens)

@@ -1,6 +1,7 @@
 from repro.serve.driver import DriverCfg, ServeDriver
-from repro.serve.engine import RealRadixCache, ServingEngine
-from repro.serve.sampler import greedy, temperature
+from repro.serve.engine import RealRadixCache, ServingEngine, SpecDecodeCfg
+from repro.serve.sampler import accept_length, greedy, temperature
 
 __all__ = ["DriverCfg", "ServeDriver", "RealRadixCache",
-           "ServingEngine", "greedy", "temperature"]
+           "ServingEngine", "SpecDecodeCfg", "accept_length", "greedy",
+           "temperature"]

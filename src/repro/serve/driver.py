@@ -31,24 +31,35 @@ from repro.workload.sharegpt import Request
 def engine_instance_cfg(engine: ServingEngine,
                         scheduler: Optional[SchedulerCfg] = None,
                         trace_name: Optional[str] = None,
-                        moe=None) -> InstanceCfg:
+                        moe=None, spec=None) -> InstanceCfg:
     """Runtime InstanceCfg mirroring a live ``ServingEngine``.
 
     ``moe`` (a ``repro.core.MoECfg``) lets the simulated twin of a MoE
-    engine name the same ``routing_trace`` the engine replays, so
-    sim-vs-real comparisons report comparable ``expert_load`` metrics.
+    engine name the same ``routing_trace`` the engine replays, and
+    ``spec`` (a ``repro.core.SpecCfg``) the same ``acceptance_trace`` a
+    speculating engine replays, so sim-vs-real comparisons report
+    comparable ``expert_load`` / ``spec_decode`` metrics.  A speculating
+    engine always mirrors its draft length into the scheduler
+    (``decode_tokens = k + 1``) so the KV ledger reserves the real
+    verification window.
     """
-    from repro.core.config import MoECfg
+    from repro.core.config import MoECfg, SpecCfg
     from repro.profiler import model_spec_from_arch
-    spec = model_spec_from_arch(engine.cfg)
+    model = model_spec_from_arch(engine.cfg)
     scheduler = scheduler or engine_scheduler_cfg(engine.max_batch)
     if scheduler.max_batch_size > engine.max_batch:
         # the engine's slot count is a physical limit; an oversized batch
         # would crash slot allocation mid-run
         scheduler = dataclasses.replace(scheduler,
                                         max_batch_size=engine.max_batch)
+    if spec is None and engine.spec is not None:
+        spec = SpecCfg(enabled=True, k=engine.spec.k,
+                       draft=model_spec_from_arch(engine.spec.draft))
+    if engine.spec is not None:
+        scheduler = dataclasses.replace(scheduler,
+                                        decode_tokens=engine.spec.k + 1)
     return InstanceCfg(
-        name=engine.name, hw=ENGINE_HW, model=spec,
+        name=engine.name, hw=ENGINE_HW, model=model,
         n_devices=engine.tp, role=engine.role,
         parallelism=ParallelismCfg(tp=engine.tp),
         scheduler=scheduler,
@@ -57,6 +68,7 @@ def engine_instance_cfg(engine: ServingEngine,
             block_tokens=engine.radix.block if engine.radix else 16,
             capacity_fraction=0.5),
         moe=moe if moe is not None else MoECfg(),
+        spec=spec if spec is not None else SpecCfg(),
         trace_name=trace_name)
 
 

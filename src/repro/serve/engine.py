@@ -21,8 +21,9 @@ as if instances ran in parallel even though this container has one CPU.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +31,31 @@ import numpy as np
 
 from repro.configs import ArchConfig
 from repro.models import Model
+
+
+@dataclasses.dataclass
+class SpecDecodeCfg:
+    """Speculative decoding for a real engine: draft model + verification.
+
+    ``draft`` is the proposer's architecture (its own params, its own slot
+    KV cache — built as a nested mechanism-only ``ServingEngine``); the
+    target verifies all ``k`` proposals in one batched ``verify`` call
+    (an ``extend`` that returns every position's logits).  With
+    ``acceptance`` unset the engine is **greedy-lossless**: the emitted
+    sequence equals vanilla greedy decode token-for-token (accepted
+    prefix + the target's own bonus/correction token).  With an
+    ``AcceptanceTrace`` attached, the acceptance *decision* is replayed
+    from the trace instead (the spec-decode analogue of forced MoE
+    routing) so sim/real parity can be pinned; ``recorder`` taps
+    (position, accepted) pairs for artifact capture
+    (``repro.spec.record``).
+    """
+    draft: ArchConfig
+    k: int = 4
+    acceptance: Optional[Any] = None      # repro.spec.AcceptanceTrace
+    draft_seed: int = 1
+    draft_params: Optional[Any] = None
+    recorder: Optional[Any] = None        # repro.spec.AcceptanceRecorder
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -99,7 +125,8 @@ class ServingEngine:
     def __init__(self, cfg: ArchConfig, params=None, *, max_batch: int = 8,
                  max_len: int = 512, prefix_cache: bool = False,
                  role: str = "unified", name: str = "engine0", seed: int = 0,
-                 tp: int = 1, routing=None):
+                 tp: int = 1, routing=None, spec: Optional[SpecDecodeCfg]
+                 = None):
         self.cfg = cfg
         self.name = name
         self.role = role
@@ -143,6 +170,34 @@ class ServingEngine:
                                     static_argnames=())
         self._jit_extend = jax.jit(self.model.extend)
         self._tokens_buf = np.zeros((max_batch, 1), np.int32)
+        # speculative decoding: a nested mechanism-only draft engine
+        # (same slot geometry, so draft slot i mirrors target slot i) and
+        # the target-side batched verification jit.  The draft engine is
+        # plain (tp=1, no prefix cache, no spec of its own); JaxBackend
+        # orchestrates the propose/verify/rollback steps.
+        self.spec = spec
+        self.draft = None
+        self._jit_verify = None
+        if spec is not None:
+            if routing is not None:
+                raise ValueError(
+                    "speculative decoding and trace-driven MoE routing "
+                    "cannot be combined on one engine (draft tokens that "
+                    "fail verification have no expert-load semantics)")
+            if spec.k < 1:
+                raise ValueError(f"spec.k must be >= 1, got {spec.k}")
+            if spec.draft.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft {spec.draft.name!r} has vocab "
+                    f"{spec.draft.vocab} but target {cfg.name!r} has "
+                    f"{cfg.vocab}; draft/target token ids must line up")
+            if spec.acceptance is not None:
+                spec.acceptance.validate().check_k(spec.k)
+            self.draft = ServingEngine(
+                spec.draft, params=spec.draft_params, max_batch=max_batch,
+                max_len=max_len, name=f"{name}.draft",
+                seed=spec.draft_seed)
+            self._jit_verify = jax.jit(self.model.verify)
 
     def _shard_over_mesh(self):
         """Lay params + slot cache out over the (data=1, model=tp) mesh.

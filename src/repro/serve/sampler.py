@@ -3,13 +3,26 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def greedy(logits, vocab: int):
-    """logits: (B, 1, Vpad) (or (B,1,K,Vpad) multi-codebook -> first book)."""
+    """logits: (B, S, Vpad) (or (B,S,K,Vpad) multi-codebook -> first book).
+    S is 1 for classic decode and k + 1 for speculative verification —
+    the argmax is per position either way, returning (B, S) int32."""
     if logits.ndim == 4:
         logits = logits[:, :, 0]
     return jnp.argmax(logits[..., :vocab], axis=-1).astype(jnp.int32)
+
+
+def accept_length(draft_tokens, target_tokens) -> np.ndarray:
+    """Per-row count of leading draft tokens the target's greedy
+    verification confirms: ``draft`` (B, k) vs ``target`` (B, >= k) —
+    target position i is the greedy prediction after consuming draft
+    token i's prefix.  Returns (B,) ints in [0, k]."""
+    d = np.asarray(draft_tokens)
+    t = np.asarray(target_tokens)[:, :d.shape[1]]
+    return np.cumprod(d == t, axis=1).sum(axis=1).astype(np.int64)
 
 
 def temperature(logits, vocab: int, key, temp: float = 1.0):

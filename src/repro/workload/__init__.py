@@ -3,7 +3,9 @@ from repro.workload.sharegpt import Request, ShareGPTConfig, generate, stats
 from repro.workload.datasets import DataConfig, token_batches
 from repro.workload.expert_skew import (SkewConfig, routing_for_model,
                                         synthesize_routing)
+from repro.workload.acceptance import AcceptanceConfig, synthesize_acceptance
 
 __all__ = ["gamma", "poisson", "uniform", "Request", "ShareGPTConfig",
            "generate", "stats", "DataConfig", "token_batches",
-           "SkewConfig", "synthesize_routing", "routing_for_model"]
+           "SkewConfig", "synthesize_routing", "routing_for_model",
+           "AcceptanceConfig", "synthesize_acceptance"]

@@ -93,6 +93,11 @@ def test_sim_real_expert_load_parity_chunked():
     assert r["per_layer_imbalance"] == pytest.approx(
         s["per_layer_imbalance"])
     assert r["hot_expert"] == s["hot_expert"]
+    # capacity-drop accounting is derived from the same counts + the one
+    # shared expert_capacity definition on both backends
+    assert r["dropped"] == s["dropped"]
+    assert r["routed"] == s["routed"] > 0
+    assert r["drop_rate"] == s["drop_rate"]
     # the replayed zipf skew is actually visible in the counts
     total = np.asarray(s["counts"]).sum(axis=0)
     assert total.max() > 1.5 * total.min()
@@ -351,6 +356,66 @@ def test_registry_resolution_and_model_check(tmp_path):
     with warnings.catch_warnings():
         warnings.simplefilter("error")
         assert HardwareRegistry().load_dir(str(tmp_path)) == []
+
+
+def test_capacity_drop_rate_binds_under_skew():
+    """When capacity_factor binds, overflow entries register as drops —
+    a hot trace drops, a uniform one (at the same capacity) does not,
+    and the tracker's capacity matches the real dispatch's
+    (``repro.core.expert.expert_capacity``)."""
+    from repro.core.expert import expert_capacity
+    from repro.moe import ExpertLoadTracker
+
+    hot = synthesize_routing(2, 4, 2, SkewConfig(kind="zipf", zipf_a=3.0,
+                                                 period=64, seed=1))
+    uni = synthesize_routing(2, 4, 2, SkewConfig(kind="uniform",
+                                                 period=64, seed=1))
+    pos = np.arange(64)
+    for trace, expect_drops in ((hot, True), (uni, False)):
+        tr = ExpertLoadTracker(trace, capacity_factor=1.25)
+        tr.observe(pos, now=0.0)
+        m = tr.metrics()
+        cap = expert_capacity(64, 2, 4, 1.25)
+        want = sum(int(np.maximum(trace.counts_for(l, pos) - cap, 0).sum())
+                   for l in range(2))
+        assert m["dropped"] == want
+        assert (m["drop_rate"] > 0) == expect_drops
+        assert m["routed"] == 64 * 2 * 2
+    # without a capacity factor the metric reports zero, not garbage
+    tr = ExpertLoadTracker(hot)
+    tr.observe(pos, now=0.0)
+    assert tr.metrics()["drop_rate"] == 0.0
+
+
+def test_pim_offload_prices_nontrivially():
+    """InstanceCfg.pim (or the PIM_DEVICE fallback) makes offload="pim"
+    change pricing — the historical spec-less default silently priced it
+    identically to no offload."""
+    from repro.core.config import PIM_DEVICE
+    model = ModelSpec(name="m", n_layers=4, d_model=1536, n_heads=24,
+                      n_kv_heads=8, d_head=64, d_ff=512, vocab=32000,
+                      moe_experts=40, moe_top_k=8, moe_d_expert=512)
+    items = [BatchItem(tokens=2048, context=2048, phase="prefill")]
+
+    def price(moe, pim=None):
+        icfg = InstanceCfg(name="i0", hw=TPU_V5E, model=model,
+                           parallelism=ParallelismCfg(tp=8, ep=8),
+                           moe=moe, pim=pim)
+        return PerfModel(icfg).iteration_latency(items).total_s
+
+    base = price(MoECfg())
+    pim_default = price(MoECfg(offload="pim", offload_fraction=0.75,
+                               prefetch=True))
+    pim_named = price(MoECfg(offload="pim", offload_fraction=0.75,
+                             prefetch=True), pim=PIM_DEVICE)
+    assert pim_default != base
+    assert pim_default == pim_named        # fallback == explicit preset
+    # a slower memory-side device prices offload slower
+    import dataclasses as dc
+    slow = dc.replace(PIM_DEVICE, peak_flops=PIM_DEVICE.peak_flops / 16,
+                      hbm_bw=PIM_DEVICE.hbm_bw / 16, name="slow-pim")
+    assert price(MoECfg(offload="pim", offload_fraction=0.75,
+                        prefetch=True), pim=slow) > pim_named
 
 
 # --------------------------------------------------------------------------

@@ -16,6 +16,7 @@ from repro.core.prefix_cache import RadixPrefixCache
 from repro.core.trace import Trace
 from repro.roofline.hlo_analyzer import _type_bytes_and_dims
 from repro.train.optimizer import AdamW, global_norm
+from repro.workload.acceptance import AcceptanceConfig, synthesize_acceptance
 from repro.workload.expert_skew import SkewConfig, synthesize_routing
 
 MODEL = ModelSpec(name="m", n_layers=4, d_model=256, n_heads=4,
@@ -153,6 +154,48 @@ def test_skew_fixed_seed_identical_trace_bytes(kind, seed):
     a = synthesize_routing(2, 8, 2, cfg, model="m")
     b = synthesize_routing(2, 8, 2, cfg, model="m")
     assert a.to_json() == b.to_json()
+
+
+# --- acceptance generators: bounds, determinism, monotone alpha -------------
+@given(st.floats(0.0, 1.0), st.integers(1, 8), st.integers(1, 64),
+       st.floats(0.0, 0.3), st.integers(0, 2 ** 16))
+@settings(max_examples=40, deadline=None)
+def test_acceptance_draws_bounded(alpha, k, period, jitter, seed):
+    t = synthesize_acceptance(AcceptanceConfig(alpha=alpha, k=k,
+                                               period=period,
+                                               jitter=jitter, seed=seed))
+    draws = [t.accepted_for(p, s) for p in (0, 1, period, 3 * period + 1)
+             for s in range(12)]
+    assert all(0 <= a <= k for a in draws)
+    assert 0.0 <= t.mean_accepted() <= k
+    # rows are genuine distributions over 0..k
+    h = np.asarray(t.hist)
+    assert h.shape == (period, k + 1)
+    np.testing.assert_allclose(h.sum(axis=1), 1.0, atol=1e-9)
+
+
+@given(st.sampled_from([0.0, 0.05, 0.15]), st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_acceptance_fixed_seed_identical_trace_bytes(jitter, seed):
+    cfg = AcceptanceConfig(alpha=0.6, k=4, period=32, jitter=jitter,
+                           seed=seed)
+    a = synthesize_acceptance(cfg, model="m")
+    b = synthesize_acceptance(cfg, model="m")
+    assert a.to_json() == b.to_json()
+
+
+@given(st.floats(0.0, 0.9), st.floats(0.05, 1.0), st.integers(1, 8),
+       st.floats(0.0, 0.2), st.integers(0, 2 ** 16))
+@settings(max_examples=40, deadline=None)
+def test_acceptance_alpha_monotone_mean_accepted(a, delta, k, jitter, seed):
+    def mean(alpha):
+        return synthesize_acceptance(AcceptanceConfig(
+            alpha=alpha, k=k, period=32, jitter=jitter,
+            seed=seed)).mean_accepted()
+    # same seed -> same per-bucket noise; each bucket's truncated-
+    # geometric mean is nondecreasing in its (clipped) alpha, so the
+    # bucket average is too
+    assert mean(min(a + delta, 1.0)) >= mean(a) - 1e-9
 
 
 # --- HLO shape parsing ------------------------------------------------------

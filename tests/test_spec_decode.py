@@ -1,0 +1,390 @@
+"""Speculative decoding end-to-end: greedy losslessness on the real
+engine, sim/real acceptance parity for a shared ``spectrace/1`` artifact,
+multi-token scheduler accounting, and artifact round-trip/validation (in
+the style of ``tests/test_expert_routing.py``).
+
+The parity tests replay one synthetic ``AcceptanceTrace`` through both
+execution backends on the same workload and pin *identical* per-step
+accepted-token counts — the backends draw positions/step ordinals
+independently (sim from the scheduler's request bookkeeping, real from
+the engine's per-slot emit counters), so agreement means the unified
+runtime's multi-token accounting matches what the real engine executed.
+"""
+import copy
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ClusterCfg, InstanceCfg, RouterCfg, SpecCfg
+from repro.core.cluster import Cluster
+from repro.core.config import TPU_V6E, SchedulerCfg
+from repro.profiler import model_spec_from_arch
+from repro.spec import (SCHEMA_VERSION, AcceptanceRecorder,
+                        AcceptanceRegistry, AcceptanceTrace,
+                        draft_model_spec, register_acceptance)
+from repro.workload import ShareGPTConfig, generate
+from repro.workload.acceptance import AcceptanceConfig, synthesize_acceptance
+
+ARCH = "llama3.1-8b-tiny"
+K = 3
+
+
+def _workload(vocab, n=5, seed=3, mean_output=8):
+    reqs = generate(ShareGPTConfig(
+        n_requests=n, rate=50.0, vocab=vocab, seed=seed,
+        mean_prompt=30, mean_output=mean_output, sigma_prompt=0.4,
+        sigma_output=0.3, max_prompt=60, max_output=10,
+        share_fraction=0.0))
+    for r in reqs:
+        r.arrival = 0.0     # decision parity must not depend on latencies
+    return reqs
+
+
+def _sched(decode_tokens=1):
+    return SchedulerCfg(max_batch_size=2, max_batch_tokens=64,
+                        chunked_prefill=True, prefill_chunk=16,
+                        decode_tokens=decode_tokens)
+
+
+# --------------------------------------------------------------------------
+# greedy losslessness (real engine, verify mode)
+# --------------------------------------------------------------------------
+
+def test_greedy_losslessness_real_engine():
+    """Speculative decode emits the exact token sequence of vanilla
+    greedy decode — with a perfect draft (same params, 100% acceptance)
+    AND with an unrelated draft (near-0% acceptance), in f32."""
+    from repro.serve import DriverCfg, ServeDriver, ServingEngine, \
+        SpecDecodeCfg
+
+    cfg = dataclasses.replace(get_config(ARCH), compute_dtype="float32")
+    reqs = _workload(cfg.vocab)
+
+    def run(spec):
+        eng = ServingEngine(cfg, max_batch=2, max_len=256, name="e0",
+                            seed=0, spec=spec)
+        drv = ServeDriver([eng], DriverCfg(scheduler=_sched(
+            (spec.k + 1) if spec else 1)))
+        m = drv.run([copy.deepcopy(r) for r in reqs], warmup=False)
+        be = drv.runtime.instances["e0"].backend
+        return m, {rid: list(t) for rid, t in be.out_tokens.items()}, be
+
+    m0, vanilla, _ = run(None)
+    m1, perfect, be1 = run(SpecDecodeCfg(draft=cfg, k=K, draft_seed=0))
+    m2, unrelated, be2 = run(SpecDecodeCfg(draft=cfg, k=K, draft_seed=7))
+    assert m0["finished"] == m1["finished"] == m2["finished"] == len(reqs)
+    for rid, toks in vanilla.items():
+        assert toks == perfect[rid]
+        assert toks == unrelated[rid]
+    # every request emitted exactly its output budget
+    for r, toks in zip(reqs, vanilla.values()):
+        assert len(toks) == r.output_len
+    # a same-params draft is always right; an unrelated random draft
+    # essentially never is — metrics see exactly that
+    sd1 = be1.spec_tracker.metrics()
+    sd2 = be2.spec_tracker.metrics()
+    assert sd1["acceptance_rate"] == 1.0
+    assert sd2["acceptance_rate"] < 0.2
+    assert sd1["steps"] < sd2["steps"]      # acceptance -> fewer steps
+    assert sd2["wasted_draft_tokens"] > sd1["wasted_draft_tokens"]
+
+
+# --------------------------------------------------------------------------
+# sim/real parity (shared acceptance trace, replay mode)
+# --------------------------------------------------------------------------
+
+def _run_parity_pair(scheduler=None):
+    from repro.serve import DriverCfg, ServeDriver, ServingEngine, \
+        SpecDecodeCfg
+    from repro.serve.driver import engine_instance_cfg
+
+    cfg = get_config(ARCH)
+    trace = synthesize_acceptance(
+        AcceptanceConfig(alpha=0.6, k=K, period=64, seed=5),
+        model=cfg.name)
+    register_acceptance("parity-acc", trace)
+    reqs = _workload(cfg.vocab, n=6)
+    scheduler = scheduler or _sched(K + 1)
+
+    eng = ServingEngine(cfg, max_batch=2, max_len=256, name="e0",
+                        spec=SpecDecodeCfg(draft=cfg, k=K,
+                                           acceptance=trace, draft_seed=7))
+    drv = ServeDriver([eng], DriverCfg(scheduler=scheduler))
+    real = drv.run([copy.deepcopy(r) for r in reqs], warmup=False)
+
+    icfg = engine_instance_cfg(
+        eng, scheduler,
+        spec=SpecCfg(enabled=True, k=K, acceptance_trace="parity-acc",
+                     draft=model_spec_from_arch(cfg)))
+    sim_cluster = Cluster(ClusterCfg(instances=(icfg,),
+                                     router=RouterCfg("round_robin")))
+    sim_cluster.submit_workload([copy.deepcopy(r) for r in reqs])
+    sim = sim_cluster.run()
+    return trace, real, sim, drv, sim_cluster
+
+
+def test_sim_real_spec_decode_parity():
+    """One acceptance trace, two engines: identical per-step accepted
+    counts, identical rolled-up spec_decode metrics, identical
+    scheduling-decision sequences."""
+    trace, real, sim, drv, sim_cluster = _run_parity_pair()
+    assert real["finished"] == sim["finished"] == 6
+    r = real["instances"]["e0"]["spec_decode"]
+    s = sim["instances"]["e0"]["spec_decode"]
+    assert r["steps"] == s["steps"] > 0
+    for key in ("k", "proposed_tokens", "accepted_tokens",
+                "emitted_tokens", "acceptance_rate", "mean_accepted_len",
+                "wasted_draft_tokens", "accepted_hist"):
+        assert r[key] == s[key], key
+    # the per-step accepted sequence itself is identical (times differ —
+    # one axis is virtual-priced, the other wall-measured)
+    assert [(p, a) for _, p, a in r["step_timeline"]] == \
+        [(p, a) for _, p, a in s["step_timeline"]]
+    # the replayed acceptance really produced multi-token steps
+    assert r["emitted_tokens"] > r["steps"]
+    # acceptance-criteria surface: both cluster rollups agree
+    assert real["spec_decode"]["acceptance_rate"] == \
+        sim["spec_decode"]["acceptance_rate"]
+    assert real["spec_decode"]["instances_merged"] == 1
+    # and the unified runtime made identical decisions on both backends
+    assert list(drv.runtime.instances["e0"].decisions) == \
+        list(sim_cluster.instances["e0"].decisions)
+
+
+def test_multi_token_ledger_reserves_verification_window():
+    """The KV ledger reserves the k+1 verification window per decode step
+    — peak block reservations grow accordingly versus 1-token decode."""
+    trace, real, sim, drv, sim_cluster = _run_parity_pair()
+    m = sim
+    # every decode decision carries the k+1 window
+    dec = [w for it in sim_cluster.instances["e0"].decisions
+           for w in it if w[1] == "decode"]
+    assert dec and all(t == K + 1 for _, _, t in dec)
+    assert m["kv_blocks_peak_max"] > 0
+
+
+# --------------------------------------------------------------------------
+# simulated speedup (sim backend only)
+# --------------------------------------------------------------------------
+
+def test_sim_spec_decode_speeds_up_tpot():
+    from repro.core import simulate
+    model = model_spec_from_arch(get_config("llama3.1-8b"))
+    register_acceptance("fast-acc", synthesize_acceptance(
+        AcceptanceConfig(alpha=0.9, k=4, period=128, seed=0)))
+    reqs = generate(ShareGPTConfig(n_requests=10, vocab=32000, seed=1))
+
+    def run(spec, dt):
+        icfg = InstanceCfg(name="i0", hw=TPU_V6E, model=model,
+                           scheduler=SchedulerCfg(max_batch_size=16,
+                                                  decode_tokens=dt),
+                           spec=spec)
+        return simulate(ClusterCfg((icfg,),
+                                   router=RouterCfg("round_robin")), reqs)
+
+    base = run(SpecCfg(), 1)
+    spec = run(SpecCfg(enabled=True, k=4, acceptance_trace="fast-acc"), 5)
+    assert spec["finished"] == base["finished"] == 10
+    assert spec["tpot_mean_s"] < base["tpot_mean_s"]
+    sd = spec["spec_decode"]
+    assert sd["acceptance_rate"] > 0.6
+    assert sd["emitted_tokens"] == sd["accepted_tokens"] + sd["steps"]
+
+
+# --------------------------------------------------------------------------
+# configuration errors fail loudly
+# --------------------------------------------------------------------------
+
+def test_sim_spec_requires_acceptance_trace():
+    from repro.runtime.backends.sim import SimBackend
+    model = model_spec_from_arch(get_config(ARCH))
+    icfg = InstanceCfg(name="i0", hw=TPU_V6E, model=model,
+                       scheduler=SchedulerCfg(decode_tokens=K + 1),
+                       spec=SpecCfg(enabled=True, k=K))
+    with pytest.raises(ValueError, match="acceptance_trace"):
+        SimBackend(icfg)
+
+
+def test_sim_spec_requires_matching_decode_tokens():
+    from repro.runtime.backends.sim import SimBackend
+    register_acceptance("dt-acc", synthesize_acceptance(
+        AcceptanceConfig(alpha=0.5, k=K, period=16)))
+    model = model_spec_from_arch(get_config(ARCH))
+    icfg = InstanceCfg(name="i0", hw=TPU_V6E, model=model,
+                       spec=SpecCfg(enabled=True, k=K,
+                                    acceptance_trace="dt-acc"))
+    with pytest.raises(ValueError, match="decode_tokens"):
+        SimBackend(icfg)
+
+
+def test_jax_backend_rejects_unreplayed_acceptance_trace():
+    """A cfg-named acceptance trace the engine does not replay must fail
+    loudly: accounting it anyway would report acceptance that never
+    ran (mirrors the MoE routing-trace contract)."""
+    from repro.runtime.backends.jax_engine import JaxBackend
+    from repro.serve import ServingEngine, SpecDecodeCfg
+    from repro.serve.driver import engine_instance_cfg
+    cfg = get_config(ARCH)
+    register_acceptance("unreplayed-acc", synthesize_acceptance(
+        AcceptanceConfig(alpha=0.5, k=K, period=16)))
+    # engine has no draft at all
+    eng = ServingEngine(cfg, max_batch=2, max_len=64)
+    icfg = engine_instance_cfg(
+        eng, _sched(K + 1),
+        spec=SpecCfg(enabled=True, k=K,
+                     acceptance_trace="unreplayed-acc"))
+    with pytest.raises(ValueError, match="no draft"):
+        JaxBackend(eng, icfg)
+    # engine speculates but replays no trace while the cfg names one
+    eng2 = ServingEngine(cfg, max_batch=2, max_len=64,
+                         spec=SpecDecodeCfg(draft=cfg, k=K))
+    icfg2 = engine_instance_cfg(
+        eng2, _sched(K + 1),
+        spec=SpecCfg(enabled=True, k=K,
+                     acceptance_trace="unreplayed-acc"))
+    with pytest.raises(ValueError, match="replays no trace"):
+        JaxBackend(eng2, icfg2)
+    # engine replays a DIFFERENT trace than the cfg names
+    other = synthesize_acceptance(AcceptanceConfig(alpha=0.9, k=K,
+                                                   period=16, seed=9))
+    eng3 = ServingEngine(cfg, max_batch=2, max_len=64,
+                         spec=SpecDecodeCfg(draft=cfg, k=K,
+                                            acceptance=other))
+    icfg3 = engine_instance_cfg(
+        eng3, _sched(K + 1),
+        spec=SpecCfg(enabled=True, k=K,
+                     acceptance_trace="unreplayed-acc"))
+    with pytest.raises(ValueError, match="different trace"):
+        JaxBackend(eng3, icfg3)
+
+
+def test_engine_rejects_bad_spec_configs():
+    from repro.serve import ServingEngine, SpecDecodeCfg
+    cfg = get_config(ARCH)
+    bad_vocab = dataclasses.replace(cfg, vocab=128)
+    with pytest.raises(ValueError, match="vocab"):
+        ServingEngine(cfg, max_batch=2, max_len=64,
+                      spec=SpecDecodeCfg(draft=bad_vocab, k=2))
+    with pytest.raises(ValueError, match="k must be"):
+        ServingEngine(cfg, max_batch=2, max_len=64,
+                      spec=SpecDecodeCfg(draft=cfg, k=0))
+    # k-mismatched acceptance trace is structural
+    t = synthesize_acceptance(AcceptanceConfig(alpha=0.5, k=2, period=16))
+    with pytest.raises(ValueError, match="k="):
+        ServingEngine(cfg, max_batch=2, max_len=64,
+                      spec=SpecDecodeCfg(draft=cfg, k=4, acceptance=t))
+
+
+# --------------------------------------------------------------------------
+# artifact round-trip / schema / registry
+# --------------------------------------------------------------------------
+
+def test_acceptance_roundtrip_and_deterministic_bytes(tmp_path):
+    t = synthesize_acceptance(AcceptanceConfig(alpha=0.7, k=4, period=32,
+                                               jitter=0.1, seed=3),
+                              model="m", draft="d")
+    p1 = t.save(str(tmp_path / "a.json"))
+    loaded = AcceptanceTrace.load(p1)
+    assert (loaded.model, loaded.draft, loaded.k) == ("m", "d", 4)
+    assert loaded.period == 32
+    assert json.load(open(p1))["schema"] == SCHEMA_VERSION
+    # replay equivalence: identical draws at arbitrary (position, step)
+    draws = [(p, s, t.accepted_for(p, s))
+             for p in (0, 1, 31, 32, 200) for s in range(40)]
+    assert draws == [(p, s, loaded.accepted_for(p, s))
+                     for p, s, _ in draws]
+    assert all(0 <= a <= 4 for _, _, a in draws)
+    # fixed seed => byte-identical artifact
+    t2 = synthesize_acceptance(AcceptanceConfig(alpha=0.7, k=4, period=32,
+                                                jitter=0.1, seed=3),
+                               model="m", draft="d")
+    p2 = t2.save(str(tmp_path / "b.json"))
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+
+
+def test_acceptance_schema_gate_and_validation(tmp_path):
+    t = synthesize_acceptance(AcceptanceConfig(alpha=0.5, k=2, period=8))
+    path = t.save(str(tmp_path / "t.json"))
+    doc = json.load(open(path))
+    doc["schema"] = "spectrace/999"
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ValueError, match="schema"):
+        AcceptanceTrace.load(path)
+    with pytest.raises(ValueError, match="k >= 1"):
+        AcceptanceTrace(model="m", draft="d", k=0,
+                        hist=np.ones((4, 1))).validate()
+    with pytest.raises(ValueError, match="hist shape"):
+        AcceptanceTrace(model="m", draft="d", k=2,
+                        hist=np.ones((4, 2))).validate()
+    with pytest.raises(ValueError, match=">= 0"):
+        AcceptanceTrace(model="m", draft="d", k=1,
+                        hist=np.asarray([[1.0, -0.5]])).validate()
+    with pytest.raises(ValueError, match="positive total"):
+        AcceptanceTrace(model="m", draft="d", k=1,
+                        hist=np.asarray([[0.0, 0.0]])).validate()
+
+
+def test_acceptance_registry_resolution(tmp_path):
+    from repro.spec import resolve_acceptance
+    reg = AcceptanceRegistry()
+    t = synthesize_acceptance(AcceptanceConfig(alpha=0.5, k=3, period=8))
+    reg.load_file(t.save(str(tmp_path / "acc.json")))
+    assert reg.names() == ["acc"]
+    model = model_spec_from_arch(get_config(ARCH))
+    icfg = InstanceCfg(name="i0", hw=TPU_V6E, model=model,
+                       spec=SpecCfg(enabled=True, k=3,
+                                    acceptance_trace="acc"))
+    assert resolve_acceptance(icfg, reg) is reg.get("acc")
+    # structural k mismatch is an error, not a silent mis-draw
+    bad = dataclasses.replace(
+        icfg, spec=SpecCfg(enabled=True, k=5, acceptance_trace="acc"))
+    with pytest.raises(ValueError, match="k="):
+        resolve_acceptance(bad, reg)
+    missing = dataclasses.replace(
+        icfg, spec=SpecCfg(enabled=True, k=3, acceptance_trace="nope"))
+    with pytest.raises(KeyError, match="record-acceptance"):
+        resolve_acceptance(missing, reg)
+    # foreign artifacts sharing traces/ are skipped by every registry
+    import warnings
+    from repro.hw import HardwareRegistry
+    from repro.moe import RoutingRegistry
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert HardwareRegistry().load_dir(str(tmp_path)) == []
+        assert RoutingRegistry().load_dir(str(tmp_path)) == []
+
+
+def test_recorder_distills_observations():
+    rec = AcceptanceRecorder(k=3, period=8)
+    for _ in range(10):
+        rec.observe(0, 3)
+        rec.observe(1, 0)
+    t = rec.to_trace(model="m", draft="d")
+    assert t.meta["source"] == "recorded"
+    assert t.meta["observations"] == 20
+    # heavily-observed buckets realize their dominant length
+    assert all(t.accepted_for(0, s) == 3 for s in range(20))
+    assert all(t.accepted_for(1, s) == 0 for s in range(20))
+    # unseen buckets fall back to the global distribution (here bimodal)
+    draws = {t.accepted_for(5, s) for s in range(50)}
+    assert draws <= {0, 3}
+    # disabled recorder ignores observations; empty recorder refuses to
+    # fabricate an artifact
+    rec2 = AcceptanceRecorder(k=3, period=8)
+    rec2.enabled = False
+    rec2.observe(0, 2)
+    with pytest.raises(ValueError, match="no spec steps"):
+        rec2.to_trace()
+
+
+def test_draft_model_spec_scaling():
+    model = model_spec_from_arch(get_config("llama3.1-8b"))
+    d = draft_model_spec(model, 0.25)
+    assert d.vocab == model.vocab           # token ids must line up
+    assert d.n_layers == 8 and d.d_model == 1024
+    assert d.weight_bytes() < model.weight_bytes() * 0.1
+    with pytest.raises(ValueError, match="scale"):
+        draft_model_spec(model, 0.0)
