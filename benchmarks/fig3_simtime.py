@@ -1,11 +1,21 @@
 """Fig. 3 reproduction: simulation wall-clock for 100 ShareGPT requests
-across nine configurations (paper: everything under 12 minutes; ours is an
-event-level pure-Python sim, so expect seconds). Full-size models with
-analytical TPU-v5e traces — the 'explore new hardware' mode.
+across the paper's nine configurations (paper: everything under 12
+minutes; ours is an event-level pure-Python sim, so expect seconds), plus
+two decode-heavy configurations (offline burst, 2048-token outputs) that
+showcase the decode fast-forward.  Full-size models with analytical
+TPU-v5e traces — the 'explore new hardware' mode.
+
+Every configuration runs twice — fast path (default) and exact stepped
+mode (``fast_path=False``) — each with a FRESH trace registry so the
+shared interpolation memo cannot flatter whichever run goes second.  The
+two runs are decision- and metric-identical (``tests/test_fast_path.py``);
+only wall-clock and event counts differ.
 """
 from __future__ import annotations
 
 import json
+
+import numpy as np
 
 from repro.core import (ClusterCfg, InstanceCfg, MoECfg, NetworkCfg,
                         PrefixCacheCfg, RouterCfg, SchedulerCfg,
@@ -14,9 +24,16 @@ from repro.core.config import TPU_V5E
 from repro.profiler import model_spec_from_arch, profile_arch
 from repro.configs import get_config
 from repro.workload import ShareGPTConfig, generate
+from repro.workload.sharegpt import Request
 
 DENSE = "llama3.1-8b"
 MOE = "phimini-moe"
+
+CONFIGS = ("SD", "SM", "MD", "MM", "PDD", "PDM", "SD+PC", "SM+PC",
+           "MM+EO", "SD-DH", "MD-DH")
+#: configurations whose workload is decode-dominated (the >= 10x
+#: fast-path acceptance target applies to these)
+DECODE_HEAVY = ("SD-DH", "MD-DH")
 
 
 def _inst(name, arch, trace, *, role="unified", pc=False, tp=8,
@@ -34,15 +51,23 @@ def _inst(name, arch, trace, *, role="unified", pc=False, tp=8,
         trace_name=trace)
 
 
+def _decode_heavy_reqs(n_requests: int) -> list:
+    """Offline burst: every request arrives within ~1s and decodes 2048
+    tokens — simulated time is almost entirely lockstep decode."""
+    rng = np.random.default_rng(7)
+    arrivals = np.cumsum(rng.exponential(1.0 / 100.0, n_requests))
+    vocab = get_config(DENSE).vocab
+    return [Request(req_id=i, arrival=float(arrivals[i]),
+                    prompt_tokens=rng.integers(0, vocab, 64).tolist(),
+                    output_len=2048) for i in range(n_requests)]
+
+
 def run(n_requests: int = 100):
-    registry = TraceRegistry()
-    for arch in (DENSE, MOE):
-        registry.register(arch, profile_arch(arch, hardware="tpu-v5e",
-                                             mode="analytical", tp=8))
     reqs_d = generate(ShareGPTConfig(n_requests=n_requests, rate=10.0,
                                      vocab=get_config(DENSE).vocab))
     reqs_m = generate(ShareGPTConfig(n_requests=n_requests, rate=10.0,
                                      vocab=get_config(MOE).vocab))
+    reqs_dh = _decode_heavy_reqs(n_requests)
 
     def cluster(config):
         if config == "SD":
@@ -73,22 +98,46 @@ def run(n_requests: int = 100):
             return ClusterCfg((_inst("i0", MOE, MOE, offload="pim"),
                                _inst("i1", MOE, MOE, offload="pim")),
                               router=RouterCfg("least_loaded")), reqs_m
+        if config == "SD-DH":   # decode-heavy: single dense instance
+            return ClusterCfg((_inst("i0", DENSE, DENSE),)), reqs_dh
+        if config == "MD-DH":   # decode-heavy: 2 instances, least-loaded
+            return ClusterCfg((_inst("i0", DENSE, DENSE),
+                               _inst("i1", DENSE, DENSE)),
+                              router=RouterCfg("least_loaded")), reqs_dh
         raise KeyError(config)
 
+    def fresh_registry():
+        registry = TraceRegistry()
+        for arch in (DENSE, MOE):
+            registry.register(arch, profile_arch(arch, hardware="tpu-v5e",
+                                                 mode="analytical", tp=8))
+        return registry
+
     rows = []
-    for config in ("SD", "SM", "MD", "MM", "PDD", "PDM", "SD+PC", "SM+PC",
-                   "MM+EO"):
+    for config in CONFIGS:
         ccfg, reqs = cluster(config)
-        m = simulate(ccfg, reqs)
+        m = simulate(ccfg, reqs, traces=fresh_registry())
+        m_exact = simulate(ccfg, reqs, traces=fresh_registry(),
+                           fast_path=False)
         rows.append({
-            "config": config, "sim_wall_s": m["sim_wall_s"],
-            "sim_events": m["sim_events"], "finished": m["finished"],
+            "config": config,
+            "decode_heavy": config in DECODE_HEAVY,
+            "sim_wall_s": m["sim_wall_s"],
+            "sim_events": m["sim_events"],
+            "sim_wall_exact_s": m_exact["sim_wall_s"],
+            "sim_events_exact": m_exact["sim_events"],
+            "speedup": m_exact["sim_wall_s"] / m["sim_wall_s"],
+            "events_per_s": m["sim_events"] / m["sim_wall_s"],
+            "finished": m["finished"],
             "throughput_tok_s": m.get("throughput_tok_s"),
             "tpot_mean_ms": (m.get("tpot_mean_s") or 0) * 1e3,
             "ttft_mean_s": m.get("ttft_mean_s"),
         })
         print(f"fig3,{config},sim_wall={m['sim_wall_s']*1e6:.0f}us,"
-              f"events={m['sim_events']}", flush=True)
+              f"events={m['sim_events']},"
+              f"exact_wall={m_exact['sim_wall_s']*1e6:.0f}us,"
+              f"exact_events={m_exact['sim_events']},"
+              f"speedup={rows[-1]['speedup']:.1f}x", flush=True)
     return {"rows": rows}
 
 

@@ -1,0 +1,165 @@
+"""Fleet-scale simulation benchmark: N identical instances behind a
+least-loaded router, diurnal / bursty arrivals, fast-path vs exact-path
+wall-clock.
+
+  PYTHONPATH=src python -m benchmarks.fleet_scale \
+      [--instances 100] [--requests 1000] [--parity] [--out BENCH_simtime.json]
+
+Every instance shares one analytical TPU-v5e trace object, so the indexed
+grids and the exact-key interpolation memo are shared fleet-wide.  Each
+mode (fast / exact) gets a FRESH TraceRegistry: the memo is warmed by
+whichever run goes first, so sharing one registry across timed runs would
+flatter the second mode.
+
+Writes per-config wall-clock, event counts, events/s, speedup and parity
+to ``BENCH_simtime.json``.  ``--parity`` exits non-zero unless the fast
+path reproduced the exact path's decisions and metrics bit-for-bit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+from repro.core import (ClusterCfg, InstanceCfg, ParallelismCfg, RouterCfg,
+                        SchedulerCfg, TraceRegistry, simulate)
+from repro.core.config import TPU_V5E
+from repro.profiler import model_spec_from_arch, profile_arch
+from repro.configs import get_config
+from repro.workload import diurnal
+from repro.workload.sharegpt import Request
+
+ARCH = "llama3.1-8b"
+
+
+def _registry() -> TraceRegistry:
+    r = TraceRegistry()
+    r.register(ARCH, profile_arch(ARCH, hardware="tpu-v5e",
+                                  mode="analytical", tp=8))
+    return r
+
+
+def _cluster(n_instances: int) -> ClusterCfg:
+    spec = model_spec_from_arch(get_config(ARCH))
+    insts = tuple(
+        InstanceCfg(name=f"i{k}", hw=TPU_V5E, model=spec, n_devices=8,
+                    parallelism=ParallelismCfg(tp=8),
+                    scheduler=SchedulerCfg(max_batch_size=64,
+                                           max_batch_tokens=8192),
+                    trace_name=ARCH)
+        for k in range(n_instances))
+    return ClusterCfg(insts, router=RouterCfg("least_loaded"))
+
+
+def _requests(arrivals, seed: int) -> list:
+    rng = np.random.default_rng(seed)
+    vocab = get_config(ARCH).vocab
+    reqs = []
+    for i, t in enumerate(arrivals):
+        plen = int(rng.integers(32, 160))
+        reqs.append(Request(
+            req_id=i, arrival=float(t),
+            prompt_tokens=rng.integers(0, vocab, plen).tolist(),
+            output_len=int(rng.integers(256, 768))))
+    return reqs
+
+
+def _strip(metrics: dict) -> dict:
+    m = dict(metrics)
+    for k in ("sim_wall_s", "sim_events", "instances"):
+        m.pop(k, None)
+    return m
+
+
+def _run_mode(ccfg, reqs, fast: bool):
+    # fresh registry per mode: the interpolation memo must start cold
+    m = simulate(ccfg, reqs, traces=_registry(), fast_path=fast)
+    return m
+
+
+def run(n_instances: int = 100, n_requests: int = 1000,
+        parity: bool = False, exact: bool = True) -> dict:
+    # arrival shapes: amplitude ~1 gives deep troughs (long decode-only
+    # stretches, the fast-forward's best case) and sharp peaks (router and
+    # admission stress); "bursty" layers cv=4 clumping on top
+    # span ~2 diurnal periods regardless of the request count
+    rate = max(2.0, n_requests / 120.0)
+    shapes = {
+        "diurnal": diurnal(rate, n_requests, period=60.0, amplitude=0.95,
+                           seed=1),
+        "bursty": diurnal(rate, n_requests, period=60.0, amplitude=0.95,
+                          cv=4.0, seed=2),
+    }
+    rows = []
+    all_parity = True
+    for config, arrivals in shapes.items():
+        reqs = _requests(arrivals, seed=3)
+        ccfg = _cluster(n_instances)
+        m_fast = _run_mode(ccfg, reqs, fast=True)
+        row = {
+            "config": config,
+            "instances": n_instances,
+            "requests": n_requests,
+            "finished": m_fast["finished"],
+            "fast": {
+                "wall_s": m_fast["sim_wall_s"],
+                "events": m_fast["sim_events"],
+                "events_per_s": m_fast["sim_events"] / m_fast["sim_wall_s"],
+            },
+        }
+        if exact:
+            m_exact = _run_mode(ccfg, reqs, fast=False)
+            ok = (_strip(m_fast) == _strip(m_exact)
+                  and all(m_fast["instances"][n] == m_exact["instances"][n]
+                          for n in m_fast["instances"]))
+            all_parity = all_parity and ok
+            row["exact"] = {
+                "wall_s": m_exact["sim_wall_s"],
+                "events": m_exact["sim_events"],
+                "events_per_s": (m_exact["sim_events"]
+                                 / m_exact["sim_wall_s"]),
+            }
+            row["speedup"] = m_exact["sim_wall_s"] / m_fast["sim_wall_s"]
+            # exact-equivalent throughput: exact-path events retired per
+            # second of fast-path wall-clock
+            row["equiv_events_per_s"] = (m_exact["sim_events"]
+                                         / m_fast["sim_wall_s"])
+            row["parity"] = ok
+        rows.append(row)
+        msg = (f"fleet,{config},inst={n_instances},reqs={n_requests},"
+               f"fast={row['fast']['wall_s']:.3f}s/"
+               f"{row['fast']['events']}ev")
+        if exact:
+            msg += (f",exact={row['exact']['wall_s']:.3f}s/"
+                    f"{row['exact']['events']}ev,"
+                    f"speedup={row['speedup']:.1f}x,parity={row['parity']}")
+        print(msg, flush=True)
+    return {"rows": rows, "parity": all_parity if exact else None}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--instances", type=int, default=100)
+    ap.add_argument("--requests", type=int, default=1000)
+    ap.add_argument("--parity", action="store_true",
+                    help="exit non-zero unless fast == exact everywhere")
+    ap.add_argument("--fast-only", action="store_true",
+                    help="skip the exact-path runs (no speedup/parity)")
+    ap.add_argument("--out", default="BENCH_simtime.json")
+    args = ap.parse_args()
+    if args.parity and args.fast_only:
+        ap.error("--parity requires the exact runs (drop --fast-only)")
+    out = run(n_instances=args.instances, n_requests=args.requests,
+              parity=args.parity, exact=not args.fast_only)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"fleet,wrote={args.out}", flush=True)
+    if args.parity and not out["parity"]:
+        print("fleet,parity=FAILED", file=sys.stderr, flush=True)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,11 @@ the simulation backend.  ``simulate(requests)`` is the main entry point used
 by every benchmark and example; the real-engine twin is
 ``repro.serve.ServeDriver`` — same scheduler, cache, router and P/D code
 path, different ``ExecutionBackend``.
+
+``fast_path`` (default on) enables the simulator's iteration-cost memo and
+decode fast-forward; it is decision- and metric-identical to the stepped
+exact mode (``fast_path=False``), which remains available as the reference
+for the parity suite and for debugging event-by-event timelines.
 """
 from __future__ import annotations
 
@@ -21,17 +26,20 @@ if TYPE_CHECKING:
 class Cluster(ServingRuntime):
     def __init__(self, cfg: ClusterCfg,
                  traces: Optional[TraceRegistry] = None,
-                 hw: Optional["HardwareRegistry"] = None):
+                 hw: Optional["HardwareRegistry"] = None,
+                 fast_path: bool = True):
         super().__init__(
             cfg,
-            backend_factory=lambda icfg, trace: SimBackend(icfg, trace=trace),
+            backend_factory=lambda icfg, trace: SimBackend(
+                icfg, trace=trace, fast_path=fast_path),
             traces=traces, hw=hw)
 
 
 def simulate(cfg: ClusterCfg, requests: Sequence[Request],
              traces: Optional[TraceRegistry] = None,
              hw: Optional["HardwareRegistry"] = None,
-             until: Optional[float] = None) -> Dict:
-    cluster = Cluster(cfg, traces=traces, hw=hw)
+             until: Optional[float] = None,
+             fast_path: bool = True) -> Dict:
+    cluster = Cluster(cfg, traces=traces, hw=hw, fast_path=fast_path)
     cluster.submit_workload(requests)
     return cluster.run(until=until)

@@ -123,12 +123,17 @@ class PerfModel:
 
     # ---- trace lookup with analytical fallback ----
     def _op(self, op: str, phase: str, tokens: int, context: int,
-            analytical: float) -> float:
+            analytical) -> float:
+        """``analytical`` is a 0-arg thunk, evaluated only when the trace
+        has no grid for ``(op, phase)`` — keeping the fallback lazy both
+        skips wasted roofline math on trace-covered ops and leaves the
+        statistical MoE router's RNG untouched when a trace prices the
+        layer (so memoized pricing stays deterministic)."""
         if self.trace is not None:
             v = self.trace.interpolate(op, phase, tokens, context)
             if v is not None:
                 return v
-        return analytical
+        return analytical()
 
     @staticmethod
     def _bucket(n: int, lo: int = 16) -> int:
@@ -185,9 +190,12 @@ class PerfModel:
             if ex is not None:
                 total += ex
         if dec:
+            # the engine pads decode batches to its fixed slot count, so a
+            # half-full batch costs the same as a full one: price at the
+            # configured width, not the occupancy
             B = len(dec)
             if self.cfg.scheduler.decode_pad_to:
-                B = max(B, 1)
+                B = max(B, self.cfg.scheduler.decode_pad_to)
             ctx = sum(i.context for i in dec) / len(dec)
             v = self.trace.interpolate("iter", "decode", B, int(ctx))
             if v is None:
@@ -252,32 +260,34 @@ class PerfModel:
         qkv_d = (m.n_heads + 2 * m.n_kv_heads) * m.d_head
         t_qkv = L * self._op(
             "attn_qkv", phase, T, ctx,
-            self._linear_cost(T, m.d_model, qkv_d)
+            lambda: self._linear_cost(T, m.d_model, qkv_d)
             + self._linear_cost(T, m.n_heads * m.d_head, m.d_model))
         t_attn = L * self._op(
-            "attn_score", phase, T, ctx, self._attn_context_cost(items))
+            "attn_score", phase, T, ctx,
+            lambda: self._attn_context_cost(items))
         if m.is_moe:
-            t_ffn = L * self._op("moe_ffn", phase, T, ctx,
-                                 self._moe_layer_cost(items, T,
-                                                      routing_counts))
+            t_ffn = L * self._op(
+                "moe_ffn", phase, T, ctx,
+                lambda: self._moe_layer_cost(items, T, routing_counts))
         else:
             mults = 3 if m.mlp_gated else 2
             t_ffn = L * self._op(
                 "mlp", phase, T, ctx,
-                self._linear_cost(T, m.d_model, m.d_ff) * mults / 2
+                lambda: self._linear_cost(T, m.d_model, m.d_ff) * mults / 2
                 + self._linear_cost(T, m.d_ff, m.d_model) / 2
                 + self._linear_cost(T, m.d_model, m.d_ff) * (mults - 2))
         t_norm = L * self._op(
             "norm", phase, T, ctx,
-            self._roof(10.0 * T * m.d_model,
-                       4.0 * T * m.d_model * m.dtype_bytes))
+            lambda: self._roof(10.0 * T * m.d_model,
+                               4.0 * T * m.d_model * m.dtype_bytes))
         t_head = self._op(
             "head", phase, T, ctx,
-            self._linear_cost(sum(1 for i in items) if phase == "decode"
-                              else T, m.d_model, m.vocab))
+            lambda: self._linear_cost(sum(1 for i in items)
+                                      if phase == "decode"
+                                      else T, m.d_model, m.vocab))
         t_embed = self._op(
             "embed", phase, T, ctx,
-            self._roof(0.0, T * m.d_model * m.dtype_bytes * 2))
+            lambda: self._roof(0.0, T * m.d_model * m.dtype_bytes * 2))
         # TP all-reduce: 2 per layer on the activations
         ar_bytes = T * m.d_model * m.dtype_bytes
         t_coll = 2 * L * allreduce_time(ar_bytes, self.tp, self.hw.link_bw)
@@ -291,3 +301,68 @@ class PerfModel:
         return IterationCost(total, {
             "qkv": t_qkv, "attn": t_attn, "ffn": t_ffn, "norm": t_norm,
             "head": t_head, "embed": t_embed, "collective": t_coll})
+
+    # ---- fast-path helpers ----
+    def pricing_deterministic(self) -> bool:
+        """Whether iteration pricing is a pure function of the batch shape.
+        False only when the statistical MoE router (a stateful RNG) can be
+        consumed: an MoE model whose trace does not cover ``moe_ffn`` for
+        both phases.  Memoizing or speculatively re-pricing such batches
+        would change the draw stream and thus the simulated timeline."""
+        if not self.m.is_moe or self.routing is not None:
+            return True
+        tr = self.trace
+        return tr is not None and bool(tr._grid("moe_ffn", "prefill")) \
+            and bool(tr._grid("moe_ffn", "decode"))
+
+    def decode_window(self, items: List[BatchItem],
+                      n: int) -> Optional[np.ndarray]:
+        """Per-step totals for ``n`` successive decode iterations of a
+        frozen batch (every item's context grows by 1 per step): element
+        ``i`` equals ``iteration_latency`` on the batch advanced ``i``
+        steps, bit-identically — both paths run the same interpolation
+        kernel and the same scalar accumulation chains.  None when
+        vectorization can't guarantee that (no trace, an op grid missing so
+        the per-item analytical fallback would engage, a routing trace
+        making cost position-dependent, or a non-decode item) — callers
+        then price step by step."""
+        if self.trace is None or self.routing is not None or n <= 0:
+            return None
+        if not items or any(i.phase != "decode" for i in items):
+            return None
+        tr = self.trace
+        steps = np.arange(n)
+        if tr._grid("iter", "decode"):
+            B = len(items)
+            if self.cfg.scheduler.decode_pad_to:
+                B = max(B, self.cfg.scheduler.decode_pad_to)
+            csum = sum(i.context for i in items)
+            ctx = ((csum + steps * len(items))
+                   / len(items)).astype(np.int64)
+            return tr.interpolate_many("iter", "decode", np.full(n, B), ctx)
+        m = self.m
+        ops = ("attn_qkv", "attn_score",
+               "moe_ffn" if m.is_moe else "mlp", "norm", "head", "embed")
+        if not all(tr._grid(op, "decode") for op in ops):
+            return None
+        L = m.n_layers
+        T = sum(it.tokens for it in items)
+        ctx = max(it.context for it in items) + steps
+        tok = np.full(n, T)
+
+        def op(name):
+            return tr.interpolate_many(name, "decode", tok, ctx)
+
+        t_qkv = L * op("attn_qkv")
+        t_attn = L * op("attn_score")
+        t_ffn = L * op(ops[2])
+        t_norm = L * op("norm")
+        t_head = op("head")
+        t_embed = op("embed")
+        ar_bytes = T * m.d_model * m.dtype_bytes
+        t_coll = 2 * L * allreduce_time(ar_bytes, self.tp, self.hw.link_bw)
+        total = t_qkv + t_attn + t_ffn + t_norm + t_head + t_embed + t_coll
+        if self.pp > 1:
+            hop = T * m.d_model * m.dtype_bytes / self.hw.link_bw + 5e-6
+            total = total + (self.pp - 1) * hop
+        return total

@@ -194,6 +194,19 @@ class HardwareTrace:
         return Trace(model=self.model, hardware=self.device, tp=tp,
                      points=list(pts), meta=dict(self.meta))
 
+    def shared_trace(self, tp: Optional[int] = None) -> Trace:
+        """Cached ``to_trace`` view: every caller at the same ``tp`` gets
+        the SAME ``Trace`` object, so a fleet of identical instances
+        shares one interpolation index and one exact-key memo instead of
+        re-deriving them per instance.  Treat the result as read-only
+        (``Trace.add`` on it would leak into every sharer)."""
+        cache = self.__dict__.setdefault("_shared_traces", {})
+        key = self.tp if tp is None else tp
+        t = cache.get(key)
+        if t is None:
+            t = cache[key] = self.to_trace(tp)
+        return t
+
     # ---- validation ----
     def validate(self):
         if not self.device:

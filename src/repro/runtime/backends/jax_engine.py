@@ -318,22 +318,35 @@ class JaxBackend:
                 dr._write_slot_from_prefill(slot, c1, len(hist))
                 self._draft_len[slot] = len(hist)
 
-        # 2. propose: k + 1 sequential full-buffer draft decodes
+        # tail clamp: a request with r = output_len - generated tokens
+        # left can emit at most r per step (accepted + bonus), so it only
+        # uses min(k, r - 1) drafts.  Clamping the proposal window — not
+        # just the emission — keeps the verified positions meaningful and
+        # matches SimBackend's pricing of the same step exactly.
+        k_eff = {}
+        for w in decodes:
+            req = w.request
+            k_eff[self._slot[req.req_id]] = max(
+                0, min(k, req.output_len - req.generated - 1))
+        k_step = max(k_eff.values(), default=0)
+
+        # 2. propose: k_step + 1 sequential full-buffer draft decodes
         cur = np.maximum(np.asarray(eng._tokens_buf), 0)
-        drafts = np.zeros((eng.max_batch, k), np.int32)
-        for j in range(k + 1):
+        drafts = np.zeros((eng.max_batch, k_step), np.int32)
+        for j in range(k_step + 1):
             dlogits, dr.cache = dr._jit_decode(dr.params, dr.cache,
                                                jnp.asarray(cur))
             cur = np.asarray(greedy(dlogits, eng.cfg.vocab))
-            if j < k:
+            if j < k_step:
                 drafts[:, j] = cur[:, 0]
 
-        # 3. batched target verification over [pending, d1..dk]
+        # 3. batched target verification over [pending, d1..dk_eff]
         vt = np.concatenate(
             [np.maximum(np.asarray(eng._tokens_buf), 0), drafts], axis=1)
         n_new = np.zeros((eng.max_batch,), np.int32)
         for w in decodes:
-            n_new[self._slot[w.request.req_id]] = k + 1
+            slot = self._slot[w.request.req_id]
+            n_new[slot] = k_eff[slot] + 1
         vlogits, eng.cache = eng._jit_verify(
             eng.params, eng.cache, jnp.asarray(vt), jnp.asarray(n_new))
         target = np.asarray(greedy(vlogits, eng.cfg.vocab))  # (B, k+1)
@@ -350,10 +363,15 @@ class JaxBackend:
                 accepted = trace.accepted_for(pos, step)
             else:
                 accepted = int(matched[slot])
+            # matched/trace draws range over 0..k_step; a slot near its
+            # output budget only verified k_eff positions (beyond that the
+            # target row is unverified padding), so clamp first
+            accepted = min(accepted, k_eff[slot])
             if recorder is not None:
-                recorder.observe(pos, int(matched[slot]))
+                recorder.observe(pos, min(int(matched[slot]), k_eff[slot]))
             if self.spec_tracker is not None:
-                self.spec_tracker.observe(pos, accepted, now)
+                self.spec_tracker.observe(pos, accepted, now,
+                                          proposed=k_eff[slot])
             bonus = int(target[slot, accepted])
             emitted = [int(t) for t in drafts[slot, :accepted]] + [bonus]
             remaining = max(req.output_len - req.generated, 1)

@@ -19,11 +19,17 @@ from repro.runtime.prefix_cache import MatchResult
 from repro.runtime.scheduler import ScheduledWork, to_batch_items
 
 
+#: iteration-memo entries kept before a wholesale reset (exact keys)
+_ITER_MEMO_CAP = 1 << 17
+
+
 class SimBackend:
     name = "sim"
 
-    def __init__(self, cfg: InstanceCfg, trace: Optional[Trace] = None):
+    def __init__(self, cfg: InstanceCfg, trace: Optional[Trace] = None,
+                 fast_path: bool = True):
         self.cfg = cfg
+        self.fast_path = bool(fast_path)
         self.memory = MemoryModel(cfg)
         # replayable expert-routing trace (MoECfg.routing_trace): prices
         # per-layer expert load and feeds the uniform expert_load metrics.
@@ -86,6 +92,19 @@ class SimBackend:
         # iteration (the request that hit pays for its own fetch)
         self._pending_fetch_s = 0.0
         self._tput_hint = {}     # phase -> lazily priced reference tokens/s
+        # ---- fast path (exact-mode opt-out: fast_path=False) ----
+        # iteration-cost memo on the exact batch-shape signature.  Safe
+        # only when pricing is a pure function of the signature: no
+        # replayed routing trace (position-dependent), no spec decode
+        # (step-ordinal-dependent draws), no statistical-MoE fallback
+        # (stateful RNG).  Exact keys mean a hit returns the identical
+        # float the slow path would have computed.
+        self._memo_on = (self.fast_path and self.routing is None
+                         and self.spec is None
+                         and self.perf.pricing_deterministic())
+        self._iter_memo = {}
+        # decode fast-forward needs the same determinism guarantees
+        self.supports_fast_forward = self._memo_on
 
     def warmup(self):
         pass
@@ -133,12 +152,79 @@ class SimBackend:
             n_tokens = int(pos.size)
             counts = [self.routing.counts_for(l, pos)
                       for l in range(self.routing.n_layers)]
-        cost = self.perf.iteration_latency(items, routing_counts=counts)
-        latency = cost.total_s + spec_s + self._pending_fetch_s
+        total = self._priced(items, counts)
+        latency = total + spec_s + self._pending_fetch_s
         self._pending_fetch_s = 0.0
         if self.expert_load is not None:
             self.expert_load.observe_counts(counts, n_tokens, now)
         return latency
+
+    def _priced(self, items: List[BatchItem], counts=None) -> float:
+        """Memoized ``iteration_latency``: identical batch shapes price
+        once (exact-key signature, so a hit is the identical float)."""
+        if not self._memo_on:
+            return self.perf.iteration_latency(
+                items, routing_counts=counts).total_s
+        sig = tuple((i.phase, i.tokens, i.context, i.start, i.completes)
+                    for i in items)
+        total = self._iter_memo.get(sig)
+        if total is None:
+            if len(self._iter_memo) >= _ITER_MEMO_CAP:
+                self._iter_memo.clear()
+            total = self.perf.iteration_latency(items).total_s
+            self._iter_memo[sig] = total
+        return total
+
+    def fast_forward(self, work: List[ScheduledWork], n_max: int,
+                     now: float, horizon: float) -> Optional[List[float]]:
+        """Price up to ``n_max`` successive decode iterations of a frozen
+        batch (every request emits 1 token/step).  Returns per-step
+        latencies ``[l1..ln]`` with every chained completion time strictly
+        before ``horizon`` and ``n >= 2``, or None when fewer than 2 steps
+        fit (the caller then runs the normal single-step path).  Step 1's
+        price includes any pending prefix-fetch charge, exactly as
+        ``execute`` would have applied it; the charge is only consumed on
+        success."""
+        items = to_batch_items(work)
+        fetch0 = self._pending_fetch_s
+        # cheap pre-cap: step 1's price (memoized) bounds how many steps
+        # can fit before the horizon, so a near barrier fails fast and a
+        # far one doesn't price thousands of steps it will then discard.
+        # Latencies grow with context, so the estimate only ever trims
+        # the window — the exact strict-inequality cap below decides.
+        span = horizon - now
+        if span != float("inf"):
+            l1 = self._priced(items) + fetch0
+            if l1 > 0.0:
+                est = int(span / l1) + 1
+                if est < 2:
+                    return None
+                n_max = min(n_max, est)
+        totals = self.perf.decode_window(items, n_max)
+        if totals is None:
+            # per-step fallback: same call sequence the slow path makes
+            totals = []
+            for i in range(n_max):
+                if i:
+                    for it in items:
+                        it.context += 1
+                totals.append(self._priced(items))
+        lat: List[float] = []
+        t = now
+        fetch = self._pending_fetch_s
+        for i, v in enumerate(totals):
+            v = float(v)
+            if i == 0:
+                v = v + fetch
+            t2 = t + v
+            if t2 >= horizon:
+                break
+            lat.append(v)
+            t = t2
+        if len(lat) < 2:
+            return None
+        self._pending_fetch_s = 0.0
+        return lat
 
     def _spec_step(self, decodes: List[ScheduledWork], now: float) -> float:
         """Price one speculative decode step for the scheduled decode set
@@ -152,29 +238,41 @@ class SimBackend:
         has one.  Acceptance does not change the step's cost, only its
         progress: that asymmetry is exactly the wasted-compute crossover
         ``benchmarks/spec_decode_sweep.py`` sweeps.
+
+        Tail clamp: a request with fewer than ``k + 1`` output tokens left
+        shrinks its draft/verify window to what it can still emit
+        (``k_eff = output_len - generated - 1``); the batch drafts to the
+        widest surviving window.  The real engine applies the identical
+        clamp, so near-budget steps neither price nor execute drafts the
+        request could never keep.
         """
         k = self.spec.k
         verify_items = []
         draft_items = []
+        k_step = 0
         for w in decodes:
-            ctx = w.request.context_len
+            req = w.request
+            k_eff = max(0, min(k, req.output_len - req.generated - 1))
+            k_step = max(k_step, k_eff)
+            ctx = req.context_len
             verify_items.append(BatchItem(
-                tokens=k + 1, context=ctx + k, phase="prefill",
+                tokens=k_eff + 1, context=ctx + k_eff, phase="prefill",
                 start=max(ctx - 1, 0), completes=False))
             draft_items.append(BatchItem(
                 tokens=1, context=ctx + 1, phase="decode"))
         latency = self.perf.iteration_latency(verify_items).total_s \
-            + (k + 1) * self.draft_perf.iteration_latency(
+            + (k_step + 1) * self.draft_perf.iteration_latency(
                 draft_items).total_s
         for w in decodes:
             req = w.request
+            k_eff = max(0, min(k, req.output_len - req.generated - 1))
             pos = max(req.generated - 1, 0)
             step = self._spec_steps.get(req.req_id, 0)
             self._spec_steps[req.req_id] = step + 1
-            accepted = self.spec_trace.accepted_for(pos, step)
+            accepted = min(self.spec_trace.accepted_for(pos, step), k_eff)
             self._emitted[req.req_id] = max(
                 1, min(accepted + 1, req.output_len - req.generated))
-            self.spec_tracker.observe(pos, accepted, now)
+            self.spec_tracker.observe(pos, accepted, now, proposed=k_eff)
         return latency
 
     def decode_emitted(self, req: SimRequest) -> int:

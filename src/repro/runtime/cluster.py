@@ -65,10 +65,21 @@ class ServingRuntime:
         self._shared_cache: Optional[RadixPrefixCache] = None
         for icfg in cfg.instances:
             self._build_instance(icfg)
+        self._refresh_skippable()
         self.router = GlobalRouter(
             cfg.router, list(self.instances.values()))
         self.finished: List[SimRequest] = []
         self._all_requests: List[SimRequest] = []
+
+    def _refresh_skippable(self):
+        """Mark iteration events skippable when instances are isolated:
+        no P/D wiring (a prefill completion triggers cross-instance KV
+        traffic) and no shared prefix cache (a sibling's iteration can
+        move shared radix/memory state).  Skippable events don't gate the
+        decode fast-forward horizon (``EventQueue.next_barrier_time``)."""
+        iso = not self.cfg.pd_map and self._shared_cache is None
+        for inst in self.instances.values():
+            inst.iter_skippable = iso
 
     # ---- instance construction (init-time AND elastic scale-out) ----
     def _build_instance(self, icfg: InstanceCfg) -> RuntimeInstance:
@@ -81,7 +92,9 @@ class ServingRuntime:
                 # the trace carries the device spec: memory model and
                 # off-grid analytical fallback price the same hardware
                 icfg = dataclasses.replace(icfg, hw=hwt.spec)
-            trace = hwt.to_trace()
+            # cached shared view: identical instances share one
+            # interpolation index + memo (fleet-scale fast path)
+            trace = hwt.shared_trace()
             # the trace also carries the device's interconnect parameters:
             # links between two trace-resolved instances derive bandwidth/
             # latency from the endpoint pair (min-bw rule), so mixed
@@ -183,6 +196,12 @@ class ServingRuntime:
         def add():
             inst = self._build_instance(icfg)
             self.router.instances.append(inst)
+            # a scale-out instance can flip isolation (e.g. first global-
+            # scope cache user): re-derive for the whole fleet.  Events
+            # already in the heap keep their old flag; that is safe —
+            # a new shared cache is bound to this instance's memory, and
+            # only events scheduled after this barrier can touch it.
+            self._refresh_skippable()
         self.queue.schedule_at(t, add, tag=f"scale:{icfg.name}")
 
     # ---- run ----

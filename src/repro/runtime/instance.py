@@ -40,6 +40,15 @@ class RuntimeInstance:
         self.cache = cache
         self.alive = True
         self.busy = False
+        # set by the cluster: True when this instance's iteration events
+        # provably touch only this instance (no P/D wiring, no shared
+        # prefix cache), making them skippable for other instances'
+        # decode fast-forward horizons
+        self.iter_skippable = False
+        # last observed decode-step latency: a cheap span pre-gate for
+        # fast-forward attempts (purely advisory — skipping an attempt
+        # never changes results, only which iterations get bulked)
+        self._ff_latency_hint: Optional[float] = None
         self.busy_time = 0.0
         self.iterations = 0
         self.total_tokens = 0
@@ -103,6 +112,8 @@ class RuntimeInstance:
             self.busy = False
             return
         self.busy = True
+        if self._maybe_fast_forward(work):
+            return
         self.decisions.append(
             tuple((w.request.req_id, w.phase, w.tokens) for w in work))
         latency = self.backend.execute(work, self.queue.now)
@@ -116,8 +127,12 @@ class RuntimeInstance:
             self.phase_tokens[phase] += tokens
             self.phase_time[phase] += latency
             self.phase_iters[phase] += 1
+            if phase == "decode":
+                # rough per-step cost, feeding the fast-forward pre-gate
+                self._ff_latency_hint = latency
         self.queue.schedule(latency, lambda: self._finish_iteration(work),
-                            tag=f"{self.name}.iter")
+                            tag=f"{self.name}.iter",
+                            skippable=self.iter_skippable)
 
     def _finish_iteration(self, work: List[ScheduledWork]):
         if not self.alive:
@@ -149,6 +164,127 @@ class RuntimeInstance:
                     req.t_first_token = now
                 if req.generated >= req.output_len:
                     self._finish_request(req)
+        self._drain_pending_decode()
+        self.busy = False
+        self._start_iteration()
+
+    # ---- decode fast-forward ----
+    #: max steps per bulk event — bounds the synthesized timeline arrays
+    #: (and matches the kv_watermark window) without limiting total skip
+    FF_CHUNK = 4096
+
+    def _maybe_fast_forward(self, work: List[ScheduledWork]) -> bool:
+        """Advance a provably frozen decode set many iterations in one
+        event.  Sound exactly when nothing can change the per-step
+        decision between now and the next barrier: the backend's pricing
+        is deterministic, no request is waiting/parked (admission retries
+        every slow-path iteration), every running request is mid-decode
+        (finishes can only land on the window's LAST step — the window
+        never extends past the earliest completion, and the apply event
+        runs the identical finish handling), and memory can grow the
+        whole window without a preemption the slow path wouldn't have
+        done.  Every synthesized
+        artifact — decisions, token times, watermark samples, phase
+        accounting, the KV ledger — is computed by the same arithmetic
+        the stepped path runs, so fast and exact modes are bit-identical
+        (``tests/test_fast_path.py``)."""
+        be = self.backend
+        if not getattr(be, "supports_fast_forward", False):
+            return False
+        if self._pending_decode:
+            return False
+        if self.scheduler.waiting and len(self.scheduler.running) \
+                < self.scheduler.cfg.max_batch_size:
+            # a free slot means the slow path would retry admission every
+            # iteration (with possible preemption on memory pressure); at
+            # capacity the admission loop is slot-gated before any side
+            # effect, no slot can free before the window's last step, and
+            # the apply event re-runs admission right there — so waiting
+            # requests stay frozen exactly as the stepped path would
+            # leave them
+            return False
+        if any(w.phase != "decode" for w in work):
+            return False
+        if any(r.state != DECODING for r in self.scheduler.running):
+            return False
+        # advisory pre-gate: when the span to the next barrier can't fit
+        # ~2 steps of the last observed decode latency, skip the attempt
+        # before paying any pricing.  A skipped window runs stepped —
+        # results are identical either way (fast-forward is
+        # identity-preserving), so a stale hint costs only speed.  This
+        # keeps barrier-dense shapes (P/D interleaving, saturated
+        # arrivals) from paying attempt overhead thousands of times.
+        horizon = self.queue.next_barrier_time()
+        span = horizon - self.queue.now
+        if span <= 0.0:
+            return False
+        hint = self._ff_latency_hint
+        if hint is not None and span < 2.0 * hint:
+            return False
+        n_max = min(w.request.output_len - w.request.generated
+                    for w in work)
+        n_max = min(n_max, self.FF_CHUNK)
+        if n_max < 2:
+            return False
+        reqs = [w.request for w in work]
+        n_max = self.scheduler.decode_window_steps(reqs, n_max)
+        if n_max < 2:
+            return False
+        lat = be.fast_forward(work, n_max, self.queue.now, horizon)
+        if lat is None:
+            return False
+        self._ff_latency_hint = lat[-1]
+        # commit: capture pool usage BEFORE the lump reservation, then
+        # grow the ledger exactly as n stepped reservations would have
+        used0 = self.mem.total_blocks - self.mem.free_blocks
+        used_deltas = self.scheduler.decode_window_usage(reqs, len(lat))
+        self.scheduler.advance_decode(reqs, len(lat))
+        decision = tuple((w.request.req_id, w.phase, w.tokens)
+                         for w in work)
+        times = []
+        t = self.queue.now
+        for l in lat:
+            t = t + l
+            times.append(t)
+        self.queue.schedule_at(
+            times[-1],
+            lambda: self._apply_fast_forward(work, decision, lat, times,
+                                             used_deltas, used0),
+            tag=f"{self.name}.iter", skippable=self.iter_skippable)
+        return True
+
+    def _apply_fast_forward(self, work: List[ScheduledWork], decision,
+                            lat, times, used_deltas, used0: int):
+        """Land the bulk event: replay the per-step bookkeeping the
+        stepped path would have produced, in the same accumulation
+        order (float sums are order-sensitive)."""
+        if not self.alive:
+            return
+        n = len(lat)
+        tokens = sum(w.tokens for w in work)
+        nrun = len(self.scheduler.running)
+        for i in range(n):
+            self.decisions.append(decision)
+            self.kv_watermark.append(
+                (times[i], used0 + int(used_deltas[i]), nrun))
+            self.busy_time += lat[i]
+            self.phase_time["decode"] += lat[i]
+        self.iterations += n
+        self.total_tokens += tokens * n
+        self.phase_tokens["decode"] += tokens * n
+        self.phase_iters["decode"] += n
+        for w in work:
+            req = w.request
+            req.generated += n
+            req.token_times.extend(times)
+            if req.t_first_token is None:
+                req.t_first_token = times[0]
+            if req.generated >= req.output_len:
+                # only possible on the window's last step (the window is
+                # capped at the earliest remaining-output count), so this
+                # runs at the same simulated time as the stepped path's
+                # finish — releasing KV, unpinning, notifying the cluster
+                self._finish_request(req)
         self._drain_pending_decode()
         self.busy = False
         self._start_iteration()

@@ -25,6 +25,8 @@ import heapq
 import itertools
 from typing import Callable, Dict, Iterator, List, Optional
 
+import numpy as np
+
 from repro.core.config import SchedulerCfg
 from repro.core.memory import MemoryModel
 from repro.core.perfmodel import BatchItem
@@ -267,6 +269,70 @@ class BatchScheduler:
                     req, protected=[w.request for w in work] + [req]):
                 work.append(ScheduledWork(req, dt, "decode"))
         return work
+
+    # ---- decode fast-forward (see RuntimeInstance._maybe_fast_forward) ----
+    def decode_window_steps(self, reqs: List[SimRequest], n_max: int) -> int:
+        """Largest ``n <= n_max`` successive decode steps the pool can grow
+        into without any reservation failing (so no preemption the slow
+        path wouldn't have done either).  Step ``i``'s reservation target
+        is ``tokens_held + (i - 1) + decode_tokens`` — exactly what
+        ``_ensure_decode_capacity`` would ask for at that step, since every
+        step emits one token.  Block demand is monotone in ``n``, so a
+        binary search finds the frontier."""
+        dt = max(self.cfg.decode_tokens, 1)
+        bt = self.mem.block_tokens
+        base = [self._tokens_held(r) + dt for r in reqs]
+        have = [self._reserved.get(r.req_id, 0) for r in reqs]
+        free = self.mem.free_blocks
+
+        def new_blocks(n: int) -> int:
+            s = 0
+            for b, h in zip(base, have):
+                nb = -(-(b + n - 1) // bt) - h
+                if nb > 0:
+                    s += nb
+            return s
+
+        if new_blocks(n_max) <= free:
+            return n_max
+        lo, hi = 1, n_max
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if new_blocks(mid) <= free:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo
+
+    def decode_window_usage(self, reqs: List[SimRequest],
+                            n: int) -> np.ndarray:
+        """Pool-usage deltas the window's per-step reservations add:
+        element ``i`` (0-based) is blocks-in-use growth after step
+        ``i + 1``'s start-of-iteration reservations — what the slow path's
+        watermark would have sampled.  Element 0 is always 0 (step 1's
+        reservation was made when the batch was composed)."""
+        dt = max(self.cfg.decode_tokens, 1)
+        bt = self.mem.block_tokens
+        base = np.array([self._tokens_held(r) + dt for r in reqs],
+                        dtype=np.int64)
+        have = np.array([self._reserved.get(r.req_id, 0) for r in reqs],
+                        dtype=np.int64)
+        steps = np.arange(n, dtype=np.int64)
+        need = -(-(base[:, None] + steps[None, :]) // bt)
+        return np.maximum(need - have[:, None], 0).sum(axis=0)
+
+    def advance_decode(self, reqs: List[SimRequest], n: int):
+        """Apply ``n`` decode steps' ledger growth in one lump.  Growth is
+        monotone, so the lump reservation yields the same final ledger,
+        pool peak and per-request ``kv_blocks_peak`` as stepping would
+        have; feasibility was pre-checked by ``decode_window_steps``."""
+        dt = max(self.cfg.decode_tokens, 1)
+        for r in reqs:
+            if not self._reserve_tokens(r, self._tokens_held(r)
+                                        + n - 1 + dt):
+                raise RuntimeError(
+                    f"fast-forward reservation failed for req "
+                    f"{r.req_id} — decode_window_steps over-estimated")
 
     def admit_remote(self, req: SimRequest, force: bool = False) -> bool:
         """P/D decode-side admission: KV already transferred; reserve blocks

@@ -213,10 +213,15 @@ class SpecDecodeTracker:
         # (t, position, accepted) per spec step, bounded
         self.timeline = deque(maxlen=timeline_len)
 
-    def observe(self, position: int, accepted: int, now: float):
+    def observe(self, position: int, accepted: int, now: float,
+                proposed: Optional[int] = None):
+        """``proposed`` is the drafts actually produced for this request
+        this step — ``k`` normally, fewer when the tail clamp shrank the
+        window near the output budget (both backends clamp identically, so
+        acceptance-rate accounting stays comparable)."""
         a = int(min(max(accepted, 0), self.k))
         self.steps += 1
-        self.proposed += self.k
+        self.proposed += self.k if proposed is None else int(proposed)
         self.accepted += a
         self.hist[a] += 1
         self.timeline.append((float(now), int(position), a))

@@ -1,4 +1,4 @@
-from repro.workload.arrival import gamma, poisson, uniform
+from repro.workload.arrival import diurnal, gamma, poisson, uniform
 from repro.workload.sharegpt import Request, ShareGPTConfig, generate, stats
 from repro.workload.datasets import DataConfig, token_batches
 from repro.workload.expert_skew import (SkewConfig, routing_for_model,

@@ -1,0 +1,89 @@
+"""Unit tests for the discrete-event queue (``repro.core.engine``):
+cancellation bookkeeping, ``run(until=...)`` re-push semantics, past-time
+clamping, the event cutoff, and the barrier-horizon view the decode
+fast-forward path relies on."""
+from repro.core.engine import EventQueue
+
+
+def test_cancel_updates_live_count_and_empty():
+    q = EventQueue()
+    seen = []
+    q.schedule(1.0, lambda: seen.append(1))
+    e2 = q.schedule(2.0, lambda: seen.append(2))
+    assert not q.empty
+    q.cancel(e2)
+    q.cancel(e2)                      # idempotent
+    assert q._n_live == 1
+    q.run()
+    assert seen == [1]
+    assert q.empty
+    assert q.now == 1.0
+    assert q.n_processed == 1         # cancelled events never count
+
+
+def test_run_until_repushes_future_event():
+    q = EventQueue()
+    seen = []
+    q.schedule(5.0, lambda: seen.append(q.now))
+    q.run(until=3.0)
+    assert q.now == 3.0 and seen == []
+    assert not q.empty                # the event survived the early stop
+    q.run(until=10.0)
+    assert seen == [5.0] and q.now == 5.0
+
+
+def test_schedule_at_past_time_clamps_to_now():
+    q = EventQueue()
+    seen = []
+    q.schedule(2.0, lambda: q.schedule_at(
+        1.0, lambda: seen.append(q.now)))
+    q.run()
+    assert seen == [2.0]              # never travels back in time
+
+
+def test_max_events_cutoff():
+    q = EventQueue()
+
+    def reschedule():
+        q.schedule(1.0, reschedule)
+
+    q.schedule(1.0, reschedule)
+    q.run(max_events=10)
+    assert q.n_processed == 10
+    assert not q.empty
+
+
+def test_next_barrier_skips_skippable_and_cancelled():
+    q = EventQueue()
+    q.schedule(1.0, lambda: None, skippable=True)
+    b1 = q.schedule(2.0, lambda: None)
+    b2 = q.schedule(3.0, lambda: None)
+    assert q.next_barrier_time() == 2.0
+    q.cancel(b1)
+    assert q.next_barrier_time() == 3.0
+    q.cancel(b2)
+    assert q.next_barrier_time() == float("inf")
+
+
+def test_next_barrier_excludes_the_executing_event():
+    """From inside a handler, the event being executed is no longer
+    pending — the horizon must look past it (this is what lets an
+    instance fast-forward from its own completion event)."""
+    q = EventQueue()
+    seen = []
+    q.schedule(1.0, lambda: seen.append(q.next_barrier_time()))
+    q.schedule(5.0, lambda: None)
+    q.run()
+    assert seen == [5.0]
+
+
+def test_next_barrier_capped_by_run_until():
+    """A ``run(until=...)`` bound is itself a horizon: a fast-forward
+    window computed mid-run must not outrun the caller's stopping point,
+    even when the next real barrier is farther out."""
+    q = EventQueue()
+    seen = []
+    q.schedule(1.0, lambda: seen.append(q.next_barrier_time()))
+    q.schedule(9.0, lambda: None)
+    q.run(until=4.0)
+    assert seen == [4.0]

@@ -1,0 +1,355 @@
+"""Fast-path parity suite: the simulator's indexed trace grids, iteration
+memo and decode fast-forward must be decision- and metric-IDENTICAL to the
+stepped exact mode (``fast_path=False``).
+
+Every parity test runs the same workload both ways and compares the full
+observable surface bit-for-bit: aggregate metrics, per-instance stats
+(including the kv_watermark timeline), the scheduling-decision sequences,
+phase accounting, and every request's token timestamps.  Equality is
+exact (``==`` on floats) — the fast path is engineered to run the same
+IEEE operation chains as the stepped path, not to approximate them.
+"""
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (ClusterCfg, InstanceCfg, PrefixCacheCfg, RouterCfg,
+                        SchedulerCfg, SpecCfg, TraceRegistry)
+from repro.core.cluster import Cluster
+from repro.core.config import TPU_V5E, HardwareSpec, ModelSpec
+from repro.core.perfmodel import BatchItem, PerfModel
+from repro.core.trace import Trace
+from repro.profiler import model_spec_from_arch, profile_arch
+from repro.workload import ShareGPTConfig, generate
+from repro.workload.sharegpt import Request
+
+ARCH = "llama3.1-8b-tiny"
+MOE_ARCH = "phimini-moe-tiny"
+
+
+@pytest.fixture(scope="module")
+def tiny_trace():
+    """Analytical op-level trace for the tiny dense arch (covers every
+    decode op, so ``decode_window`` takes the vectorized branch)."""
+    return profile_arch(ARCH, hardware="tpu-v5e", mode="analytical", tp=1)
+
+
+def _registry(trace):
+    r = TraceRegistry()
+    r.register(ARCH, trace)
+    return r
+
+
+def _inst(name="i0", **kw):
+    spec = model_spec_from_arch(get_config(ARCH))
+    base = dict(hw=TPU_V5E, model=spec, n_devices=1,
+                scheduler=SchedulerCfg(max_batch_size=8,
+                                       max_batch_tokens=2048),
+                trace_name=ARCH)
+    base.update(kw)
+    return InstanceCfg(name=name, **base)
+
+
+def _pair(ccfg, reqs, registry=None):
+    """Run fast and exact modes on one workload and assert the complete
+    observable surface is identical; returns both metric dicts + clusters
+    so tests can add scenario-specific assertions."""
+    def one(fast):
+        cl = Cluster(ccfg, traces=registry, fast_path=fast)
+        cl.submit_workload([copy.deepcopy(r) for r in reqs])
+        return cl.run(), cl
+
+    m_f, cl_f = one(True)
+    m_e, cl_e = one(False)
+    sf, se = dict(m_f), dict(m_e)
+    for k in ("sim_wall_s", "sim_events"):
+        sf.pop(k), se.pop(k)
+    i_f, i_e = sf.pop("instances"), se.pop("instances")
+    assert sf == se
+    assert set(i_f) == set(i_e)
+    for n in i_f:
+        assert i_f[n] == i_e[n], f"instance stats diverge: {n}"
+    for n, inst in cl_f.instances.items():
+        ref = cl_e.instances[n]
+        assert list(inst.decisions) == list(ref.decisions), n
+        assert inst.phase_time == ref.phase_time, n
+        assert inst.phase_tokens == ref.phase_tokens, n
+        assert inst.phase_iters == ref.phase_iters, n
+    rf = {r.req_id: r for r in cl_f._all_requests}
+    re_ = {r.req_id: r for r in cl_e._all_requests}
+    assert set(rf) == set(re_)
+    for rid in rf:
+        assert rf[rid].token_times == re_[rid].token_times, rid
+        assert rf[rid].t_first_token == re_[rid].t_first_token, rid
+        assert rf[rid].t_finish == re_[rid].t_finish, rid
+    return m_f, cl_f, m_e, cl_e
+
+
+# --------------------------------------------------------------------------
+# end-to-end parity
+# --------------------------------------------------------------------------
+
+def test_parity_decode_heavy_single_instance(tiny_trace):
+    """Offline burst of long decodes — the fast-forward's best case: the
+    bulk events must collapse the event count while reproducing the
+    stepped timeline exactly."""
+    rng = np.random.default_rng(0)
+    reqs = [Request(req_id=i, arrival=0.001 * i,
+                    prompt_tokens=rng.integers(0, 1000, 24).tolist(),
+                    output_len=120) for i in range(12)]
+    m_f, _, m_e, _ = _pair(ClusterCfg((_inst(),)), reqs,
+                           _registry(tiny_trace))
+    assert m_f["finished"] == 12
+    # the whole point: far fewer events for the identical result
+    assert m_f["sim_events"] * 4 < m_e["sim_events"]
+
+
+def test_parity_fleet_staggered_arrivals(tiny_trace):
+    """Multi-instance least-loaded routing with arrivals interleaving
+    decode — windows are horizon-capped by every arrival barrier."""
+    reqs = generate(ShareGPTConfig(n_requests=40, rate=200.0, vocab=1000,
+                                   mean_prompt=40, max_prompt=80,
+                                   mean_output=60, max_output=120, seed=4))
+    ccfg = ClusterCfg(tuple(_inst(f"i{k}") for k in range(3)),
+                      router=RouterCfg("least_loaded"))
+    m_f, cl_f, _, _ = _pair(ccfg, reqs, _registry(tiny_trace))
+    assert m_f["finished"] == 40
+    # the router spread work: parity must hold across instances
+    assert sum(1 for i in cl_f.instances.values() if i.iterations) >= 2
+
+
+def test_parity_under_memory_pressure_analytical():
+    """KV pressure forces mid-decode preemption; the fast path must stop
+    windows exactly where the ledger would have preempted (and this config
+    has no trace, covering the per-step analytical fallback)."""
+    model = ModelSpec(name="m", n_layers=2, d_model=64, n_heads=2,
+                      n_kv_heads=1, d_head=16, d_ff=128, vocab=100,
+                      param_bytes=1e6)
+    hw = HardwareSpec(name="tiny", peak_flops=1e12, hbm_bw=1e11,
+                      hbm_capacity=(1e6 + 30 * 16 * model.kv_bytes_per_token)
+                      / 0.9 + 1, link_bw=1e9)
+    icfg = InstanceCfg(name="i0", hw=hw, model=model,
+                       scheduler=SchedulerCfg(max_batch_size=8,
+                                              max_batch_tokens=4096))
+    reqs = [Request(req_id=i, arrival=0.0,
+                    prompt_tokens=list(range(100)), output_len=250)
+            for i in range(2)]
+    m_f, _, _, cl_e = _pair(ClusterCfg((icfg,)), reqs)
+    assert m_f["finished"] == 2
+    assert cl_e.instances["i0"].scheduler.n_preemptions > 0
+
+
+def test_parity_with_prefix_cache(tiny_trace):
+    """Instance-scope radix cache: fetch charges land on step 1 of a
+    window and cache hits/pins replay identically."""
+    reqs = generate(ShareGPTConfig(n_requests=30, rate=100.0, vocab=1000,
+                                   share_fraction=0.8, n_conversations=3,
+                                   mean_prompt=50, max_prompt=100,
+                                   mean_output=40, max_output=80, seed=11))
+    ccfg = ClusterCfg((_inst(prefix_cache=PrefixCacheCfg(enabled=True)),))
+    m_f, _, _, _ = _pair(ccfg, reqs, _registry(tiny_trace))
+    assert m_f["instances"]["i0"]["prefix_cache"]["hits"] > 0
+
+
+def test_parity_moe_statistical_router():
+    """An MoE instance whose trace does not cover ``moe_ffn`` prices
+    through the statistical router's RNG: the backend must refuse to
+    memoize or fast-forward, and fast_path=True then IS the exact path."""
+    spec = model_spec_from_arch(get_config(MOE_ARCH))
+    icfg = InstanceCfg(name="i0", hw=TPU_V5E, model=spec,
+                       scheduler=SchedulerCfg(max_batch_size=8,
+                                              max_batch_tokens=2048))
+    reqs = generate(ShareGPTConfig(n_requests=8, rate=100.0, vocab=1000,
+                                   mean_prompt=30, max_prompt=60,
+                                   mean_output=20, max_output=40, seed=5))
+    m_f, cl_f, _, _ = _pair(ClusterCfg((icfg,)), reqs)
+    assert m_f["finished"] == 8
+    assert not cl_f.instances["i0"].backend.supports_fast_forward
+
+
+# --------------------------------------------------------------------------
+# determinism gating
+# --------------------------------------------------------------------------
+
+def test_fast_forward_gating():
+    from repro.runtime.backends.sim import SimBackend
+    dense = _inst()
+    assert SimBackend(dense).supports_fast_forward
+    assert not SimBackend(dense, fast_path=False).supports_fast_forward
+
+    moe_spec = model_spec_from_arch(get_config(MOE_ARCH))
+    moe = InstanceCfg(name="m0", hw=TPU_V5E, model=moe_spec,
+                      scheduler=SchedulerCfg(max_batch_size=8))
+    # statistical router (no covering trace): stateful RNG -> exact mode
+    assert not SimBackend(moe).supports_fast_forward
+    # a trace covering moe_ffn in both phases restores determinism
+    t = Trace(model="m", hardware="h", tp=1)
+    for phase in ("prefill", "decode"):
+        for tok in (1, 16, 256):
+            t.add("moe_ffn", phase, tok, 256, 1e-4 * tok)
+    assert SimBackend(moe, trace=t).supports_fast_forward
+
+    # spec decode draws are step-ordinal-dependent -> exact mode
+    from repro.spec import register_acceptance
+    from repro.workload.acceptance import (AcceptanceConfig,
+                                           synthesize_acceptance)
+    register_acceptance("ffgate-acc", synthesize_acceptance(
+        AcceptanceConfig(alpha=0.5, k=3, period=16)))
+    spec_cfg = _inst(scheduler=SchedulerCfg(max_batch_size=8,
+                                            decode_tokens=4),
+                     spec=SpecCfg(enabled=True, k=3,
+                                  acceptance_trace="ffgate-acc"))
+    assert not SimBackend(spec_cfg).supports_fast_forward
+
+
+# --------------------------------------------------------------------------
+# decode_window == stepped iteration_latency (the pricing contract)
+# --------------------------------------------------------------------------
+
+def _stepped(pm, items, n):
+    items = [dataclasses.replace(i) for i in items]
+    out = []
+    for s in range(n):
+        if s:
+            for it in items:
+                it.context += 1
+        out.append(pm.iteration_latency(items).total_s)
+    return out
+
+
+def test_decode_window_matches_stepped_pricing_op_level(tiny_trace):
+    pm = PerfModel(_inst(), trace=tiny_trace)
+    items = [BatchItem(tokens=1, context=50 + 3 * i, phase="decode")
+             for i in range(4)]
+    win = pm.decode_window(items, 40)
+    assert win is not None and len(win) == 40
+    assert win.tolist() == _stepped(pm, items, 40)   # bit-identical
+
+
+def _iter_trace():
+    t = Trace(model="m", hardware="h", tp=1)
+    for B in (1, 2, 4, 8, 16):
+        for ctx in (16, 64, 256, 1024):
+            t.add("iter", "decode", B, ctx, 1e-4 * B + 1e-6 * ctx)
+    for T in (16, 64, 256):
+        t.add("iter", "prefill", T, T, 1e-3)
+    return t
+
+
+def test_decode_window_matches_stepped_pricing_iter_level():
+    pm = PerfModel(_inst(), trace=_iter_trace())
+    items = [BatchItem(tokens=1, context=60 + i, phase="decode")
+             for i in range(3)]
+    win = pm.decode_window(items, 25)
+    assert win is not None
+    assert win.tolist() == _stepped(pm, items, 25)
+
+
+def test_decode_window_refuses_unvectorizable_batches(tiny_trace):
+    pm = PerfModel(_inst(), trace=tiny_trace)
+    # a prefill item cannot be window-advanced
+    assert pm.decode_window([BatchItem(tokens=8, context=8,
+                                       phase="prefill")], 4) is None
+    # no trace at all -> per-item analytical fallback would engage
+    assert PerfModel(_inst()).decode_window(
+        [BatchItem(tokens=1, context=32, phase="decode")], 4) is None
+
+
+def test_decode_pad_to_prices_padded_width():
+    """Regression: a half-full decode batch must be priced at the padded
+    slot width (the engine pads to ``decode_pad_to``), not the occupancy —
+    and the window path must agree with the stepped path about it."""
+    spec = model_spec_from_arch(get_config(ARCH))
+    t = _iter_trace()
+    padded = InstanceCfg(name="i0", hw=TPU_V5E, model=spec,
+                         scheduler=SchedulerCfg(max_batch_size=16,
+                                                decode_pad_to=8))
+    pm = PerfModel(padded, trace=t)
+    items = [BatchItem(tokens=1, context=64, phase="decode")
+             for _ in range(2)]
+    got = pm.iteration_latency(items).total_s
+    assert got == t.interpolate("iter", "decode", 8, 64)      # B=8, not 2
+    assert got != t.interpolate("iter", "decode", 2, 64)
+    assert pm.decode_window(items, 10).tolist() == _stepped(pm, items, 10)
+    # without padding the occupancy is priced
+    plain = InstanceCfg(name="i1", hw=TPU_V5E, model=spec,
+                        scheduler=SchedulerCfg(max_batch_size=16))
+    pm0 = PerfModel(plain, trace=t)
+    assert pm0.iteration_latency(items).total_s \
+        == t.interpolate("iter", "decode", 2, 64)
+
+
+# --------------------------------------------------------------------------
+# trace index + memo + interpolation kernel
+# --------------------------------------------------------------------------
+
+def test_scalar_vector_lookup_bit_identity():
+    """``interpolate_many`` element i must equal the scalar
+    ``interpolate`` at the same key EXACTLY — the fast==exact contract
+    crosses this boundary.  The power-of-two grid creates exact distance
+    ties, exercising the stable tie-break."""
+    rng = np.random.default_rng(1)
+    t = Trace(model="m", hardware="h", tp=1)
+    for tok in (1, 2, 4, 8, 16):
+        for ctx in (16, 32, 64, 128):
+            t.add("op", "decode", tok, ctx, float(rng.uniform(1e-5, 1e-2)))
+    toks = rng.integers(1, 32, 200)
+    ctxs = rng.integers(1, 300, 200)
+    vec = t.interpolate_many("op", "decode", toks.astype(np.float64),
+                             ctxs.astype(np.float64))
+    for i in range(len(toks)):
+        assert vec[i] == t.interpolate("op", "decode", int(toks[i]),
+                                       int(ctxs[i]))
+
+
+def test_interpolation_matches_nearest4_idw_reference():
+    rng = np.random.default_rng(7)
+    t = Trace(model="m", hardware="h", tp=1)
+    pts = [(int(tok), int(ctx), float(rng.uniform(1e-5, 1e-2)))
+           for tok in (1, 3, 9, 27) for ctx in (10, 100, 1000)]
+    for tok, ctx, lat in pts:
+        t.add("op", "decode", tok, ctx, lat)
+
+    def ref(tok, ctx):
+        lt = np.log(np.float64(max(tok, 1)))
+        lc = np.log(np.float64(max(ctx, 1)))
+        d = [(np.log(np.float64(p[0])) - lt) ** 2
+             + 0.25 * (np.log(np.float64(p[1])) - lc) ** 2 for p in pts]
+        order = sorted(range(len(pts)), key=lambda i: (d[i], i))[:4]
+        if d[order[0]] < 1e-12:
+            return pts[order[0]][2]
+        w = [1.0 / d[i] for i in order]
+        return float(np.exp(sum(wi * np.log(np.float64(pts[i][2]))
+                                for wi, i in zip(w, order)) / sum(w)))
+
+    for tok, ctx in ((2, 50), (5, 500), (30, 5), (1, 10), (9, 100)):
+        assert t.interpolate("op", "decode", tok, ctx) \
+            == pytest.approx(ref(tok, ctx), rel=1e-9)
+    # exact grid hits return the measured latency verbatim
+    assert t.interpolate("op", "decode", 3, 100) == pts[4][2]
+
+
+def test_add_invalidates_index_and_memo():
+    t = Trace(model="m", hardware="h", tp=1)
+    t.add("op", "decode", 1, 16, 1e-4)
+    t.add("op", "decode", 8, 128, 8e-4)
+    v1 = t.interpolate("op", "decode", 4, 64)     # IDW blend, memoized
+    assert v1 == t.interpolate("op", "decode", 4, 64)
+    t.add("op", "decode", 4, 64, 3.14e-4)         # exact point at the key
+    v2 = t.interpolate("op", "decode", 4, 64)
+    assert v2 == 3.14e-4 and v2 != v1
+    # vector path sees the new index too
+    assert t.interpolate_many("op", "decode",
+                              np.asarray([4.0]), np.asarray([64.0]))[0] \
+        == 3.14e-4
+
+
+def test_single_point_grid_scales_linearly_in_tokens():
+    t = Trace(model="m", hardware="h", tp=1)
+    t.add("op", "prefill", 16, 16, 2e-3)
+    assert t.interpolate("op", "prefill", 32, 64) == pytest.approx(4e-3)
+    assert t.interpolate_many("op", "prefill", np.asarray([32.0]),
+                              np.asarray([64.0]))[0] == pytest.approx(4e-3)

@@ -166,6 +166,55 @@ def test_multi_token_ledger_reserves_verification_window():
     assert m["kv_blocks_peak_max"] > 0
 
 
+def test_tail_clamp_near_output_budget():
+    """A request with fewer than ``k + 1`` output tokens left shrinks its
+    draft/verify window to what it can still emit.  Both backends apply
+    the identical clamp, so the accounting stays comparable and neither
+    drafts tokens the request could never keep."""
+    from repro.serve import DriverCfg, ServeDriver, ServingEngine, \
+        SpecDecodeCfg
+    from repro.serve.driver import engine_instance_cfg
+
+    cfg = get_config(ARCH)
+    trace = synthesize_acceptance(
+        AcceptanceConfig(alpha=0.9, k=K, period=64, seed=8),
+        model=cfg.name)
+    register_acceptance("tail-acc", trace)
+    # outputs of 1..4 tokens with k=3: EVERY spec step runs clamped
+    reqs = _workload(cfg.vocab, n=6, seed=13, mean_output=2)
+    for r in reqs:
+        r.output_len = min(r.output_len, 4)
+    sched = _sched(K + 1)
+    eng = ServingEngine(cfg, max_batch=2, max_len=128, name="e0",
+                        spec=SpecDecodeCfg(draft=cfg, k=K,
+                                           acceptance=trace, draft_seed=7))
+    drv = ServeDriver([eng], DriverCfg(scheduler=sched))
+    real = drv.run([copy.deepcopy(r) for r in reqs], warmup=False)
+    icfg = engine_instance_cfg(
+        eng, sched, spec=SpecCfg(enabled=True, k=K,
+                                 acceptance_trace="tail-acc",
+                                 draft=model_spec_from_arch(cfg)))
+    sim_cluster = Cluster(ClusterCfg(instances=(icfg,),
+                                     router=RouterCfg("round_robin")))
+    sim_cluster.submit_workload([copy.deepcopy(r) for r in reqs])
+    sim = sim_cluster.run()
+    assert real["finished"] == sim["finished"] == len(reqs)
+    r_m = real["instances"]["e0"]["spec_decode"]
+    s_m = sim["instances"]["e0"]["spec_decode"]
+    for key in ("steps", "proposed_tokens", "accepted_tokens",
+                "emitted_tokens", "acceptance_rate", "accepted_hist"):
+        assert r_m[key] == s_m[key], key
+    # the clamp engaged: near-budget steps proposed fewer than k drafts
+    assert r_m["steps"] > 0
+    assert r_m["proposed_tokens"] < r_m["steps"] * K
+    # and no backend emitted past any request's budget
+    be = drv.runtime.instances["e0"].backend
+    for r in reqs:
+        assert len(be.out_tokens[r.req_id]) == r.output_len
+    for r in sim_cluster._all_requests:
+        assert r.generated == r.output_len
+
+
 # --------------------------------------------------------------------------
 # simulated speedup (sim backend only)
 # --------------------------------------------------------------------------
