@@ -5,6 +5,16 @@ wall-clock.
   PYTHONPATH=src python -m benchmarks.fleet_scale \
       [--instances 100] [--requests 1000] [--parity] [--out BENCH_simtime.json]
 
+``--autoscale`` switches to the multi-tenant SLO scenario: a two-class
+tenant mix (interactive: high priority / tight SLOs; batch: low priority /
+loose SLOs) over diurnal arrivals, served twice — by a FIXED fleet sized
+at the trough, and by the same fleet with the SLO-aware autoscaler allowed
+to grow to ``--instances``.  Reports per-tenant goodput (throughput
+counting only SLO-met requests) and the instance-count timeline, and
+asserts the autoscaler improves aggregate goodput over the fixed fleet.
+With ``--parity`` the autoscaled run is repeated in exact stepped mode and
+compared bit-for-bit (metrics, per-instance stats, action log, timeline).
+
 Every instance shares one analytical TPU-v5e trace object, so the indexed
 grids and the exact-key interpolation memo are shared fleet-wide.  Each
 mode (fast / exact) gets a FRESH TraceRegistry: the memo is warmed by
@@ -18,18 +28,22 @@ path reproduced the exact path's decisions and metrics bit-for-bit.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 
 import numpy as np
 
 from repro.core import (ClusterCfg, InstanceCfg, ParallelismCfg, RouterCfg,
-                        SchedulerCfg, TraceRegistry, simulate)
+                        SchedulerCfg, TenantClass, TraceRegistry, simulate)
 from repro.core.config import TPU_V5E
 from repro.profiler import model_spec_from_arch, profile_arch
 from repro.configs import get_config
+from repro.runtime.autoscale import AutoscaleCfg, SLOAutoscaler
 from repro.workload import diurnal
 from repro.workload.sharegpt import Request
+from repro.workload.tenants import (TenantSpec, TenantWorkloadCfg,
+                                    generate_tenants)
 
 ARCH = "llama3.1-8b"
 
@@ -139,6 +153,111 @@ def run(n_instances: int = 100, n_requests: int = 1000,
     return {"rows": rows, "parity": all_parity if exact else None}
 
 
+# --------------------------------------------------------------------------
+# --autoscale: multi-tenant SLO scenario, fixed fleet vs SLO-aware scaler
+# --------------------------------------------------------------------------
+
+INTERACTIVE = TenantClass("interactive", priority=10, slo_ttft_ms=1000.0,
+                          slo_tpot_ms=60.0, weight=3.0)
+BATCH = TenantClass("batch", priority=0, slo_ttft_ms=2000.0,
+                    slo_tpot_ms=2000.0, weight=1.0)
+
+
+def _tenant_workload(n_requests: int, rate: float, seed: int) -> list:
+    return generate_tenants(TenantWorkloadCfg(
+        tenants=(
+            TenantSpec(INTERACTIVE, rate_share=2.0, mean_prompt=96,
+                       max_prompt=192, mean_output=128, max_output=256),
+            TenantSpec(BATCH, rate_share=1.0, mean_prompt=128,
+                       max_prompt=256, mean_output=384, max_output=768)),
+        n_requests=n_requests, rate=rate, seed=seed,
+        arrival="diurnal", period_s=15.0, amplitude=0.95,
+        vocab=get_config(ARCH).vocab))
+
+
+def _goodput(metrics: dict) -> float:
+    return sum(t.get("goodput_tok_s", 0.0)
+               for t in metrics.get("tenants", {}).values())
+
+
+def run_autoscale(n_instances: int = 16, n_requests: int = 200,
+                  parity: bool = False, exact: bool = True) -> dict:
+    """Fixed trough-sized fleet vs the same fleet under the SLO-aware
+    autoscaler (allowed to grow to ``n_instances``), one tenant-mix
+    diurnal workload.  The goodput improvement is asserted — this is the
+    benchmark's acceptance gate, not just a report."""
+    start_n = max(n_instances // 4, 1)
+    # rate sized so the trough fleet is oversubscribed at the diurnal
+    # peak: pressure the autoscaler can actually relieve
+    rate = max(4.0, n_requests / 10.0)
+    reqs = _tenant_workload(n_requests, rate, seed=3)
+
+    def fleet(n):
+        ccfg = _cluster(n)
+        # small per-instance batch budget: instance capacity, not trace
+        # speed, is the bottleneck — the knob that makes fleet SIZE the
+        # variable under test
+        sched = SchedulerCfg(max_batch_size=4, max_batch_tokens=1024,
+                             policy="priority", share_guard_tokens=4096)
+        return ClusterCfg(tuple(dataclasses.replace(i, scheduler=sched)
+                                for i in ccfg.instances),
+                          router=ccfg.router)
+
+    def scaler():
+        return SLOAutoscaler(AutoscaleCfg(
+            interval_s=1.0, target_attainment=0.95, queue_high=2.0,
+            queue_low=0.25, min_instances=start_n,
+            max_instances=n_instances))
+
+    m_fixed = simulate(fleet(start_n), reqs, traces=_registry())
+    m_auto = simulate(fleet(start_n), reqs, traces=_registry(),
+                      autoscale=scaler())
+    g_fixed, g_auto = _goodput(m_fixed), _goodput(m_auto)
+    a = m_auto["autoscale"]
+    row = {
+        "config": "autoscale",
+        "instances_min": start_n, "instances_max": n_instances,
+        "requests": n_requests, "rate": rate,
+        "finished_fixed": m_fixed["finished"],
+        "finished_autoscaled": m_auto["finished"],
+        "goodput_fixed_tok_s": g_fixed,
+        "goodput_autoscaled_tok_s": g_auto,
+        "goodput_improvement": g_auto / max(g_fixed, 1e-9),
+        "tenants_fixed": m_fixed.get("tenants", {}),
+        "tenants_autoscaled": m_auto.get("tenants", {}),
+        "n_scale_out": a["n_scale_out"], "n_scale_in": a["n_scale_in"],
+        "instance_timeline": a["timeline"],
+        "actions": a["actions"],
+        "fast": {"wall_s": m_auto["sim_wall_s"],
+                 "events": m_auto["sim_events"]},
+    }
+    print(f"fleet,autoscale,min={start_n},max={n_instances},"
+          f"reqs={n_requests},goodput_fixed={g_fixed:.0f}tok/s,"
+          f"goodput_auto={g_auto:.0f}tok/s,"
+          f"improvement={row['goodput_improvement']:.2f}x,"
+          f"out={a['n_scale_out']},in={a['n_scale_in']}", flush=True)
+    assert g_auto > g_fixed, (
+        f"autoscaler failed to improve goodput: fixed={g_fixed:.1f} "
+        f"autoscaled={g_auto:.1f} tok/s")
+    ok = True
+    if exact:
+        m_exact = simulate(fleet(start_n), reqs, traces=_registry(),
+                           autoscale=scaler(), fast_path=False)
+        ok = (_strip(m_auto) == _strip(m_exact)
+              and set(m_auto["instances"]) == set(m_exact["instances"])
+              and all(m_auto["instances"][n] == m_exact["instances"][n]
+                      for n in m_auto["instances"]))
+        row["exact"] = {"wall_s": m_exact["sim_wall_s"],
+                        "events": m_exact["sim_events"]}
+        row["speedup"] = m_exact["sim_wall_s"] / m_auto["sim_wall_s"]
+        row["parity"] = ok
+        print(f"fleet,autoscale,parity={ok},"
+              f"speedup={row['speedup']:.1f}x", flush=True)
+    if parity and not ok:
+        raise SystemExit("autoscale parity FAILED")
+    return {"rows": [row], "parity": ok if exact else None}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--instances", type=int, default=100)
@@ -147,12 +266,17 @@ def main() -> None:
                     help="exit non-zero unless fast == exact everywhere")
     ap.add_argument("--fast-only", action="store_true",
                     help="skip the exact-path runs (no speedup/parity)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="multi-tenant SLO scenario: fixed fleet vs the "
+                         "SLO-aware autoscaler (goodput + instance-count "
+                         "timeline; asserts the autoscaler wins)")
     ap.add_argument("--out", default="BENCH_simtime.json")
     args = ap.parse_args()
     if args.parity and args.fast_only:
         ap.error("--parity requires the exact runs (drop --fast-only)")
-    out = run(n_instances=args.instances, n_requests=args.requests,
-              parity=args.parity, exact=not args.fast_only)
+    runner = run_autoscale if args.autoscale else run
+    out = runner(n_instances=args.instances, n_requests=args.requests,
+                 parity=args.parity, exact=not args.fast_only)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, default=float)
     print(f"fleet,wrote={args.out}", flush=True)

@@ -9,7 +9,7 @@ from repro.core.config import (CPU_HOST, PIM_DEVICE, RTX3090, TPU_V5E,
                                TPU_V6E, ClusterCfg, HardwareSpec, InstanceCfg,
                                MoECfg, ModelSpec, NetworkCfg, ParallelismCfg,
                                PrefixCacheCfg, RouterCfg, SchedulerCfg,
-                               SpecCfg)
+                               SpecCfg, TenantClass)
 from repro.core.metrics import aggregate
 from repro.core.request import SimRequest
 from repro.core.trace import Trace, TraceRegistry
@@ -17,8 +17,8 @@ from repro.core.trace import Trace, TraceRegistry
 __all__ = [
     "Cluster", "simulate", "ClusterCfg", "HardwareSpec", "InstanceCfg",
     "MoECfg", "ModelSpec", "NetworkCfg", "ParallelismCfg", "PrefixCacheCfg",
-    "RouterCfg", "SchedulerCfg", "SpecCfg", "aggregate", "SimRequest",
-    "Trace",
+    "RouterCfg", "SchedulerCfg", "SpecCfg", "TenantClass", "aggregate",
+    "SimRequest", "Trace",
     "TraceRegistry", "RTX3090", "TPU_V5E", "TPU_V6E", "PIM_DEVICE",
     "CPU_HOST",
 ]

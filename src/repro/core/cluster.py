@@ -39,7 +39,13 @@ def simulate(cfg: ClusterCfg, requests: Sequence[Request],
              traces: Optional[TraceRegistry] = None,
              hw: Optional["HardwareRegistry"] = None,
              until: Optional[float] = None,
-             fast_path: bool = True) -> Dict:
+             fast_path: bool = True,
+             autoscale=None) -> Dict:
+    """Run the workload to completion.  ``autoscale`` optionally attaches
+    an ``repro.runtime.autoscale.SLOAutoscaler`` (metrics land under
+    ``metrics()["autoscale"]``)."""
     cluster = Cluster(cfg, traces=traces, hw=hw, fast_path=fast_path)
+    if autoscale is not None:
+        cluster.attach_autoscaler(autoscale)
     cluster.submit_workload(requests)
     return cluster.run(until=until)

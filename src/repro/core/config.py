@@ -97,6 +97,27 @@ class ModelSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class TenantClass:
+    """A multi-tenant request class: scheduling identity + SLO targets.
+
+    Requests tagged with a tenant class carry its ``priority`` (the
+    ``policy="priority"`` scheduler key — larger runs first), its
+    ``weight`` (relative service share for the starvation guard,
+    ``SchedulerCfg.share_guard_tokens``) and its SLO targets through
+    router -> scheduler -> backends; ``metrics()["tenants"]`` rolls up
+    per-tenant TTFT/TPOT percentiles, SLO attainment and goodput
+    (throughput counting only SLO-met requests) against them, and the
+    SLO-aware autoscaler (``repro.runtime.autoscale``) scales the fleet
+    on the worst tenant's attainment.
+    """
+    name: str
+    priority: int = 0                # larger = scheduled first
+    slo_ttft_ms: float = 2000.0      # time-to-first-token target
+    slo_tpot_ms: float = 200.0       # time-per-output-token target
+    weight: float = 1.0              # relative share for the fairness guard
+
+
+@dataclasses.dataclass(frozen=True)
 class SchedulerCfg:
     policy: str = "fcfs"             # fcfs | priority | sjf
     max_batch_size: int = 256        # max concurrent sequences
@@ -115,6 +136,12 @@ class SchedulerCfg:
     # window and the token budget charges the real compute width; the
     # step still *emits* a variable 1..k+1 tokens per the acceptance draw)
     decode_tokens: int = 1
+    # weighted-share starvation guard for policy="priority": > 0 bounds
+    # how far a waiting tenant's weight-normalized service (scheduled
+    # tokens / tenant weight) may lag the head-of-queue tenant's before
+    # the scheduler admits the lagging tenant first.  0 disables the
+    # guard (pure priority order — low-priority tenants can starve).
+    share_guard_tokens: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

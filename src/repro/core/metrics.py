@@ -93,6 +93,64 @@ def merge_spec_decode(stats: List[Dict], timeline_len: int = 4096) -> Dict:
     }
 
 
+def slo_met(r: SimRequest) -> bool:
+    """A finished request meets its tenant SLO when TTFT and TPOT are
+    within the class targets (TPOT is vacuous for single-token outputs)."""
+    ttft = r.ttft()
+    if ttft is None or ttft > r.slo_ttft_ms / 1e3:
+        return False
+    tpot = r.tpot()
+    return tpot is None or tpot <= r.slo_tpot_ms / 1e3
+
+
+def tenant_rollup(requests: List[SimRequest]) -> Dict[str, Dict]:
+    """Per-tenant serving metrics (``metrics()["tenants"]``, both
+    backends): TTFT/TPOT p50/p95/p99, SLO attainment (fraction of
+    finished requests meeting both targets) and **goodput** — throughput
+    counting only SLO-met requests, in output tokens/s and requests/s.
+
+    Goodput is normalized by the *global* serving window (first arrival
+    to last finish over all tenants, the same span ``aggregate`` uses for
+    throughput), so per-tenant goodputs are comparable to each other and
+    sum toward the cluster figure.
+    """
+    done_all = [r for r in requests if r.state == FINISHED]
+    if not done_all:
+        return {}
+    span = max(max(r.t_finish for r in done_all)
+               - min(r.arrival for r in done_all), 1e-9)
+    out: Dict[str, Dict] = {}
+    for name in sorted({r.tenant for r in requests}):
+        reqs = [r for r in requests if r.tenant == name]
+        done = [r for r in reqs if r.state == FINISHED]
+        row: Dict = {"submitted": len(reqs), "finished": len(done)}
+        if done:
+            ttft = np.array([r.ttft() for r in done
+                             if r.ttft() is not None])
+            tpot = np.array([r.tpot() for r in done
+                             if r.tpot() is not None])
+
+            def pct(a, q):
+                return float(np.percentile(a, q)) if a.size else None
+
+            met = [r for r in done if slo_met(r)]
+            row.update({
+                "priority": done[0].priority,
+                "slo_ttft_ms": done[0].slo_ttft_ms,
+                "slo_tpot_ms": done[0].slo_tpot_ms,
+                "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
+                "ttft_p99_s": pct(ttft, 99),
+                "tpot_p50_s": pct(tpot, 50), "tpot_p95_s": pct(tpot, 95),
+                "tpot_p99_s": pct(tpot, 99),
+                "slo_attainment": len(met) / len(done),
+                "slo_met": len(met),
+                "goodput_tok_s": sum(r.generated for r in met) / span,
+                "goodput_req_s": len(met) / span,
+            })
+        out[name] = row
+    return out
+
+
 def aggregate(requests: List[SimRequest]) -> Dict:
     done = [r for r in requests if r.state == FINISHED]
     if not done:

@@ -21,6 +21,17 @@ class SimRequest:
     output_len: int
     model: str = "default"
 
+    # multi-tenant class identity (repro.core.config.TenantClass): the
+    # priority keys the ``policy="priority"`` scheduler, the weight feeds
+    # its starvation guard, and the SLO targets drive the per-tenant
+    # attainment/goodput rollup (``metrics()["tenants"]``) plus the
+    # SLO-aware autoscaler.
+    tenant: str = "default"
+    priority: int = 0
+    weight: float = 1.0
+    slo_ttft_ms: float = 2000.0
+    slo_tpot_ms: float = 200.0
+
     state: str = QUEUED
     instance: Optional[str] = None
     decode_instance: Optional[str] = None

@@ -17,6 +17,7 @@ scheduling-policy divergence term is zero by construction.
 import repro.core  # noqa: F401  (initialize the substrate package first:
 # repro.core's compat shims import runtime modules back, so entering the
 # runtime package cold must let core finish before runtime submodules load)
+from repro.runtime.autoscale import AutoscaleCfg, SLOAutoscaler
 from repro.runtime.backend import ExecutionBackend, KvHandoff
 from repro.runtime.cluster import ServingRuntime
 from repro.runtime.instance import RuntimeInstance
@@ -27,6 +28,7 @@ from repro.runtime.router import (GlobalRouter, HardwareAware, LeastLoaded,
 from repro.runtime.scheduler import BatchScheduler, ScheduledWork, WaitQueue
 
 __all__ = [
+    "AutoscaleCfg", "SLOAutoscaler",
     "ExecutionBackend", "KvHandoff", "ServingRuntime", "RuntimeInstance",
     "MatchResult", "RadixPrefixCache", "GlobalRouter", "RoutingPolicy",
     "RoundRobin", "LeastLoaded", "PrefixAware", "HardwareAware",

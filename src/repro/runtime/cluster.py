@@ -20,7 +20,7 @@ from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 from repro.core.config import ClusterCfg, InstanceCfg
 from repro.core.engine import EventQueue
 from repro.core.metrics import (aggregate, merge_expert_load,
-                                merge_spec_decode)
+                                merge_spec_decode, tenant_rollup)
 from repro.core.network import NetworkModel
 from repro.core.request import QUEUED, SimRequest
 from repro.core.trace import Trace, TraceRegistry
@@ -62,7 +62,14 @@ class ServingRuntime:
             from repro.hw.registry import default_registry as hw
         self.hw = hw
         self.instances: Dict[str, RuntimeInstance] = {}
+        # instances removed by elastic scale-in: kept for metrics (their
+        # stats stay visible with a "retired" marker) but out of routing
+        self.retired: Dict[str, RuntimeInstance] = {}
         self._shared_cache: Optional[RadixPrefixCache] = None
+        # live P/D pool membership — starts from the config map, mutable
+        # at runtime via rebalance_pd (the cfg dataclass stays frozen)
+        self.pd_map: Dict[str, tuple] = {
+            k: tuple(v) for k, v in (cfg.pd_map or {}).items()}
         for icfg in cfg.instances:
             self._build_instance(icfg)
         self._refresh_skippable()
@@ -70,6 +77,7 @@ class ServingRuntime:
             cfg.router, list(self.instances.values()))
         self.finished: List[SimRequest] = []
         self._all_requests: List[SimRequest] = []
+        self.autoscaler = None
 
     def _refresh_skippable(self):
         """Mark iteration events skippable when instances are isolated:
@@ -77,7 +85,7 @@ class ServingRuntime:
         traffic) and no shared prefix cache (a sibling's iteration can
         move shared radix/memory state).  Skippable events don't gate the
         decode fast-forward horizon (``EventQueue.next_barrier_time``)."""
-        iso = not self.cfg.pd_map and self._shared_cache is None
+        iso = not self.pd_map and self._shared_cache is None
         for inst in self.instances.values():
             inst.iter_skippable = iso
 
@@ -123,7 +131,7 @@ class ServingRuntime:
                                          name=f"{icfg.name}.cache")
         inst = RuntimeInstance(icfg, self.queue, backend, cache=cache)
         inst.on_request_done = self._on_done
-        if (self.cfg.pd_map or {}).get(icfg.name):
+        if self.pd_map.get(icfg.name):
             inst.on_prefill_done = self._handoff
         self.instances[icfg.name] = inst
         return inst
@@ -132,7 +140,7 @@ class ServingRuntime:
     def _handoff(self, req: SimRequest, src: RuntimeInstance):
         """Prefill finished on a prefill-role instance: move the KV to the
         least-loaded live decode target and admit there when it lands."""
-        names = (self.cfg.pd_map or {}).get(src.name, ())
+        names = self.pd_map.get(src.name, ())
         targets = [self.instances[n] for n in names
                    if n in self.instances and self.instances[n].alive]
         if not targets:
@@ -167,7 +175,15 @@ class ServingRuntime:
         for r in requests:
             sim = SimRequest(req_id=r.req_id, arrival=r.arrival,
                              prompt_tokens=list(r.prompt_tokens),
-                             output_len=r.output_len, model=r.model)
+                             output_len=r.output_len, model=r.model,
+                             # tenant class identity rides the request end
+                             # to end (router -> scheduler -> backends);
+                             # getattr keeps bare request objects working
+                             tenant=getattr(r, "tenant", "default"),
+                             priority=getattr(r, "priority", 0),
+                             weight=getattr(r, "weight", 1.0),
+                             slo_ttft_ms=getattr(r, "slo_ttft_ms", 2000.0),
+                             slo_tpot_ms=getattr(r, "slo_tpot_ms", 200.0))
             self._all_requests.append(sim)
             self.queue.schedule_at(
                 r.arrival,
@@ -204,6 +220,68 @@ class ServingRuntime:
             self._refresh_skippable()
         self.queue.schedule_at(t, add, tag=f"scale:{icfg.name}")
 
+    def remove_instance(self, t: float, name: str):
+        """Elastic scale-in at simulated time t: drain the instance and
+        preempt-and-requeue its in-flight work to the surviving fleet.
+        An explicit event, hence a decode fast-forward barrier by
+        construction — the fast path can never bulk decode iterations
+        across the removal.  The caller must leave at least one live
+        instance able to serve the orphans (the autoscaler's
+        ``min_instances`` guard)."""
+        self.queue.schedule_at(t, lambda: self._remove_instance(name),
+                               tag=f"scalein:{name}")
+
+    def _remove_instance(self, name: str):
+        inst = self.instances.pop(name, None)
+        if inst is None:
+            return
+        orphans = inst.drain()
+        if inst in self.router.instances:
+            self.router.instances.remove(inst)
+        self.retired[name] = inst
+        # late P/D KV transfers already in flight toward this instance
+        # restart from prefill elsewhere instead of parking forever
+        inst.on_dead_arrival = self._redispatch
+        self._refresh_skippable()
+        for req in orphans:
+            req.state = QUEUED
+            req.cached_prefix = 0
+            self.router.dispatch(req, self.queue.now)
+
+    def _redispatch(self, req: SimRequest):
+        """Full restart of a request whose instance disappeared under it
+        (scale-in racing a P/D KV transfer): progress and KV are gone."""
+        req.state = QUEUED
+        req.cached_prefix = 0
+        req.prefill_done_tokens = 0
+        req.generated = 0
+        req.n_restarts += 1
+        self.router.dispatch(req, self.queue.now)
+
+    def rebalance_pd(self, t: float, pd_map: Dict[str, Sequence[str]]):
+        """Replace the P/D pool membership at simulated time t (explicit
+        event => fast-forward barrier).  Prefill instances named in the
+        new map get handoff wiring; ones no longer named lose it.  KV
+        transfers already scheduled keep their original target."""
+        def apply():
+            self.pd_map = {k: tuple(v) for k, v in pd_map.items()}
+            for name, inst in self.instances.items():
+                inst.on_prefill_done = (self._handoff
+                                        if self.pd_map.get(name) else None)
+            self._refresh_skippable()
+        self.queue.schedule_at(t, apply, tag="rebalance_pd")
+
+    def attach_autoscaler(self, scaler):
+        """Wire an SLO-aware autoscaling policy (``repro.runtime.
+        autoscale.SLOAutoscaler``) to this runtime: the policy evaluates
+        on its cadence via explicit queue events and acts through
+        ``add_instance`` / ``remove_instance`` / ``rebalance_pd``, so
+        every scaling action is a fast-forward barrier.  Attach before
+        ``run``; returns the scaler."""
+        self.autoscaler = scaler
+        scaler.attach(self)
+        return scaler
+
     # ---- run ----
     def warmup(self):
         for inst in self.instances.values():
@@ -221,6 +299,18 @@ class ServingRuntime:
         m = aggregate(self._all_requests)
         m["sim_events"] = self.queue.n_processed
         m["instances"] = {n: i.stats() for n, i in self.instances.items()}
+        # scale-in keeps retired instances visible for accounting (marked,
+        # live instances win the name on a reuse collision)
+        for name, inst in self.retired.items():
+            if name not in m["instances"]:
+                m["instances"][name] = {**inst.stats(), "retired": True}
+        # per-tenant SLO/goodput rollup — same requests both backends see,
+        # so the tenant table is parity-assertable like everything else
+        tenants = tenant_rollup(self._all_requests)
+        if tenants:
+            m["tenants"] = tenants
+        if self.autoscaler is not None:
+            m["autoscale"] = self.autoscaler.metrics()
         m["network_bytes"] = self.network.stats()
         m["network_links"] = self.network.link_stats()
         # trace-driven MoE: cluster-level expert-load rollup (per-instance

@@ -71,6 +71,11 @@ class RuntimeInstance:
         # callbacks wired by the cluster
         self.on_prefill_done: Optional[Callable] = None   # P/D handoff
         self.on_request_done: Optional[Callable] = None
+        # set when the instance has been removed from the fleet (elastic
+        # scale-in): a late P/D arrival (KV transfer scheduled before the
+        # removal landed) is handed back for re-dispatch instead of being
+        # parked on an instance that will never iterate again
+        self.on_dead_arrival: Optional[Callable] = None
         # P/D arrivals that found no slot/memory; drained as capacity frees
         self._pending_decode: Deque[Tuple[SimRequest,
                                           Optional[KvHandoff]]] = deque()
@@ -263,6 +268,9 @@ class RuntimeInstance:
         n = len(lat)
         tokens = sum(w.tokens for w in work)
         nrun = len(self.scheduler.running)
+        # the window stands for n next_batch calls but composed only one:
+        # replay the other n - 1 steps' per-tenant service increments
+        self.scheduler.account_window(work, n - 1)
         for i in range(n):
             self.decisions.append(decision)
             self.kv_watermark.append(
@@ -331,6 +339,14 @@ class RuntimeInstance:
     def admit_decode(self, req: SimRequest,
                      handoff: Optional[KvHandoff] = None):
         """Request arrives with KV already transferred (P/D handoff)."""
+        if not self.alive and self.on_dead_arrival is not None:
+            # the instance was scaled in while this KV transfer was in
+            # flight: the transferred KV is gone with the instance, so the
+            # request restarts from prefill wherever the router sends it
+            # (a *failed* instance keeps the classic park-until-revive
+            # path below — on_dead_arrival is only set on removal)
+            self.on_dead_arrival(req)
+            return
         req.instance = self.name
         req.state = DECODING
         req.prefill_done_tokens = req.prompt_len - req.cached_prefix
@@ -385,6 +401,15 @@ class RuntimeInstance:
         self.backend.reset()
         return orphans
 
+    def drain(self) -> List[SimRequest]:
+        """Elastic scale-in: stop the instance and preempt-and-requeue all
+        in-flight work.  Same bookkeeping as ``fail`` — running requests
+        drop their KV and restart from prefill elsewhere (counted in
+        ``n_restarts``), queued requests just move — but the removal is
+        intentional: the cluster re-dispatches the orphans immediately and
+        retires the instance instead of awaiting a revive."""
+        return self.fail()
+
     def revive(self):
         self.alive = True
         self._kick()
@@ -422,6 +447,9 @@ class RuntimeInstance:
              "hw": self.cfg.hw_name or self.cfg.hw.name,
              "preemptions": self.scheduler.n_preemptions,
              "mem_peak_blocks": self.mem.peak_used,
+             # per-tenant service split (scheduled tokens) — the signal
+             # the weighted-share guard balances
+             "tenant_service": dict(self.scheduler.served_tokens),
              # scheduler ledger exposure: per-request blocks held right now
              # plus the sampled pool watermark timeline (vLLM-style plots)
              "kv_occupancy": self.scheduler.occupancy(),

@@ -40,6 +40,17 @@ class ScheduledWork:
     phase: str
 
 
+#: scheduling policies the wait queue understands; anything else is a
+#: config error and is rejected loudly at scheduler construction time
+#: (``policy="priority"`` silently degrading to arrival order was a bug).
+POLICIES = ("fcfs", "sjf", "priority")
+
+#: ``push_front`` key — sorts before any normal entry under every policy
+#: (priority keys are ``-req.priority``, so plain ``-1`` would let a
+#: priority>=1 request overtake a preempted one).
+_FRONT_KEY = -(1 << 62)
+
+
 class WaitQueue:
     """Policy-ordered wait queue.
 
@@ -50,6 +61,10 @@ class WaitQueue:
     """
 
     def __init__(self, policy: str = "fcfs"):
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown scheduler policy {policy!r}; valid policies: "
+                f"{', '.join(POLICIES)}")
         self.policy = policy
         self._heap: List[tuple] = []
         self._seq = itertools.count()
@@ -57,19 +72,38 @@ class WaitQueue:
     def _key(self, req: SimRequest) -> int:
         if self.policy == "sjf":
             return req.remaining_prefill        # shortest prompt first
-        return 0                                # fcfs / priority: arrival order
+        if self.policy == "priority":
+            return -req.priority                # tenant priority, then arrival
+        return 0                                # fcfs: arrival order
 
     def push(self, req: SimRequest):
         heapq.heappush(self._heap, (self._key(req), next(self._seq), req))
 
     def push_front(self, req: SimRequest):
-        heapq.heappush(self._heap, (-1, -next(self._seq), req))
+        heapq.heappush(self._heap, (_FRONT_KEY, -next(self._seq), req))
 
     def peek(self) -> SimRequest:
         return self._heap[0][2]
 
     def pop(self) -> SimRequest:
         return heapq.heappop(self._heap)[2]
+
+    def remove(self, req: SimRequest):
+        """Remove a specific queued request (the share guard admits from
+        the middle of the heap).  ``remove(peek())`` == ``pop()``."""
+        for i, entry in enumerate(self._heap):
+            if entry[2] is req:
+                last = self._heap.pop()
+                if i < len(self._heap):
+                    self._heap[i] = last
+                    heapq.heapify(self._heap)
+                return
+        raise ValueError(f"request {req.req_id} not in wait queue")
+
+    def entries(self) -> List[tuple]:
+        """Raw ``(key, seq, request)`` heap entries (policy order is NOT
+        the list order; compare the key tuples)."""
+        return self._heap
 
     def clear(self):
         self._heap.clear()
@@ -105,11 +139,62 @@ class BatchScheduler:
         self.n_preemptions = 0
         # exact KV accounting: req_id -> blocks currently reserved
         self._reserved: Dict[int, int] = {}
+        # per-tenant service: tokens scheduled so far (prefill + decode),
+        # the signal the weighted-share starvation guard compares and the
+        # per-tenant service split instance stats expose.  Decode
+        # fast-forward replays the stepped increments via
+        # ``account_window`` so both modes read identical counters.
+        self.served_tokens: Dict[str, int] = {}
         # wired by the instance: free backend-side state on preemption
         self.on_preempt: Optional[Callable[[SimRequest], None]] = None
 
     def enqueue(self, req: SimRequest):
         self.waiting.push(req)
+
+    # ---- per-tenant service accounting ----
+    def _account(self, work: List[ScheduledWork]):
+        for w in work:
+            t = w.request.tenant
+            self.served_tokens[t] = self.served_tokens.get(t, 0) + w.tokens
+
+    def account_window(self, work: List[ScheduledWork], extra_steps: int):
+        """Decode fast-forward replay: a window of ``n`` identical decode
+        steps was composed once but stands for ``n`` stepped ``next_batch``
+        calls; add the ``n - 1`` uncomposed steps' service so the counters
+        match the stepped path exactly (integer adds — bit-identical)."""
+        for w in work:
+            t = w.request.tenant
+            self.served_tokens[t] = (self.served_tokens.get(t, 0)
+                                     + w.tokens * extra_steps)
+
+    def _pick_admission(self) -> SimRequest:
+        """Next admission candidate (left in the queue until the KV
+        reservation succeeds).  Normally the policy head; under
+        ``policy="priority"`` with ``share_guard_tokens > 0`` a starved
+        tenant — one whose weight-normalized service lags the head
+        tenant's by at least the guard — is admitted first (earliest of
+        its queued requests), bounding priority starvation."""
+        head = self.waiting.peek()
+        guard = self.cfg.share_guard_tokens
+        if guard <= 0 or self.cfg.policy != "priority":
+            return head
+        best: Dict[str, tuple] = {}     # tenant -> best (key, seq, req)
+        for entry in self.waiting.entries():
+            t = entry[2].tenant
+            if t not in best or entry[:2] < best[t][:2]:
+                best[t] = entry
+        if len(best) < 2:
+            return head
+
+        def normalized(t: str) -> float:
+            return self.served_tokens.get(t, 0) / max(best[t][2].weight,
+                                                      1e-9)
+
+        starved = min(best, key=lambda t: (normalized(t), t))
+        if starved != head.tenant and \
+                normalized(starved) + guard <= normalized(head.tenant):
+            return best[starved][2]
+        return head
 
     # ---- KV block ledger ----
     def _reserve_tokens(self, req: SimRequest, tokens: int) -> bool:
@@ -217,7 +302,7 @@ class BatchScheduler:
         # 3. admit new requests while budget remains
         while self.waiting and tokens_left > 0 and \
                 len(self.running) < cfg.max_batch_size:
-            req = self.waiting.peek()
+            req = self._pick_admission()
             if not self._try_admit(req):
                 # memory pressure: admission defers to in-flight work (a
                 # request already composed into this batch is never evicted
@@ -229,7 +314,7 @@ class BatchScheduler:
                     break
                 if not self._try_admit(req):
                     break
-            self.waiting.pop()
+            self.waiting.remove(req)
             req.state = PREFILLING
             self.running.append(req)
             chunk = min(req.remaining_prefill,
@@ -247,20 +332,23 @@ class BatchScheduler:
                 work.append(ScheduledWork(req, dt, "decode"))
                 scheduled.append(req)
                 tokens_left -= dt
+        self._account(work)
         return work
 
     def _next_batch_exclusive(self) -> List[ScheduledWork]:
         """ServingEngine semantics: one whole-prompt prefill OR all decodes."""
         cfg = self.cfg
         if self.waiting and len(self.running) < cfg.max_batch_size:
-            req = self.waiting.peek()
+            req = self._pick_admission()
             if self._try_admit(req):
-                self.waiting.pop()
+                self.waiting.remove(req)
                 req.state = PREFILLING
                 self.running.append(req)
                 n = req.remaining_prefill
                 if n > 0:
-                    return [ScheduledWork(req, n, "prefill")]
+                    work = [ScheduledWork(req, n, "prefill")]
+                    self._account(work)
+                    return work
                 req.state = DECODING
         work = []
         dt = max(cfg.decode_tokens, 1)
@@ -268,6 +356,7 @@ class BatchScheduler:
             if req.state == DECODING and self._ensure_decode_capacity(
                     req, protected=[w.request for w in work] + [req]):
                 work.append(ScheduledWork(req, dt, "decode"))
+        self._account(work)
         return work
 
     # ---- decode fast-forward (see RuntimeInstance._maybe_fast_forward) ----

@@ -4,8 +4,12 @@ from repro.workload.datasets import DataConfig, token_batches
 from repro.workload.expert_skew import (SkewConfig, routing_for_model,
                                         synthesize_routing)
 from repro.workload.acceptance import AcceptanceConfig, synthesize_acceptance
+from repro.workload.tenants import (TenantSpec, TenantWorkloadCfg, apportion,
+                                    generate_tenants, workload_bytes)
 
 __all__ = ["gamma", "poisson", "uniform", "Request", "ShareGPTConfig",
            "generate", "stats", "DataConfig", "token_batches",
            "SkewConfig", "synthesize_routing", "routing_for_model",
-           "AcceptanceConfig", "synthesize_acceptance"]
+           "AcceptanceConfig", "synthesize_acceptance", "TenantSpec",
+           "TenantWorkloadCfg", "apportion", "generate_tenants",
+           "workload_bytes"]

@@ -27,6 +27,13 @@ class Request:
     model: str = "default"
     slo_ttft_ms: float = 2000.0
     slo_tpot_ms: float = 200.0
+    # multi-tenant class identity (see repro.core.config.TenantClass and
+    # repro.workload.tenants): carried onto the SimRequest at submission
+    # so the priority scheduler, the per-tenant metrics rollup and the
+    # SLO-aware autoscaler all see the same class.
+    tenant: str = "default"
+    priority: int = 0
+    weight: float = 1.0
 
     @property
     def prompt_len(self) -> int:

@@ -53,12 +53,16 @@ def _inst(name="i0", **kw):
     return InstanceCfg(name=name, **base)
 
 
-def _pair(ccfg, reqs, registry=None):
+def _pair(ccfg, reqs, registry=None, setup=None):
     """Run fast and exact modes on one workload and assert the complete
     observable surface is identical; returns both metric dicts + clusters
-    so tests can add scenario-specific assertions."""
+    so tests can add scenario-specific assertions.  ``setup(cluster)``
+    runs before workload submission — the hook scale/drain/autoscale
+    scenarios use to schedule their elastic events on both runs."""
     def one(fast):
         cl = Cluster(ccfg, traces=registry, fast_path=fast)
+        if setup is not None:
+            setup(cl)
         cl.submit_workload([copy.deepcopy(r) for r in reqs])
         return cl.run(), cl
 
@@ -72,8 +76,11 @@ def _pair(ccfg, reqs, registry=None):
     assert set(i_f) == set(i_e)
     for n in i_f:
         assert i_f[n] == i_e[n], f"instance stats diverge: {n}"
-    for n, inst in cl_f.instances.items():
-        ref = cl_e.instances[n]
+    assert set(cl_f.retired) == set(cl_e.retired)
+    live_and_retired = {**cl_f.retired, **cl_f.instances}
+    ref_pool = {**cl_e.retired, **cl_e.instances}
+    for n, inst in live_and_retired.items():
+        ref = ref_pool[n]
         assert list(inst.decisions) == list(ref.decisions), n
         assert inst.phase_time == ref.phase_time, n
         assert inst.phase_tokens == ref.phase_tokens, n
@@ -168,6 +175,104 @@ def test_parity_moe_statistical_router():
     m_f, cl_f, _, _ = _pair(ClusterCfg((icfg,)), reqs)
     assert m_f["finished"] == 8
     assert not cl_f.instances["i0"].backend.supports_fast_forward
+
+
+# --------------------------------------------------------------------------
+# elastic scaling parity: scale-out, drain, and the autoscaler loop are
+# explicit events (fast-forward barriers by construction) — the fast path
+# must reproduce the stepped timeline through every fleet change
+# --------------------------------------------------------------------------
+
+def _slow_iter_trace(decode_s=0.005, prefill_s=0.01):
+    """Constant-latency iter-level trace: slow enough for queues to build
+    (so the autoscaler has something to react to) while decode windows
+    stay perfectly vectorizable."""
+    t = Trace(model="m", hardware="h", tp=1)
+    for b in (1, 2, 4, 8, 16):
+        for ctx in (16, 256, 4096):
+            t.add("iter", "decode", b, ctx, decode_s)
+    for tok in (16, 64, 256, 1024):
+        t.add("iter", "prefill", tok, tok, prefill_s)
+    return t
+
+
+def test_parity_scale_out_mid_run():
+    """add_instance lands mid-decode: windows must stop at the barrier,
+    the router must see the newcomer identically in both modes."""
+    rng = np.random.default_rng(2)
+    # arrivals straddle the scale event: routing decisions after t=0.05
+    # see (and load-balance onto) the new instance
+    reqs = [Request(req_id=i, arrival=0.02 * i,
+                    prompt_tokens=rng.integers(0, 1000, 24).tolist(),
+                    output_len=100) for i in range(10)]
+    ccfg = ClusterCfg((_inst("i0"),), router=RouterCfg("least_loaded"))
+    m_f, cl_f, _, _ = _pair(
+        ccfg, reqs, _registry(_slow_iter_trace()),
+        setup=lambda cl: cl.add_instance(0.05, _inst("grown")))
+    assert m_f["finished"] == 10
+    assert cl_f.instances["grown"].iterations > 0
+
+
+def test_parity_scale_in_drain_mid_run():
+    """remove_instance drains mid-decode: orphans restart on survivors at
+    the identical simulated time in both modes, and the retired
+    instance's frozen stats stay parity-comparable."""
+    reqs = [Request(req_id=i, arrival=0.0,
+                    prompt_tokens=list(range(32)), output_len=60)
+            for i in range(4)]
+    ccfg = ClusterCfg((_inst("i0"), _inst("i1")),
+                      router=RouterCfg("round_robin"))
+    m_f, cl_f, _, _ = _pair(
+        ccfg, reqs, _registry(_slow_iter_trace()),
+        setup=lambda cl: cl.remove_instance(0.08, "i0"))
+    assert m_f["finished"] == 4
+    assert sorted(cl_f.retired) == ["i0"]
+    assert m_f["restarts"] > 0
+    assert m_f["instances"]["i0"]["retired"] is True
+
+
+def test_parity_autoscaler_full_loop():
+    """The SLO autoscaler observing, scaling out under pressure and
+    scaling in as load drains — every tick and action an explicit event —
+    must be bit-identical across fast and exact modes (decisions,
+    metrics, action log, instance-count timeline)."""
+    from repro.core.config import TenantClass
+    from repro.runtime.autoscale import AutoscaleCfg, SLOAutoscaler
+    from repro.workload.tenants import (TenantSpec, TenantWorkloadCfg,
+                                        generate_tenants)
+    wl = generate_tenants(TenantWorkloadCfg(
+        tenants=(
+            TenantSpec(TenantClass("interactive", priority=10,
+                                   slo_ttft_ms=500, slo_tpot_ms=10,
+                                   weight=3.0),
+                       rate_share=2.0, mean_prompt=30, max_prompt=60,
+                       mean_output=40, max_output=80),
+            TenantSpec(TenantClass("batch", priority=0,
+                                   slo_ttft_ms=10_000, slo_tpot_ms=1000),
+                       rate_share=1.0, mean_prompt=60, max_prompt=120,
+                       mean_output=120, max_output=240)),
+        n_requests=60, rate=100.0, arrival="diurnal", seed=3, vocab=1000))
+    sched = SchedulerCfg(max_batch_size=4, max_batch_tokens=512,
+                         policy="priority", share_guard_tokens=512)
+    ccfg = ClusterCfg((_inst("i0", scheduler=sched),),
+                      router=RouterCfg("least_loaded"))
+
+    def attach(cl):
+        cl.attach_autoscaler(SLOAutoscaler(AutoscaleCfg(
+            interval_s=0.5, queue_high=2.0, queue_low=0.5,
+            min_instances=1, max_instances=6)))
+
+    m_f, cl_f, m_e, _ = _pair(ccfg, wl, _registry(_slow_iter_trace()),
+                              setup=attach)
+    assert m_f["finished"] == 60
+    a = m_f["autoscale"]
+    assert a["n_scale_out"] > 0 and a["n_scale_in"] > 0
+    assert a == m_e["autoscale"]          # action log + timeline, exactly
+    # the fleet actually breathed: timeline reaches >1 and returns toward 1
+    sizes = [n for _, n in a["timeline"]]
+    assert max(sizes) > 1 and sizes[-1] < max(sizes)
+    # per-tenant rollup is part of the parity surface too
+    assert m_f["tenants"] == m_e["tenants"]
 
 
 # --------------------------------------------------------------------------
