@@ -7,6 +7,14 @@ prefix-cache / P-D code path (``simulate`` -> SimBackend, ``ServeDriver`` ->
 JaxBackend), so every dispatch decision is identical by construction (see
 tests/test_runtime_parity.py) and the reported error isolates the hardware
 model. Run on a quiet machine: the real engine is wall-clock timed.
+
+``--kernels`` additionally sweeps hwtrace/3 kernel sub-buckets (per-kernel
+latencies; ``repro.profiler.kernel_profiler``) and reports, for every
+measured whole-iteration bucket, the gap between the measured iteration
+and the kernel composition ``L*attention + L*ffn + head`` plus each
+kernel's share of it — attributing fidelity error to a specific kernel
+(e.g. "decode error comes from attention at long context") instead of
+one opaque per-config percentage.
 """
 from __future__ import annotations
 
@@ -18,6 +26,8 @@ from benchmarks.common import (DENSE_TINY, MOE_TINY, engine_matched_instance,
 from repro.configs import get_config
 from repro.core import ClusterCfg, NetworkCfg, RouterCfg, TraceRegistry, \
     simulate
+from repro.hw.trace import kern_op
+from repro.profiler import model_spec_from_arch
 from repro.profiler.runtime_profiler import runtime_trace
 from repro.serve import DriverCfg, ServeDriver, ServingEngine
 from repro.workload import ShareGPTConfig, generate
@@ -73,11 +83,48 @@ def _run_sim(config: str, arch: str, reqs, registry):
     return simulate(ccfg, reqs, traces=registry)
 
 
-def run(quick: bool = False):
+def kernel_attribution(tr, arch: str, backend: str = "reference"):
+    """Per-kernel error attribution: for every measured whole-iteration
+    bucket with full kernel coverage, the measured latency, the kernel
+    composition ``L*attention + L*ffn + head`` (PerfModel's kernel tier),
+    the gap between them (framework/scheduling overhead the kernel tier
+    cannot see — or a mispriced kernel), and each kernel's share of the
+    composition.  The share column is what turns one opaque error
+    percentage into "the attention kernel at context 256"."""
+    spec = model_spec_from_arch(get_config(arch))
+    L = spec.n_layers
+    names = ("attention", "moe_gmm" if spec.is_moe else "mlp", "head")
+    rows = []
+    for phase in ("prefill", "decode"):
+        for p in tr._grid("iter", phase):
+            vals = [tr.interpolate(kern_op(backend, kn), phase,
+                                   p.tokens, p.context) for kn in names]
+            if any(v is None for v in vals):
+                continue
+            parts = {names[0]: L * vals[0], names[1]: L * vals[1],
+                     names[2]: vals[2]}
+            comp = sum(parts.values())
+            rows.append({
+                "phase": phase, "tokens": p.tokens, "context": p.context,
+                "iter_ms": p.latency_s * 1e3, "kernel_sum_ms": comp * 1e3,
+                "gap_pct": 100.0 * (comp - p.latency_s) / p.latency_s,
+                "share": {kn: v / comp for kn, v in parts.items()},
+            })
+    return rows
+
+
+def run(quick: bool = False, kernels: bool = False):
     registry = TraceRegistry()
     traces = {}
+    attribution = {}
     for arch in (DENSE_TINY, MOE_TINY):
         tr = runtime_trace(arch, max_batch=4, max_len=512).to_trace()
+        if kernels:
+            from repro.profiler.kernel_profiler import kernel_points
+            # reference rows — the fig2 engines run the reference backend
+            tr.points.extend(kernel_points(arch, "reference",
+                                           max_batch=4, max_len=512))
+            attribution[arch] = kernel_attribution(tr, arch)
         registry.register(arch, tr)
         traces[arch] = tr.meta
 
@@ -119,9 +166,24 @@ def run(quick: bool = False):
     summary = {"rows": rows, "traces": traces,
                "mean_err_pct": float(np.nanmean(errs)),
                "max_err_pct": float(np.nanmax(errs))}
+    if attribution:
+        summary["kernel_attribution"] = attribution
+        for arch, arows in attribution.items():
+            for r in arows:
+                top = max(r["share"], key=r["share"].get)
+                print(f"fig2-kern,{arch},{r['phase']},tok={r['tokens']},"
+                      f"ctx={r['context']},gap={r['gap_pct']:+.1f}%,"
+                      f"top={top}({100 * r['share'][top]:.0f}%)", flush=True)
     return summary
 
 
 if __name__ == "__main__":
-    out = run()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also sweep hwtrace/3 kernel sub-buckets and "
+                         "report per-kernel error attribution")
+    a = ap.parse_args()
+    out = run(quick=a.quick, kernels=a.kernels)
     print(json.dumps(out, indent=1, default=float))

@@ -81,6 +81,11 @@ class ArchConfig:
     # dtypes
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
+    # kernel backend for the serving hot path: "reference" (pure-JAX
+    # twins), "pallas" (flash prefill / paged decode / MoE GMM), or
+    # "auto" (pallas on TPU/GPU, interpret-mode pallas for CPU
+    # validation, reference otherwise) — see repro.kernels.resolve_backend
+    kernels: str = "reference"
 
     @property
     def n_q_per_kv(self) -> int:

@@ -213,6 +213,10 @@ class InstanceCfg:
     role: str = "unified"            # unified | prefill | decode
     kv_block_tokens: int = 16        # PagedAttention block size
     trace_name: Optional[str] = None  # perf-model trace to use
+    # which kernel backend's hwtrace/3 sub-bucket rows price this instance
+    # ("pallas" | "reference").  None auto-picks: pallas rows when the
+    # trace carries them, else reference, else no kernel tier.
+    kernel_backend: Optional[str] = None
     # hardware by name: resolved through the repro.hw registry at instance
     # build time (measured HardwareTrace if one is loaded, synthetic
     # analytical trace otherwise).  Lets one cluster mix accelerators —

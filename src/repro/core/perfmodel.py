@@ -6,9 +6,14 @@ chunks + decode steps) from a hardware trace, in fidelity order:
 1. **iter-level points** (``iter``/``extend``/``kv_export``) — whole
    measured iterations captured by ``repro.profiler.runtime_profiler``
    through the unified runtime's ``JaxBackend``; highest fidelity.
-2. **operator-level points** — per-op-class latencies interpolated over
+2. **kernel-level points** (hwtrace/3 ``kern:<backend>:<kernel>`` rows,
+   swept by ``repro.profiler.kernel_profiler``) — per-kernel latencies
+   (attention / mlp / moe_gmm / head) composed as ``L * attention +
+   L * ffn + head``; lets fidelity studies attribute error to one kernel
+   and compares kernel backends (reference vs pallas) on the same grid.
+3. **operator-level points** — per-op-class latencies interpolated over
    the (tokens, context) grid (paper §II-A) and composed per layer.
-3. **analytical roofline** — per-query fallback from the hardware spec for
+4. **analytical roofline** — per-query fallback from the hardware spec for
    op/shape combos no trace covers.
 
 Traces arrive as portable ``repro.hw.HardwareTrace`` artifacts resolved by
@@ -28,6 +33,7 @@ from repro.core.config import InstanceCfg
 from repro.core.expert import ExpertExecutionModel, ExpertRouter
 from repro.core.network import allreduce_time
 from repro.core.trace import Trace
+from repro.hw.trace import kern_op
 
 
 @dataclasses.dataclass
@@ -203,6 +209,78 @@ class PerfModel:
             total += v
         return IterationCost(total, {"iter": total})
 
+    # ---- kernel-granular tier (hwtrace/3 sub-buckets) ----
+    def _kernel_backend(self) -> Optional[str]:
+        """Which backend's ``kern:*`` rows price this instance.  The cfg's
+        ``kernel_backend`` pins it; otherwise prefer pallas rows (they match
+        what the pallas engine runs) and fall back to reference rows.  None
+        when the trace carries no kernel sub-buckets for any candidate.
+        Resolved once per model — traces are read-only in the sim."""
+        bk = getattr(self, "_kern_bk", False)
+        if bk is not False:
+            return bk
+        bk = None
+        tr = self.trace
+        if tr is not None:
+            prefs = ([self.cfg.kernel_backend] if self.cfg.kernel_backend
+                     else ["pallas", "reference"])
+            for cand in prefs:
+                if tr._grid(kern_op(cand, "attention"), "decode") \
+                        or tr._grid(kern_op(cand, "attention"), "prefill"):
+                    bk = cand
+                    break
+        self._kern_bk = bk
+        return bk
+
+    def _kernel_names(self) -> Tuple[str, str, str]:
+        """The three kernel kinds one forward pass composes from."""
+        return ("attention", "moe_gmm" if self.m.is_moe else "mlp", "head")
+
+    def _kernel_coverage(self, phase: str) -> bool:
+        """All three kernel grids present for ``phase``?"""
+        bk = self._kernel_backend()
+        return bk is not None and all(
+            self.trace._grid(kern_op(bk, kn), phase)
+            for kn in self._kernel_names())
+
+    def _kernel_level(self, items: List[BatchItem]) -> Optional[IterationCost]:
+        """Kernel-granularity pricing: ``L * attention + L * (mlp|moe_gmm) +
+        head`` from hwtrace/3 sub-bucket rows, at the op-level tier's batch
+        key (tokens = batch tokens, context = max context).  TP collectives
+        and PP hops are composed analytically on top — single-device kernel
+        sweeps cannot see them.  None when any kernel grid is missing for
+        the batch's phase (op-level composition then takes over)."""
+        bk = self._kernel_backend()
+        if bk is None:
+            return None
+        tr = self.trace
+        m = self.m
+        phase = "prefill" if any(i.phase == "prefill" for i in items) \
+            else "decode"
+        T = sum(it.tokens for it in items)
+        ctx = max(it.context for it in items)
+        names = self._kernel_names()
+        vals = []
+        for kn in names:
+            v = tr.interpolate(kern_op(bk, kn), phase, T, ctx)
+            if v is None:
+                return None
+            vals.append(v)
+        L = m.n_layers
+        t_attn = L * vals[0]
+        t_ffn = L * vals[1]
+        t_head = vals[2]
+        ar_bytes = T * m.d_model * m.dtype_bytes
+        t_coll = 2 * L * allreduce_time(ar_bytes, self.tp, self.hw.link_bw)
+        total = t_attn + t_ffn + t_head + t_coll
+        if self.pp > 1:
+            hop = T * m.d_model * m.dtype_bytes / self.hw.link_bw + 5e-6
+            total = total + (self.pp - 1) * hop
+        return IterationCost(total, {
+            "kernel:attention": t_attn, f"kernel:{names[1]}": t_ffn,
+            "kernel:head": t_head, "collective": t_coll,
+            "kernel_backend": bk})
+
     def _moe_layer_cost(self, items: List[BatchItem], T: int,
                         routing_counts=None) -> float:
         """Mean per-MoE-layer analytical cost for this batch.
@@ -248,6 +326,9 @@ class PerfModel:
         if not items:
             return IterationCost(0.0, {})
         lvl = self._iter_level(items)
+        if lvl is not None:
+            return lvl
+        lvl = self._kernel_level(items)
         if lvl is not None:
             return lvl
         m = self.m
@@ -312,7 +393,15 @@ class PerfModel:
         if not self.m.is_moe or self.routing is not None:
             return True
         tr = self.trace
-        return tr is not None and bool(tr._grid("moe_ffn", "prefill")) \
+        if tr is None:
+            return False
+        if self._kernel_coverage("prefill") and \
+                self._kernel_coverage("decode"):
+            # complete hwtrace/3 kernel coverage: every batch is priced at
+            # the kernel tier (or above), so the analytical MoE thunk —
+            # and with it the router RNG — is never reached
+            return True
+        return bool(tr._grid("moe_ffn", "prefill")) \
             and bool(tr._grid("moe_ffn", "decode"))
 
     def decode_window(self, items: List[BatchItem],
@@ -341,6 +430,30 @@ class PerfModel:
                    / len(items)).astype(np.int64)
             return tr.interpolate_many("iter", "decode", np.full(n, B), ctx)
         m = self.m
+        bk = self._kernel_backend()
+        if bk is not None and self._kernel_coverage("decode"):
+            # kernel tier, vectorized: same interpolation kernel and the
+            # same accumulation order as ``_kernel_level`` — bit-identical
+            # to stepped pricing
+            names = self._kernel_names()
+            L = m.n_layers
+            T = sum(it.tokens for it in items)
+            ctx = max(it.context for it in items) + steps
+            tok = np.full(n, T)
+            t_attn = L * tr.interpolate_many(kern_op(bk, names[0]),
+                                             "decode", tok, ctx)
+            t_ffn = L * tr.interpolate_many(kern_op(bk, names[1]),
+                                            "decode", tok, ctx)
+            t_head = tr.interpolate_many(kern_op(bk, names[2]),
+                                         "decode", tok, ctx)
+            ar_bytes = T * m.d_model * m.dtype_bytes
+            t_coll = 2 * L * allreduce_time(ar_bytes, self.tp,
+                                            self.hw.link_bw)
+            total = t_attn + t_ffn + t_head + t_coll
+            if self.pp > 1:
+                hop = T * m.d_model * m.dtype_bytes / self.hw.link_bw + 5e-6
+                total = total + (self.pp - 1) * hop
+            return total
         ops = ("attn_qkv", "attn_score",
                "moe_ffn" if m.is_moe else "mlp", "norm", "head", "embed")
         if not all(tr._grid(op, "decode") for op in ops):

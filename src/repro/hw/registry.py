@@ -105,7 +105,7 @@ class HardwareRegistry:
                 tp: int = 1) -> HardwareTrace:
         """The trace that prices ``model`` on ``device`` at tensor-parallel
         degree ``tp`` (see module doc).  A registered trace must match the
-        model AND carry a grid profiled at ``tp`` (``hwtrace/2`` artifacts
+        model AND carry a grid profiled at ``tp`` (multi-grid artifacts
         hold one grid per swept degree) — trace latencies embed the
         parallelism they were captured at; anything else gets a synthetic
         grid at the right tp."""

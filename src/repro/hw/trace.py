@@ -10,10 +10,10 @@ producing one of these files (``python -m repro.profiler profile --device
 <name> --tp 1,2 --out traces/<name>.json``) and referencing it from an
 ``InstanceCfg`` by ``hw_name`` (see ``docs/adding-hardware.md``).
 
-JSON schema (version ``hwtrace/2``)::
+JSON schema (version ``hwtrace/3``)::
 
     {
-      "schema": "hwtrace/2",          # required; hwtrace/1 still loads
+      "schema": "hwtrace/3",          # required; hwtrace/1 and /2 still load
       "device": "tpu-v6e",            # hardware name (registry key)
       "model": "llama3.1-8b-tiny",    # arch the op tables were captured for
       "interconnect": {               # network parameters of the device
@@ -35,6 +35,14 @@ JSON schema (version ``hwtrace/2``)::
             "tokens": 64,             #   kv_export | attn_qkv | attn_score
             "context": 64,            #   | mlp | moe_ffn | norm | head |
             "latency_s": 0.0123},     #   embed  (see repro.core.trace)
+           ...],
+         "kernels": [                 #   optional kernel sub-buckets (new
+           {"kernel": "attention",    #   in hwtrace/3): per-kernel latency
+            "backend": "pallas",      #   rows keyed by the kernel backend
+            "phase": "decode",        #   that produced them; kernel kinds:
+            "tokens": 4,              #   attention | mlp | moe_gmm | head
+            "context": 128,           #   (see repro.profiler.kernel_profiler)
+            "latency_s": 3.1e-4},
            ...]},
         {"tp": 2, "points": [...]}
       ],
@@ -42,8 +50,16 @@ JSON schema (version ``hwtrace/2``)::
     }
 
 The legacy ``hwtrace/1`` layout (top-level ``"tp"`` + ``"points"`` instead
-of ``"grids"``) loads transparently as a single-grid artifact; ``save``
-always emits ``hwtrace/2``.
+of ``"grids"``) loads transparently as a single-grid artifact, and
+``hwtrace/2`` (no ``"kernels"`` lists) loads as an artifact with op-level
+grids only; ``save`` always emits ``hwtrace/3``, so loading an older file
+and re-saving it migrates in place.
+
+In memory, kernel rows are ordinary ``OpPoint``s whose op string is
+``kern:<backend>:<kernel>`` (e.g. ``kern:pallas:attention``) — the
+``Trace`` interpolation machinery is op-string-agnostic, so kernel grids
+get indexing/memoization for free and ``PerfModel`` prices them as a
+fidelity tier between whole-iteration and op-class points.
 
 ``points`` with op ``iter`` are whole-iteration measurements (highest
 fidelity tier, preferred by ``PerfModel``); operator-class points compose an
@@ -60,9 +76,28 @@ from typing import Dict, List, Optional
 from repro.core.config import HardwareSpec
 from repro.core.trace import OpPoint, Trace
 
-SCHEMA_VERSION = "hwtrace/2"
+SCHEMA_VERSION = "hwtrace/3"
 #: schema versions this build can read (save always emits SCHEMA_VERSION)
-READABLE_SCHEMAS = ("hwtrace/1", "hwtrace/2")
+READABLE_SCHEMAS = ("hwtrace/1", "hwtrace/2", "hwtrace/3")
+
+#: prefix marking an in-memory kernel-granular point (hwtrace/3 sub-buckets)
+KERN_PREFIX = "kern:"
+#: kernel kinds the kernel profiler sweeps (one engine forward pass is
+#: L x attention + L x (mlp | moe_gmm) + head under either backend)
+KERNEL_KINDS = ("attention", "mlp", "moe_gmm", "head")
+
+
+def kern_op(backend: str, kernel: str) -> str:
+    """Op string for a kernel sub-bucket row (``kern:<backend>:<kernel>``)."""
+    return f"{KERN_PREFIX}{backend}:{kernel}"
+
+
+def split_kern_op(op: str) -> Optional[tuple]:
+    """``(backend, kernel)`` when ``op`` is a kernel row, else None."""
+    if not op.startswith(KERN_PREFIX):
+        return None
+    backend, _, kernel = op[len(KERN_PREFIX):].partition(":")
+    return (backend, kernel)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,7 +265,36 @@ class HardwareTrace:
                         f"non-positive latency {p.latency_s}")
         return self
 
+    # ---- kernel sub-buckets ----
+    def kernel_backends(self, tp: Optional[int] = None) -> List[str]:
+        """Kernel backends the grid at ``tp`` carries sub-bucket rows for."""
+        pts = self.grid(self.tp if tp is None else tp) or []
+        seen = []
+        for p in pts:
+            bk = split_kern_op(p.op)
+            if bk is not None and bk[0] not in seen:
+                seen.append(bk[0])
+        return seen
+
     # ---- io ----
+    @staticmethod
+    def _grid_doc(points: List[OpPoint]) -> Dict:
+        """Serialize one grid: op-class rows under ``points``, kernel rows
+        (op ``kern:<backend>:<kernel>``) under ``kernels``."""
+        doc: Dict = {"points": []}
+        kerns = []
+        for p in points:
+            bk = split_kern_op(p.op)
+            if bk is None:
+                doc["points"].append(dataclasses.asdict(p))
+            else:
+                kerns.append({"kernel": bk[1], "backend": bk[0],
+                              "phase": p.phase, "tokens": p.tokens,
+                              "context": p.context, "latency_s": p.latency_s})
+        if kerns:
+            doc["kernels"] = kerns
+        return doc
+
     def save(self, path: str) -> str:
         self.validate()
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -240,9 +304,7 @@ class HardwareTrace:
             "model": self.model,
             "interconnect": dataclasses.asdict(self.interconnect),
             "spec": dataclasses.asdict(self.spec) if self.spec else None,
-            "grids": [{"tp": tp,
-                       "points": [dataclasses.asdict(p)
-                                  for p in self.grid(tp)]}
+            "grids": [{"tp": tp, **self._grid_doc(self.grid(tp))}
                       for tp in self.tp_degrees()],
             "meta": self.meta,
         }
@@ -269,6 +331,17 @@ class HardwareTrace:
                 raise ValueError(
                     f"{path}: malformed trace point: {e}") from e
 
+        def parse_kernels(raw):
+            # hwtrace/3 kernel sub-buckets -> kern:<backend>:<kernel> points
+            # (hwtrace/2 grids simply have no "kernels" key: op-level only)
+            try:
+                return [OpPoint(kern_op(k["backend"], k["kernel"]),
+                                k["phase"], k["tokens"], k["context"],
+                                k["latency_s"]) for k in raw]
+            except (KeyError, TypeError) as e:
+                raise ValueError(
+                    f"{path}: malformed kernel point: {e}") from e
+
         if schema == "hwtrace/1":
             # legacy single-grid layout: top-level tp + points
             if "points" not in doc:
@@ -283,7 +356,8 @@ class HardwareTrace:
                 tp = int(g.get("tp", 1))
                 if tp in grids:
                     raise ValueError(f"{path}: duplicate grid for tp={tp}")
-                grids[tp] = parse_points(g.get("points", []))
+                grids[tp] = parse_points(g.get("points", [])) \
+                    + parse_kernels(g.get("kernels", []))
         base = min(grids)
         spec = HardwareSpec(**doc["spec"]) if doc.get("spec") else None
         hwt = cls(device=doc["device"], model=doc.get("model", "*"),

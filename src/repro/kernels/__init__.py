@@ -1,3 +1,5 @@
-from repro.kernels.ops import flash_attention, moe_gmm, paged_attention
+from repro.kernels.ops import (KERNEL_BACKENDS, flash_attention, moe_gmm,
+                               paged_attention, resolve_backend)
 
-__all__ = ["flash_attention", "moe_gmm", "paged_attention"]
+__all__ = ["KERNEL_BACKENDS", "flash_attention", "moe_gmm",
+           "paged_attention", "resolve_backend"]

@@ -1,10 +1,15 @@
-"""Pallas TPU flash attention (prefill, causal, GQA).
+"""Pallas TPU flash attention (prefill, causal, GQA, lengths + window).
 
 Grid (B, H, nQ): each program owns one (batch, head, query-block) tile with
 the query block in VMEM; K/V for the matching KV head stream through VMEM.
 The causal schedule skips KV blocks beyond the diagonal via the fori upper
 bound — the exact constant-work schedule the pure-XLA path can only
 approximate (see models/layers.folded_causal_attention).
+
+The kernel carries the serving engine's full masking surface: per-sequence
+``lengths`` (ragged batches) and a sliding ``window`` (local-attention
+layers), matching ``models/flash.flash_attention`` semantics exactly, so
+the pallas backend never has to fall back to reference for windowed layers.
 
 MXU alignment: bq/bkv multiples of 128 in production (tests sweep smaller
 shapes in interpret mode, where alignment is not enforced).
@@ -18,15 +23,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NEG_INF = -1e30
+#: "no window" sentinel: larger than any context length we ever serve
+NO_WINDOW = 1 << 30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int,
-                  causal: bool):
-    # q_ref: (1, bq, 1, dh); k_ref/v_ref: (1, S, 1, dh); o_ref like q_ref
+def _flash_kernel(q_ref, k_ref, v_ref, len_ref, win_ref, o_ref, *, bq: int,
+                  bkv: int, causal: bool):
+    # q_ref: (1, bq, 1, dh); k_ref/v_ref: (1, S, 1, dh); o_ref like q_ref;
+    # len_ref: (1,) this sequence's length; win_ref: (1,) sliding window
     qi = pl.program_id(2)
     dh = q_ref.shape[-1]
     S = k_ref.shape[1]
     q = q_ref[0, :, 0, :].astype(jnp.float32) * dh ** -0.5
+    length = len_ref[0]
+    window = win_ref[0]
     nkv = S // bkv
     if causal:
         upper = (qi * bq + bq + bkv - 1) // bkv
@@ -45,12 +55,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int,
             .astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kv_pos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = (kv_pos < length) & (q_pos - kv_pos < window)
         if causal:
-            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32,
-                                                       (bq, bkv), 0)
-            kv_pos = j * bkv + jax.lax.broadcasted_iota(jnp.int32,
-                                                        (bq, bkv), 1)
-            s = jnp.where(q_pos >= kv_pos, s, NEG_INF)
+            mask = mask & (q_pos >= kv_pos)
+        s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[:, None])
         corr = jnp.exp(m - m_new)
@@ -68,9 +78,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int,
                          ).astype(o_ref.dtype)
 
 
-def flash_attention_pallas(q, k, v, *, bq: int = 128, bkv: int = 128,
+def flash_attention_pallas(q, k, v, *, lengths=None, window=None,
+                           bq: int = 128, bkv: int = 128,
                            causal: bool = True, interpret: bool = True):
-    """q: (B,S,H,dh); k/v: (B,S,KV,dh) -> (B,S,H,dh)."""
+    """q: (B,S,H,dh); k/v: (B,S,KV,dh) -> (B,S,H,dh).
+
+    ``lengths``: (B,) int32, KV positions >= length are masked (output rows
+    at q_pos >= length are garbage, as in the pure-JAX twin).  ``window``:
+    scalar (python int or traced), masks q_pos - kv_pos >= window.
+    """
     B, S, H, dh = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -78,6 +94,12 @@ def flash_attention_pallas(q, k, v, *, bq: int = 128, bkv: int = 128,
     bkv = min(bkv, S)
     assert S % bq == 0 and S % bkv == 0
     nq = S // bq
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    if window is None:
+        window = NO_WINDOW
+    win = jnp.reshape(jnp.asarray(window, jnp.int32), (1,))
     grid = (B, H, nq)
     kernel = functools.partial(_flash_kernel, bq=bq, bkv=bkv, causal=causal)
     return pl.pallas_call(
@@ -87,8 +109,10 @@ def flash_attention_pallas(q, k, v, *, bq: int = 128, bkv: int = 128,
             pl.BlockSpec((1, bq, 1, dh), lambda b, h, i: (b, i, h, 0)),
             pl.BlockSpec((1, S, 1, dh), lambda b, h, i: (b, 0, h // G, 0)),
             pl.BlockSpec((1, S, 1, dh), lambda b, h, i: (b, 0, h // G, 0)),
+            pl.BlockSpec((1,), lambda b, h, i: (b,)),
+            pl.BlockSpec((1,), lambda b, h, i: (0,)),
         ],
         out_specs=pl.BlockSpec((1, bq, 1, dh), lambda b, h, i: (b, i, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, S, H, dh), q.dtype),
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, lengths, win)

@@ -1,11 +1,23 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels + kernel-backend selection.
 
-``interpret`` defaults to True on CPU (validation) and False on TPU
-(production). Interfaces mirror the pure-JAX twins in repro.models.
+``interpret`` defaults to True on CPU hosts (semantics validation through
+the Pallas interpreter) and False on real accelerators (TPU *and* GPU —
+compiled Pallas; keying on TPU alone would silently run a GPU in the
+interpreter).  ``REPRO_PALLAS_INTERPRET=0|1`` overrides either way, and
+every wrapper takes an explicit ``interpret=`` for per-call control.
+
+``resolve_backend`` maps the engine-facing choice (``"reference" |
+"pallas" | "auto"``) to a concrete ``(backend, interpret)`` pair:
+``auto`` is compiled Pallas on TPU/GPU, interpret-mode Pallas on CPU
+(validation), and the pure-JAX reference anywhere else.
+
+Interfaces mirror the pure-JAX twins in repro.models.
 """
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional, Tuple
 
 import jax
 
@@ -13,27 +25,85 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gmm import moe_gmm_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 
+KERNEL_BACKENDS = ("reference", "pallas", "auto")
+
+
+def _env_interpret() -> Optional[bool]:
+    """REPRO_PALLAS_INTERPRET escape hatch: force interpret on/off."""
+    v = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if v is None:
+        return None
+    return v.strip().lower() not in ("0", "false", "no", "off")
+
 
 def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    env = _env_interpret()
+    if env is not None:
+        return env
+    # compiled Pallas on real accelerators (TPU and GPU); the interpreter
+    # everywhere else.  A bare `!= "tpu"` here would leave a CUDA backend
+    # silently interpreting every kernel.
+    return jax.default_backend() not in ("tpu", "gpu")
 
 
-@functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal"))
-def flash_attention(q, k, v, *, bq: int = 128, bkv: int = 128,
-                    causal: bool = True):
-    return flash_attention_pallas(q, k, v, bq=bq, bkv=bkv, causal=causal,
-                                  interpret=_default_interpret())
+def resolve_backend(choice: str) -> Tuple[str, bool]:
+    """Engine kernel choice -> (backend, interpret).
+
+    "reference"  pure-JAX twins (layers.decode_attention & co).
+    "pallas"     Pallas kernels, interpret resolved by platform/env.
+    "auto"       pallas compiled on TPU/GPU, pallas interpreted on CPU
+                 (so CI validates the production path), reference on
+                 anything unrecognized.
+    """
+    if choice not in KERNEL_BACKENDS:
+        raise ValueError(
+            f"kernels={choice!r}: expected one of {KERNEL_BACKENDS}")
+    if choice == "reference":
+        return "reference", False
+    if choice == "pallas" or jax.default_backend() in ("tpu", "gpu", "cpu"):
+        return "pallas", _default_interpret()
+    return "reference", False
 
 
-@functools.partial(jax.jit, static_argnames=("page_size",))
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bkv", "causal", "interpret"))
+def flash_attention(q, k, v, lengths=None, window=None, *, bq: int = 128,
+                    bkv: int = 128, causal: bool = True,
+                    interpret: Optional[bool] = None):
+    """q: (B,S,H,dh); k/v: (B,S,KV,dh) -> (B,S,H,dh).
+
+    ``lengths`` (B,) masks KV positions >= length per sequence; ``window``
+    (scalar, python int or traced) masks q_pos - kv_pos >= window
+    (sliding-window attention).  Both default to no-ops.
+    """
+    if window is not None and not causal:
+        raise ValueError("flash_attention: window requires causal=True "
+                         "(sliding windows are causal by definition)")
+    if interpret is None:
+        interpret = _default_interpret()
+    return flash_attention_pallas(q, k, v, lengths=lengths, window=window,
+                                  bq=bq, bkv=bkv, causal=causal,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "interpret"))
 def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
-                    page_size: int):
+                    page_size: int, start=None, window=None,
+                    interpret: Optional[bool] = None):
+    """Decode: q (B,H,dh), one query per sequence at position length-1.
+    Extend: q (B,S,H,dh) with ``start`` (B,), queries at start..start+S-1.
+    k_pages/v_pages: (P,ps,KV,dh); block_table: (B,maxp) int32;
+    ``window`` as in flash_attention."""
+    if interpret is None:
+        interpret = _default_interpret()
     return paged_attention_pallas(q, k_pages, v_pages, block_table, lengths,
-                                  page_size=page_size,
-                                  interpret=_default_interpret())
+                                  page_size=page_size, start=start,
+                                  window=window, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("bc",))
-def moe_gmm(x, w, group_sizes, *, bc: int = 128):
-    return moe_gmm_pallas(x, w, group_sizes, bc=bc,
-                          interpret=_default_interpret())
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def moe_gmm(x, w, group_sizes, *, bc: int = 128,
+            interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return moe_gmm_pallas(x, w, group_sizes, bc=bc, interpret=interpret)

@@ -1,10 +1,21 @@
-"""Pallas TPU paged attention (decode with block-table indirection).
+"""Pallas TPU paged attention (block-table indirection, decode + extend).
 
 The serving engine's KV lives in fixed-size pages (PagedAttention [9]); a
-per-sequence block table maps logical positions to pages. Grid (B, KV):
+per-sequence block table maps logical positions to pages.  Grid (B, KV):
 each program owns one (sequence, kv-head) pair, walking its block table
-with online softmax. Page loads are dynamic gathers (on real TPU these are
+with online softmax.  Page loads are dynamic gathers (on real TPU these are
 HBM->VMEM DMAs; ``interpret=True`` validates semantics on CPU).
+
+One kernel serves both serving phases:
+
+* **decode** — q is (B, H, dh): one query per sequence at its last
+  position (``lengths - 1``), mask ``kv_pos < length`` (+ window), the
+  exact semantics of ``models/layers.decode_attention``.
+* **extend** — q is (B, S, H, dh) with per-sequence ``start``: queries sit
+  at ``start + s``, mask ``kv_pos <= q_pos & kv_pos < length`` (+ window),
+  the exact semantics of ``models/layers.extend_attention`` — chunked
+  prefill continuations and speculative verify run through this path with
+  zero KV copies (the pages are shared, the table is the view).
 """
 from __future__ import annotations
 
@@ -15,44 +26,75 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NEG_INF = -1e30
+NO_WINDOW = 1 << 30
 
 
 def paged_attention_pallas(q, k_pages, v_pages, block_table, lengths, *,
-                           page_size: int, interpret: bool = True):
-    """q: (B,H,dh); k_pages/v_pages: (P,ps,KV,dh);
-    block_table: (B,maxp) int32; lengths: (B,) -> (B,H,dh)."""
-    B, H, dh = q.shape
+                           page_size: int, start=None, window=None,
+                           interpret: bool = True):
+    """q: (B,H,dh) decode or (B,S,H,dh) extend; k_pages/v_pages:
+    (P,ps,KV,dh); block_table: (B,maxp) int32; lengths: (B,).
+    ``start``: (B,) first query position (extend; decode infers
+    ``lengths - 1``); ``window``: scalar sliding window."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]          # (B, 1, H, dh)
+    B, S, H, dh = q.shape
     P, ps, KV, _ = k_pages.shape
     assert ps == page_size
     G = H // KV
     maxp = block_table.shape[1]
-    qr = q.reshape(B, KV, G, dh)
+    lengths = lengths.astype(jnp.int32)
+    if start is None:
+        if not squeeze:
+            raise ValueError(
+                "paged_attention: multi-query (extend) calls must pass "
+                "start= (the first query position per sequence)")
+        start = jnp.maximum(lengths - 1, 0)
+    start = start.astype(jnp.int32)
+    if window is None:
+        window = NO_WINDOW
+    win = jnp.reshape(jnp.asarray(window, jnp.int32), (1,))
+    qr = q.reshape(B, S, KV, G, dh)
     grid = (B, KV)
-    kernel = functools.partial(_paged_two_kernel, page_size=page_size)
+    kernel = functools.partial(_paged_kernel, page_size=page_size)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, G, dh), lambda b, kv: (b, kv, 0, 0)),
+            pl.BlockSpec((1, S, 1, G, dh), lambda b, kv: (b, 0, kv, 0, 0)),
             pl.BlockSpec((P, ps, 1, dh), lambda b, kv: (0, 0, kv, 0)),
             pl.BlockSpec((P, ps, 1, dh), lambda b, kv: (0, 0, kv, 0)),
             pl.BlockSpec((1, maxp), lambda b, kv: (b, 0)),
             pl.BlockSpec((1,), lambda b, kv: (b,)),
+            pl.BlockSpec((1,), lambda b, kv: (b,)),
+            pl.BlockSpec((1,), lambda b, kv: (0,)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, kv: (b, kv, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, dh), q.dtype),
+        out_specs=pl.BlockSpec((1, S, 1, G, dh),
+                               lambda b, kv: (b, 0, kv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, KV, G, dh), q.dtype),
         interpret=interpret,
-    )(qr, k_pages, v_pages, block_table, lengths)
-    return out.reshape(B, H, dh)
+    )(qr, k_pages, v_pages, block_table, start, lengths, win)
+    out = out.reshape(B, S, H, dh)
+    return out[:, 0] if squeeze else out
 
 
-def _paged_two_kernel(q_ref, kp_ref, vp_ref, table_ref, len_ref, o_ref, *,
-                      page_size: int):
-    """Like _paged_kernel but with separate K/V page pools."""
-    G, dh = q_ref.shape[2], q_ref.shape[3]
-    q = q_ref[0, 0].astype(jnp.float32) * dh ** -0.5
+def _paged_kernel(q_ref, kp_ref, vp_ref, table_ref, start_ref, len_ref,
+                  win_ref, o_ref, *, page_size: int):
+    """One (sequence, kv-head): S*G query rows x this sequence's pages."""
+    S, G, dh = q_ref.shape[1], q_ref.shape[3], q_ref.shape[4]
+    R = S * G
+    q = q_ref[0, :, 0, :, :].astype(jnp.float32).reshape(R, dh) * dh ** -0.5
+    start = start_ref[0]
     length = len_ref[0]
-    n_used = (length + page_size - 1) // page_size
+    window = win_ref[0]
+    # cap at the table's reach: an unscheduled-but-full slot arrives with
+    # length == capacity + 1 and must not walk past the last table entry
+    n_used = jnp.minimum((length + page_size - 1) // page_size,
+                         table_ref.shape[1])
+    # row r of the flattened (S*G) query block sits at position start + r//G
+    q_pos = start + jax.lax.broadcasted_iota(jnp.int32, (R, page_size),
+                                             0) // G
 
     def body(j, carry):
         acc, m, l = carry
@@ -65,9 +107,11 @@ def _paged_two_kernel(q_ref, kp_ref, vp_ref, table_ref, len_ref, o_ref, *,
                              slice(None)))[:, 0, :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
-        pos = j * page_size + jax.lax.broadcasted_iota(
-            jnp.int32, (G, page_size), 1)
-        s = jnp.where(pos < length, s, NEG_INF)
+        kv_pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (R, page_size), 1)
+        mask = (kv_pos <= q_pos) & (kv_pos < length) \
+            & (q_pos - kv_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[:, None])
         corr = jnp.exp(m - m_new)
@@ -77,8 +121,9 @@ def _paged_two_kernel(q_ref, kp_ref, vp_ref, table_ref, len_ref, o_ref, *,
             preferred_element_type=jnp.float32)
         return acc, m_new, l_new
 
-    acc0 = jnp.zeros((G, dh), jnp.float32)
-    m0 = jnp.full((G,), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((G,), jnp.float32)
+    acc0 = jnp.zeros((R, dh), jnp.float32)
+    m0 = jnp.full((R,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((R,), jnp.float32)
     acc, m, l = jax.lax.fori_loop(0, n_used, body, (acc0, m0, l0))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+    o_ref[0, :, 0, :, :] = (acc / jnp.maximum(l, 1e-20)[:, None]
+                            ).reshape(S, G, dh).astype(o_ref.dtype)

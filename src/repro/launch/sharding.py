@@ -162,8 +162,19 @@ def cache_pspecs(cache_shape, dp: Tuple[str, ...], batch: int,
         rank = tree.ndim
         if name == "lengths":
             return P(dp) if sp else P(None)
+        if name == "block_table":        # (B, maxp) int32: replicate —
+            return P(*([None] * rank))   # every shard walks the same pages
         b_ax = rank - tree.shape[::-1].index(batch) - 1 if batch in tree.shape \
             else None
+        if name in ("k_pages", "v_pages"):
+            # paged pools (..., n_pages, ps, KV, dh): no batch dim — pages
+            # are shared storage — so only the head dims can carry TP
+            spec = [None] * rank
+            if tree.shape[-2] % model_size == 0:
+                spec[-2] = MODEL
+            else:
+                spec[-1] = MODEL
+            return P(*spec)
         if name in ("k", "v"):
             # (..., B, S, KV, dh)
             spec = [None] * rank

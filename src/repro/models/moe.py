@@ -35,8 +35,14 @@ def router_topk(x, w_router, top_k: int):
 
 def moe_ffn(x, params, *, top_k: int, capacity_factor: float = 1.25,
             gated: bool = True, shard_experts: bool = False,
-            router_fn=None, positions=None, layer=None, valid=None):
+            router_fn=None, positions=None, layer=None, valid=None,
+            backend: str = "reference", interpret: bool = True):
     """x: (T, d). params: router (d,E), w_gate/w_up (E,d,de), w_down (E,de,d).
+
+    ``backend="pallas"`` swaps the three batched einsums for the fused
+    grouped-GEMM kernel (``kernels.moe_gmm``) with per-expert group sizes
+    from the dispatch counts — tiles past a group's size are skipped on
+    real TPUs (compute proportional to routed load, not capacity).
 
     ``router_fn`` is the injectable routing hook (``repro.moe.hooks``):
     called as ``router_fn(logits, positions=(T,), layer=scalar,
@@ -98,16 +104,37 @@ def moe_ffn(x, params, *, top_k: int, capacity_factor: float = 1.25,
             hidden_in, P("model", None, None))
 
     # --- grouped expert FFN -------------------------------------------------
-    if gated:
+    if backend == "pallas" and not shard_experts:
+        from repro.kernels import moe_gmm
+        # valid rows per expert buffer; rows >= size are zero either way
+        # (silu(0)*0 == 0, gelu(0) == 0), the kernel just skips their tiles
+        group_sizes = jnp.minimum(counts[:E], C)
+        if gated:
+            g = jax.nn.silu(moe_gmm(
+                hidden_in, params["w_gate"].astype(x.dtype), group_sizes,
+                interpret=interpret))
+            u = moe_gmm(hidden_in, params["w_up"].astype(x.dtype),
+                        group_sizes, interpret=interpret)
+            h = g * u
+        else:
+            h = jax.nn.gelu(moe_gmm(
+                hidden_in, params["w_up"].astype(x.dtype), group_sizes,
+                interpret=interpret))
+        out_e = moe_gmm(h, params["w_down"].astype(x.dtype), group_sizes,
+                        interpret=interpret)
+    elif gated:
         g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", hidden_in,
                                    params["w_gate"].astype(x.dtype)))
         u = jnp.einsum("ecd,edf->ecf", hidden_in,
                        params["w_up"].astype(x.dtype))
         h = g * u
+        out_e = jnp.einsum("ecf,efd->ecd", h,
+                           params["w_down"].astype(x.dtype))
     else:
         h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", hidden_in,
                                    params["w_up"].astype(x.dtype)))
-    out_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
+        out_e = jnp.einsum("ecf,efd->ecd", h,
+                           params["w_down"].astype(x.dtype))
     if shard_experts:
         from jax.sharding import PartitionSpec as P
         out_e = jax.lax.with_sharding_constraint(

@@ -137,12 +137,33 @@ _STAGE_INIT = {
 # block forward helpers
 # --------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class KernelCfg:
+    """Resolved kernel-backend choice threaded through the blocks.
+
+    ``backend`` is concrete ("reference" | "pallas"; "auto" resolves at
+    engine construction via ``repro.kernels.resolve_backend``).  Pallas
+    serves the no-grad phases (prefill/extend/decode); training always
+    runs the differentiable pure-JAX twins.
+    """
+    backend: str = "reference"
+    interpret: bool = True
+    page_size: int = 64
+
+
+def _divisor_block(S: int, b: int = 128) -> int:
+    """Largest flash block size <= b that divides S (S is a static int)."""
+    return next(x for x in range(min(b, S), 0, -1) if S % x == 0)
+
+
 def _attention(p, x, cfg: ArchConfig, *, positions, lengths, window,
                mode: str, cache: Optional[dict], attn_impl: str,
-               unroll: bool = False):
+               unroll: bool = False, kernels: Optional[KernelCfg] = None,
+               block_table=None):
     """window: traced scalar (0 = full causal). Returns (out, new_cache)."""
     B, S, d = x.shape
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pallas = kernels is not None and kernels.backend == "pallas"
     xn = x
     if "wqkv" in p:
         qkv = xn @ p["wqkv"].astype(x.dtype)
@@ -165,7 +186,35 @@ def _attention(p, x, cfg: ArchConfig, *, positions, lengths, window,
     k = rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if mode == "decode":
+    paged = cache is not None and "k_pages" in cache
+    if paged and block_table is None:
+        raise ValueError("paged KV cache needs the block_table threaded "
+                         "through decode/extend (cache['block_table'])")
+    if paged and not pallas:
+        raise ValueError("paged KV cache requires the pallas kernel "
+                         "backend (kernels='pallas' or 'auto')")
+    if mode == "decode" and paged:
+        # paged slot-KV: scatter the new token through the block table,
+        # then one fused paged-attention walk over this sequence's pages
+        kc, vc = cache["k_pages"], cache["v_pages"]
+        ps = kernels.page_size
+        maxp = block_table.shape[1]
+        pos = jnp.maximum(lengths - 1, 0)
+        pidx = pos // ps
+        page = block_table[jnp.arange(B), jnp.minimum(pidx, maxp - 1)]
+        # a full/unscheduled slot's garbage write goes to the scratch page
+        # (the contiguous path's equivalent out-of-bounds scatter is
+        # silently dropped; pages must not clobber a real token)
+        page = jnp.where(pidx < maxp, page, kc.shape[0] - 1)
+        off = pos % ps
+        kc = kc.at[page, off].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[page, off].set(v[:, 0].astype(vc.dtype))
+        from repro.kernels import paged_attention
+        out = paged_attention(q[:, 0], kc, vc, block_table, lengths,
+                              page_size=ps, window=window,
+                              interpret=kernels.interpret)[:, None]
+        new_cache = {"k_pages": kc, "v_pages": vc}
+    elif mode == "decode":
         kc, vc = cache["k"], cache["v"]
         idx = jnp.maximum(lengths - 1, 0)
         bidx = jnp.arange(B)
@@ -173,6 +222,29 @@ def _attention(p, x, cfg: ArchConfig, *, positions, lengths, window,
         vc = vc.at[bidx, idx].set(v[:, 0].astype(vc.dtype))
         out = decode_attention(q, kc, vc, lengths=lengths, window=window)
         new_cache = {"k": kc, "v": vc}
+    elif mode == "extend" and paged:
+        # chunked-prefill continuation / spec verify on shared page pools:
+        # zero KV copies — the pages are the storage, the table the view
+        kc, vc = cache["k_pages"], cache["v_pages"]
+        ps = kernels.page_size
+        maxp = block_table.shape[1]
+        start = positions[:, 0]
+        pos = start[:, None] + jnp.arange(S)[None, :]
+        pidx = pos // ps
+        page = block_table[jnp.arange(B)[:, None],
+                           jnp.minimum(pidx, maxp - 1)]
+        # pad tails past the table's reach go to the scratch page (the
+        # contiguous path clamps them onto position max_len-1, which is
+        # only ever read after being rewritten; scratch is never read)
+        page = jnp.where(pidx < maxp, page, kc.shape[0] - 1)
+        off = pos % ps
+        kc = kc.at[page, off].set(k.astype(kc.dtype))
+        vc = vc.at[page, off].set(v.astype(vc.dtype))
+        from repro.kernels import paged_attention
+        out = paged_attention(q, kc, vc, block_table, lengths,
+                              page_size=ps, start=start, window=window,
+                              interpret=kernels.interpret)
+        new_cache = {"k_pages": kc, "v_pages": vc}
     elif mode == "extend":
         # chunked/cached prefill: S new slots written after `positions[:,0]`
         # (pad tail masked out by `lengths`); attend to the whole cache
@@ -187,7 +259,12 @@ def _attention(p, x, cfg: ArchConfig, *, positions, lengths, window,
                                window=window)
         new_cache = {"k": kc, "v": vc}
     else:
-        if attn_impl == "flash":
+        if pallas and mode == "prefill":
+            from repro.kernels import flash_attention as flash_pallas
+            b = _divisor_block(S)
+            out = flash_pallas(q, k, v, lengths, window, bq=b, bkv=b,
+                               interpret=kernels.interpret)
+        elif attn_impl == "flash":
             out = flash_attention(q, k, v, lengths, window, 1024, unroll)
         elif attn_impl == "folded" and window is None:
             out = folded_causal_attention(q, k, v, lengths=lengths,
@@ -209,11 +286,13 @@ def _mlp(p, x, cfg: ArchConfig):
 
 
 def _attn_mlp_block(p, x, cfg, *, positions, lengths, window, mode, cache,
-                    attn_impl, unroll=False, norm_fn=rmsnorm):
+                    attn_impl, unroll=False, norm_fn=rmsnorm, kernels=None,
+                    block_table=None):
     h, new_cache = _attention(
         p["attn"], norm_fn(x, p["norm1"], cfg.norm_eps), cfg,
         positions=positions, lengths=lengths, window=window, mode=mode,
-        cache=cache, attn_impl=attn_impl, unroll=unroll)
+        cache=cache, attn_impl=attn_impl, unroll=unroll, kernels=kernels,
+        block_table=block_table)
     x = x + h
     x = x + _mlp(p["mlp"], norm_fn(x, p["norm2"], cfg.norm_eps), cfg)
     return x, new_cache, jnp.zeros((), jnp.float32)
@@ -221,11 +300,13 @@ def _attn_mlp_block(p, x, cfg, *, positions, lengths, window, mode, cache,
 
 def _attn_moe_block(p, x, cfg, *, positions, lengths, window, mode, cache,
                     attn_impl, unroll=False, shard_experts=False,
-                    layer_idx=None, routing_hook=None, row_valid=None):
+                    layer_idx=None, routing_hook=None, row_valid=None,
+                    kernels=None, block_table=None):
     h, new_cache = _attention(
         p["attn"], rmsnorm(x, p["norm1"], cfg.norm_eps), cfg,
         positions=positions, lengths=lengths, window=window, mode=mode,
-        cache=cache, attn_impl=attn_impl, unroll=unroll)
+        cache=cache, attn_impl=attn_impl, unroll=unroll, kernels=kernels,
+        block_table=block_table)
     x = x + h
     B, S, d = x.shape
     xn = rmsnorm(x, p["norm2"], cfg.norm_eps).reshape(B * S, d)
@@ -253,7 +334,11 @@ def _attn_moe_block(p, x, cfg, *, positions, lengths, window, mode, cache,
                      capacity_factor=cfg.moe.capacity_factor,
                      gated=cfg.mlp_gated, shard_experts=shard_experts,
                      router_fn=routing_hook, positions=pos_flat,
-                     layer=layer_idx, valid=valid)
+                     layer=layer_idx, valid=valid,
+                     backend=kernels.backend if kernels is not None
+                     else "reference",
+                     interpret=kernels.interpret if kernels is not None
+                     else True)
     x = x + y.reshape(B, S, d)
     return x, new_cache, aux
 
@@ -317,6 +402,23 @@ class Model:
     # synthetic ExpertRoutingTrace, logit biasing, or a recording tap.
     # Must be set at construction (the jitted closures capture it).
     routing_hook: Optional[Any] = None
+    # resolved kernel backend ("reference" | "pallas" — resolve "auto" via
+    # repro.kernels.resolve_backend before constructing the Model).  Pallas
+    # only serves the no-grad phases; training uses the pure-JAX twins.
+    kernel_backend: str = "reference"
+    pallas_interpret: bool = True
+    # paged slot-KV layout: attention caches become shared page pools
+    # ("k_pages"/"v_pages", (L, n_pages, page_size, KV, dh)) indexed by a
+    # per-sequence block table (cache["block_table"], (B, maxp) int32).
+    # Requires kernel_backend="pallas" and an all-attention stage list.
+    paged: bool = False
+    page_size: int = 64
+
+    def _kernel_cfg(self, mode: str) -> Optional[KernelCfg]:
+        if self.kernel_backend != "pallas" or mode == "train":
+            return None
+        return KernelCfg(backend="pallas", interpret=self.pallas_interpret,
+                         page_size=self.page_size)
 
     # ---- init ----
     def init(self, key) -> dict:
@@ -376,11 +478,14 @@ class Model:
                          jnp.int32(cfg.sliding_window))
 
     def _run_stage(self, idx, stage, params, x, *, positions, lengths, mode,
-                   cache, shared_attn, row_valid=None):
+                   cache, shared_attn, row_valid=None, block_table=None):
         cfg = self.cfg
         sp = params[f"stage{idx}"]
         kind = stage.kind
         L = stage.n_layers
+        # closure-captured (NOT scan xs): the kernel config is static and
+        # the block table is shared by every layer of every stage
+        kernels = self._kernel_cfg(mode)
         # global MoE-layer index base: routing hooks key their per-layer
         # tables on the model-wide MoE layer, not the stage-local one
         moe_off = sum(s.n_layers for s in cfg.stages[:idx]
@@ -393,7 +498,8 @@ class Model:
                     p, x, cfg, positions=positions, lengths=lengths,
                     window=window, mode=mode, cache=kcache,
                     attn_impl=self.attn_impl, unroll=self.unroll,
-                    norm_fn=rmsnorm_ct16 if self.norm_ct16 else rmsnorm)
+                    norm_fn=rmsnorm_ct16 if self.norm_ct16 else rmsnorm,
+                    kernels=kernels, block_table=block_table)
             if kind == ATTN_MOE:
                 return _attn_moe_block(
                     p, x, cfg, positions=positions, lengths=lengths,
@@ -401,7 +507,8 @@ class Model:
                     attn_impl=self.attn_impl, unroll=self.unroll,
                     shard_experts=self.shard_experts,
                     layer_idx=moe_off + li,
-                    routing_hook=self.routing_hook, row_valid=row_valid)
+                    routing_hook=self.routing_hook, row_valid=row_valid,
+                    kernels=kernels, block_table=block_table)
             if kind == MAMBA2:
                 return _mamba_block(p, x, cfg, mode=mode, cache=kcache)
             if kind == ZAMBA_SUPER:
@@ -547,13 +654,16 @@ class Model:
         B = x.shape[0]
         lengths = cache["lengths"] + 1       # include current token
         positions = (lengths - 1)[:, None]
+        block_table = cache.get("block_table")
         new_cache = {"lengths": lengths}
+        if block_table is not None:
+            new_cache["block_table"] = block_table
         for i, st in enumerate(cfg.stages):
             x, nc, _ = self._run_stage(
                 i, st, params, x, positions=positions, lengths=lengths,
                 mode="decode", cache=cache[f"stage{i}"],
                 shared_attn=params.get("shared_attn"),
-                row_valid=row_valid)
+                row_valid=row_valid, block_table=block_table)
             new_cache[f"stage{i}"] = nc
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         logits = self._head(params, x)
@@ -571,12 +681,16 @@ class Model:
             n_new = jnp.full((B,), S, jnp.int32)
         lengths = start + n_new
         positions = start[:, None] + jnp.arange(S)[None, :]
+        block_table = cache.get("block_table")
         new_cache = {"lengths": lengths}
+        if block_table is not None:
+            new_cache["block_table"] = block_table
         for i, st in enumerate(cfg.stages):
             x, nc, _ = self._run_stage(
                 i, st, params, x, positions=positions, lengths=lengths,
                 mode="extend", cache=cache[f"stage{i}"],
-                shared_attn=params.get("shared_attn"))
+                shared_attn=params.get("shared_attn"),
+                block_table=block_table)
             new_cache[f"stage{i}"] = nc
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         return x, new_cache, n_new
@@ -606,12 +720,30 @@ class Model:
         return logits, new_cache
 
     # ---- cache construction ----
+    def page_geometry(self, batch: int, max_len: int) -> Tuple[int, int]:
+        """(pages per sequence, total pool pages incl. the scratch page)."""
+        maxp = -(-max_len // self.page_size)
+        return maxp, batch * maxp + 1
+
     def init_cache(self, batch: int, max_len: int, dtype=None):
         """Zeroed cache pytree (concrete); see ``cache_specs`` for dry-run."""
         cfg = self.cfg
         dtype = dtype or cfg.compute_dtype
         cache: Dict[str, Any] = {
             "lengths": jnp.zeros((batch,), jnp.int32)}
+        if self.paged:
+            bad = [st.kind for st in cfg.stages
+                   if st.kind not in (ATTN_MLP, ATTN_MOE)]
+            if bad:
+                raise ValueError(
+                    f"paged KV cache only supports attention stages; "
+                    f"{self.cfg.name} has {bad}")
+            # every sequence starts pointing at the scratch page (last pool
+            # index): garbage writes from unscheduled decode slots land
+            # there and are never read back
+            maxp, n_pages = self.page_geometry(batch, max_len)
+            cache["block_table"] = jnp.full((batch, maxp), n_pages - 1,
+                                            jnp.int32)
         for i, st in enumerate(cfg.stages):
             cache[f"stage{i}"] = self._stage_cache(st, batch, max_len, dtype)
         return cache
@@ -622,6 +754,11 @@ class Model:
         KV, dh = cfg.n_kv_heads, cfg.d_head
 
         def kv(n):
+            if self.paged:
+                _, n_pages = self.page_geometry(batch, max_len)
+                shape = (n, n_pages, self.page_size, KV, dh)
+                return {"k_pages": jnp.zeros(shape, dtype),
+                        "v_pages": jnp.zeros(shape, dtype)}
             return {"k": jnp.zeros((n, batch, max_len, KV, dh), dtype),
                     "v": jnp.zeros((n, batch, max_len, KV, dh), dtype)}
 

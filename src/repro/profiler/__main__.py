@@ -8,7 +8,7 @@ hardware spec for devices you don't have):
   python -m repro.profiler profile --device cpu-engine \
       --arch llama3.1-8b-tiny --out traces/cpu-engine.json
 
-  # sweep tensor-parallel degrees: one hwtrace/2 artifact, one grid per tp
+  # sweep tensor-parallel degrees: one hwtrace/3 artifact, one grid per tp
   # (measured sweeps shard the engine; on CPU the needed host device count
   # is forced automatically)
   python -m repro.profiler profile --device cpu-engine --tp 1,2 \
@@ -141,7 +141,20 @@ def _cmd_profile(args):
         # merge() keeps the first probe's meta; restate artifact-wide facts
         hwt.meta["profile_wall_s"] = wall
         hwt.meta.pop("tp", None)
+        if args.kernels is not None:
+            # hwtrace/3 kernel sub-buckets: per-kernel rows per backend on
+            # the base grid (single-device sweep; the perf model composes
+            # tp collectives analytically on top)
+            from repro.profiler.kernel_profiler import add_kernel_grid
+            backends = [b for b in args.kernels.split(",") if b.strip()]
+            add_kernel_grid(hwt, args.arch, backends,
+                            max_batch=args.max_batch, max_len=args.max_len,
+                            reps=args.reps, seed=args.seed)
     else:
+        if args.kernels is not None:
+            raise SystemExit(
+                "--kernels sweeps real kernels and needs measured mode "
+                "(--device cpu-engine/local, or --mode measured)")
         from repro.hw.synthetic import synthetic_trace
         hwt = synthetic_trace(get_hw(args.device),
                               model_spec_from_arch(get_config(args.arch)),
@@ -286,7 +299,7 @@ def main():
     p.add_argument("--tp", default="1",
                    help="tensor-parallel degree(s) to profile, comma-"
                         "separated (e.g. --tp 1,2); each degree becomes "
-                        "one grid in the emitted hwtrace/2 artifact. "
+                        "one grid in the emitted hwtrace/3 artifact. "
                         "Measured sweeps shard the engine over that many "
                         "devices (forced on CPU hosts)")
     p.add_argument("--max-batch", type=int, default=4)
@@ -318,6 +331,12 @@ def main():
                         "traces/<device>.acceptance.json)")
     p.add_argument("--k", type=int, default=4,
                    help="speculative draft length for --spec")
+    p.add_argument("--kernels", nargs="?", const="reference,pallas",
+                   default=None, metavar="BACKENDS",
+                   help="measured mode: also sweep per-kernel latencies "
+                        "(attention/mlp/moe_gmm/head) for the given "
+                        "comma-separated kernel backends (default "
+                        "'reference,pallas') into hwtrace/3 sub-buckets")
     p.set_defaults(fn=_cmd_profile, requests=8, alpha=0.7, jitter=0.0,
                    draft_arch=None, draft_seed=1)
 

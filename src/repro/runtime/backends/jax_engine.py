@@ -227,6 +227,12 @@ class JaxBackend:
         from repro.serve.sampler import greedy
         eng = self.eng
         tokens = eng._tokens_buf
+        for w in decodes:
+            # paged KV: the decode writes each scheduled slot's new token
+            # at its old length — make sure that page exists (no-op on
+            # the contiguous layout)
+            slot = self._slot[w.request.req_id]
+            eng.ensure_capacity(slot, self._len[slot] + 1)
         if self.routing is not None or self.eng.model.routing_hook \
                 is not None:
             # routing-hook runs: mark every NON-scheduled slot (free, or
@@ -329,6 +335,15 @@ class JaxBackend:
             k_eff[self._slot[req.req_id]] = max(
                 0, min(k, req.output_len - req.generated - 1))
         k_step = max(k_eff.values(), default=0)
+
+        # paged KV: verify writes the pending token + k_eff drafts at
+        # positions [len, len + k_eff]; the draft's k_step + 1 decodes
+        # walk one position per call (no-ops on contiguous layouts)
+        for w in decodes:
+            slot = self._slot[w.request.req_id]
+            eng.ensure_capacity(slot, self._len[slot] + k_eff[slot] + 1)
+            dr.ensure_capacity(slot,
+                               self._draft_len.get(slot, 0) + k_step + 1)
 
         # 2. propose: k_step + 1 sequential full-buffer draft decodes
         cur = np.maximum(np.asarray(eng._tokens_buf), 0)
@@ -442,6 +457,7 @@ class JaxBackend:
                                               lengths=n_new)
                 eng._write_slot_from_prefill(slot, c1, len(chunk))
             else:
+                eng.ensure_capacity(slot, start + len(chunk))
                 sub = eng._slot_subcache(slot, start)
                 logits, new_sub = eng._jit_extend(eng.params, sub,
                                                   jnp.asarray(pad), n_new)
@@ -553,9 +569,15 @@ class JaxBackend:
         self._emitted.clear()
         eng.slot_free = list(range(eng.max_batch))
         eng.cache["lengths"] = jnp.zeros((eng.max_batch,), jnp.int32)
+        if getattr(eng, "paged", False):
+            for slot in range(eng.max_batch):
+                eng._free_pages(slot)
         if eng.spec is not None:
             eng.draft.cache["lengths"] = jnp.zeros((eng.max_batch,),
                                                    jnp.int32)
+            if getattr(eng.draft, "paged", False):
+                for slot in range(eng.max_batch):
+                    eng.draft._free_pages(slot)
 
     def stats(self) -> dict:
         s = {"engine_iterations": self._iterations}

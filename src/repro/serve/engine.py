@@ -155,12 +155,49 @@ class ServingEngine:
                         f"has {moe_layer_count(cfg)}")
                 self.routing_trace = routing
                 hook = make_replay_hook(routing)
-        self.model = Model(cfg, remat=False, routing_hook=hook)
+        # kernel backend: resolve "auto" against the platform; pallas
+        # serves attention-only archs at tp=1 (its decode path is the
+        # paged slot-KV layout, which has no sharded variant yet) —
+        # "auto" falls back to reference elsewhere, "pallas" is loud
+        from repro.configs.base import ATTN_MLP, ATTN_MOE
+        from repro.kernels import resolve_backend
+        backend, interpret = resolve_backend(cfg.kernels)
+        if backend == "pallas":
+            bad = [st.kind for st in cfg.stages
+                   if st.kind not in (ATTN_MLP, ATTN_MOE)]
+            if bad or self.tp > 1:
+                why = f"tp={self.tp}" if self.tp > 1 else \
+                    f"non-attention stages {bad}"
+                if cfg.kernels == "pallas":
+                    raise ValueError(
+                        f"kernels='pallas' does not support {why} on "
+                        f"{cfg.name!r}; use kernels='auto' to fall back")
+                backend, interpret = "reference", False
+        self.kernel_backend = backend
+        self.pallas_interpret = interpret
+        self.paged = backend == "pallas"
+        self.page_size = 64
+        self.model = Model(cfg, remat=False, routing_hook=hook,
+                           kernel_backend=backend,
+                           pallas_interpret=interpret, paged=self.paged,
+                           page_size=self.page_size)
         self.params = params if params is not None else self.model.init(
             jax.random.PRNGKey(seed))
         self.max_batch = max_batch
         self.max_len = max_len
         self.cache = self.model.init_cache(max_batch, max_len)
+        if self.paged:
+            # page allocator: free-list over the shared pool, a host
+            # numpy mirror of the device block table, and per-slot
+            # allocation counts.  The last pool index is the scratch
+            # page — never allocated, absorbs every masked garbage write.
+            self._maxp, self._n_pages = self.model.page_geometry(
+                max_batch, max_len)
+            self._scratch = self._n_pages - 1
+            self._page_free = list(range(self._n_pages - 1))
+            self._table_np = np.full((max_batch, self._maxp),
+                                     self._scratch, np.int32)
+            self._slot_pages = [0] * max_batch
         if self.tp > 1:
             self._shard_over_mesh()
         self.slot_free = list(range(max_batch))
@@ -263,11 +300,42 @@ class ServingEngine:
         self._slot_jits[(kind, key)] = fn
         return fn
 
+    # ---- paged-KV allocator (no-ops on the contiguous layout) ----
+    def ensure_capacity(self, slot: int, length: int):
+        """Grow ``slot``'s page allocation to cover ``length`` tokens.
+        Called by JaxBackend before any write that lands past the current
+        allocation (decode at the old length, spec verify's window,
+        chunked-prefill extends); free-list capacity is exact — every slot
+        can hold its full ``maxp`` pages simultaneously."""
+        if not self.paged:
+            return
+        need = min(-(-length // self.page_size), self._maxp)
+        have = self._slot_pages[slot]
+        if need <= have:
+            return
+        for j in range(have, need):
+            self._table_np[slot, j] = self._page_free.pop()
+        self._slot_pages[slot] = need
+        self._push_table()
+
+    def _push_table(self):
+        self.cache["block_table"] = jnp.asarray(self._table_np)
+
+    def _free_pages(self, slot: int):
+        if not self.paged or not self._slot_pages[slot]:
+            return
+        for j in range(self._slot_pages[slot]):
+            self._page_free.append(int(self._table_np[slot, j]))
+            self._table_np[slot, j] = self._scratch
+        self._slot_pages[slot] = 0
+        self._push_table()
+
     def _release_slot(self, slot: int):
         if slot not in self.slot_free:
             self.slot_free.append(slot)
         # zero the slot length
         self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
+        self._free_pages(slot)
 
     def _write_slot_from_prefill(self, slot: int, cache1, n: int):
         """Copy a (B=1) prefill cache into slot ``slot`` of the big cache."""
@@ -276,6 +344,39 @@ class ServingEngine:
             if leaf.ndim >= 3 and leaf.shape[1] == 1:
                 P = leaf.shape[2]
                 break
+        if self.paged:
+            # prefill itself ran contiguous (flash over the chunk); the
+            # engine owns the page layout, so scatter the (B=1) cache
+            # through the slot's freshly-allocated table row.  Pad-tail
+            # positions past the allocation route to the scratch page.
+            self.ensure_capacity(slot, min(P, self.max_len))
+            fn = self._get_jit("write_prefill_paged", P)
+            if fn is None:
+                ps, maxp, scratch = self.page_size, self._maxp, self._scratch
+
+                def impl(cache, cache1, slot, n):
+                    row = cache["block_table"][slot]
+                    pos = jnp.arange(P)
+                    pidx = pos // ps
+                    page = row[jnp.minimum(pidx, maxp - 1)]
+                    page = jnp.where(pidx < maxp, page, scratch)
+                    off = pos % ps
+                    out = dict(cache)
+                    for key in cache:
+                        if key in ("lengths", "block_table"):
+                            continue
+                        out[key] = {
+                            "k_pages": cache[key]["k_pages"]
+                            .at[:, page, off].set(cache1[key]["k"][:, 0]),
+                            "v_pages": cache[key]["v_pages"]
+                            .at[:, page, off].set(cache1[key]["v"][:, 0]),
+                        }
+                    out["lengths"] = cache["lengths"].at[slot].set(n)
+                    return out
+                fn = self._put_jit("write_prefill_paged", P, jax.jit(
+                    impl, donate_argnums=(0,), static_argnums=(2,)))
+            self.cache = fn(self.cache, cache1, slot, n)
+            return
         fn = self._get_jit("write_prefill", P)
         if fn is None:
             def impl(cache, cache1, slot, n):
@@ -302,6 +403,25 @@ class ServingEngine:
 
     def _slot_subcache(self, slot: int, length: int):
         """A (B=1) view of one slot (full max_len buffers, real length)."""
+        if self.paged:
+            # zero-copy: the shared pools ARE the storage; the one-row
+            # table is the view.  ``extend`` on this subcache scatters
+            # straight into the slot's pages.
+            fn = self._get_jit("subcache_paged", None)
+            if fn is None:
+                def impl(cache, slot, length):
+                    sub = {}
+                    for key in cache:
+                        if key == "lengths":
+                            sub[key] = jnp.full((1,), length, jnp.int32)
+                        elif key == "block_table":
+                            sub[key] = cache[key][slot: slot + 1]
+                        else:
+                            sub[key] = cache[key]
+                    return sub
+                fn = self._put_jit("subcache_paged", None,
+                                   jax.jit(impl, static_argnums=(1,)))
+            return fn(self.cache, slot, length)
         fn = self._get_jit("subcache", None)
         if fn is None:
             def impl(cache, slot, length):
@@ -319,6 +439,26 @@ class ServingEngine:
         return fn(self.cache, slot, length)
 
     def _write_slot(self, slot: int, sub_cache, n: int):
+        if self.paged:
+            # the subcache's pools already hold the extend's writes
+            # (shared storage): adopt them wholesale — pure pass-through,
+            # jax forwards unmodified outputs without a copy — and bump
+            # the slot length.  No donation: warmup writes back an
+            # untouched subcache whose pools alias the live cache.
+            fn = self._get_jit("write_slot_paged", None)
+            if fn is None:
+                def impl(cache, sub, slot, n):
+                    out = dict(cache)
+                    for key in cache:
+                        if key in ("lengths", "block_table"):
+                            continue
+                        out[key] = sub[key]
+                    out["lengths"] = cache["lengths"].at[slot].set(n)
+                    return out
+                fn = self._put_jit("write_slot_paged", None, jax.jit(
+                    impl, static_argnums=(2,)))
+            self.cache = fn(self.cache, sub_cache, slot, n)
+            return
         fn = self._get_jit("write_slot", None)
         if fn is None:
             def impl(cache, sub, slot, n):
@@ -343,6 +483,36 @@ class ServingEngine:
         np.asarray is a host copy."""
         blen = _bucket(length)
         blen = min(blen, self.max_len)
+        if self.paged:
+            # normalize to the contiguous ("k"/"v") payload so prefix
+            # store entries and P/D handoffs interoperate across layouts
+            fn = self._get_jit("export_paged", blen)
+            if fn is None:
+                ps, maxp = self.page_size, self._maxp
+                npg = min(-(-blen // ps), maxp)
+
+                def impl(cache, slot):
+                    pages = cache["block_table"][slot, :npg]
+                    out = {}
+                    for key in cache:
+                        if key in ("lengths", "block_table"):
+                            continue
+                        kp = cache[key]["k_pages"][:, pages]
+                        vp = cache[key]["v_pages"][:, pages]
+                        L = kp.shape[0]
+                        out[key] = {
+                            "k": kp.reshape((L, npg * ps) + kp.shape[3:])
+                            [:, :blen],
+                            "v": vp.reshape((L, npg * ps) + vp.shape[3:])
+                            [:, :blen]}
+                    return out
+                fn = self._put_jit("export_paged", blen,
+                                   jax.jit(impl, static_argnums=(1,)))
+            dev = fn(self.cache, slot)
+            out = jax.tree_util.tree_map(np.asarray, dev)
+            out["_length"] = length
+            out["_length_bucket"] = blen
+            return out
         fn = self._get_jit("export", blen)
         if fn is None:
             def impl(cache, slot):
@@ -373,6 +543,39 @@ class ServingEngine:
                         leaf.shape[1] <= self.max_len and leaf.shape[1] >= 8:
                     blen = leaf.shape[1]
                     break
+        if self.paged:
+            # payload is the normalized contiguous layout (possibly from a
+            # contiguous peer — P/D across layouts); scatter it through
+            # the slot's freshly-allocated table row
+            self.ensure_capacity(slot, blen)
+            fn = self._get_jit("restore_paged", blen)
+            if fn is None:
+                ps, maxp, scratch = self.page_size, self._maxp, self._scratch
+
+                def impl(cache, kv, slot, n):
+                    row = cache["block_table"][slot]
+                    pos = jnp.arange(blen)
+                    pidx = pos // ps
+                    page = row[jnp.minimum(pidx, maxp - 1)]
+                    page = jnp.where(pidx < maxp, page, scratch)
+                    off = pos % ps
+                    out = dict(cache)
+                    for key in cache:
+                        if key in ("lengths", "block_table"):
+                            continue
+                        out[key] = {
+                            "k_pages": cache[key]["k_pages"]
+                            .at[:, page, off].set(kv[key]["k"]),
+                            "v_pages": cache[key]["v_pages"]
+                            .at[:, page, off].set(kv[key]["v"]),
+                        }
+                    out["lengths"] = cache["lengths"].at[slot].set(n)
+                    return out
+                fn = self._put_jit("restore_paged", blen, jax.jit(
+                    impl, donate_argnums=(0,), static_argnums=(2,)))
+            kvdev = {k: v for k, v in kv.items() if not k.startswith("_")}
+            self.cache = fn(self.cache, kvdev, slot, length)
+            return
         fn = self._get_jit("restore", blen)
         if fn is None:
             def impl(cache, kv, slot, n):

@@ -100,7 +100,7 @@ def test_registry_resolve_respects_tp():
 
 
 def test_multi_tp_artifact_roundtrip_and_resolution(tmp_path):
-    """One hwtrace/2 artifact carries one grid per swept tp degree; the
+    """One multi-grid artifact carries one grid per swept tp degree; the
     registry serves the *matching grid* (not a synthetic rescale) for any
     degree the device was profiled at."""
     hwt = synthetic_trace(TPU_V6E, MODEL_8B, tp=(1, 2))
@@ -108,7 +108,7 @@ def test_multi_tp_artifact_roundtrip_and_resolution(tmp_path):
     path = str(tmp_path / "v6e.json")
     hwt.save(path)
     doc = json.load(open(path))
-    assert doc["schema"] == "hwtrace/2"
+    assert doc["schema"] == "hwtrace/3"
     assert [g["tp"] for g in doc["grids"]] == [1, 2]
     reg = HardwareRegistry()
     loaded = reg.load_file(path)
@@ -127,7 +127,7 @@ def test_multi_tp_artifact_roundtrip_and_resolution(tmp_path):
 
 def test_hwtrace1_loads_and_migrates(tmp_path):
     """Legacy hwtrace/1 artifacts (top-level tp+points) load unchanged and
-    re-save as hwtrace/2 with identical pricing."""
+    re-save at the current schema with identical pricing."""
     v2 = synthetic_trace(RTX3090, MODEL)
     legacy = str(tmp_path / "legacy.json")
     import dataclasses as dc
@@ -148,9 +148,66 @@ def test_hwtrace1_loads_and_migrates(tmp_path):
             pm_v2.iteration_latency(items).total_s, rel=1e-12)
     migrated = str(tmp_path / "migrated.json")
     loaded.save(migrated)
-    assert json.load(open(migrated))["schema"] == "hwtrace/2"
+    assert json.load(open(migrated))["schema"] == "hwtrace/3"
     re = HardwareTrace.load(migrated)
     assert len(re.points) == len(v2.points)
+
+
+def test_kernel_rows_roundtrip(tmp_path):
+    """hwtrace/3 kernel sub-buckets serialize under a per-grid "kernels"
+    list and come back as identical ``kern:<backend>:<kernel>`` points."""
+    from repro.core.trace import OpPoint
+    from repro.hw.trace import kern_op, split_kern_op
+    hwt = synthetic_trace(TPU_V6E, MODEL)
+    kern = [
+        OpPoint(kern_op("pallas", "attention"), "prefill", 128, 128, 1e-3),
+        OpPoint(kern_op("pallas", "attention"), "decode", 4, 256, 2e-4),
+        OpPoint(kern_op("pallas", "mlp"), "decode", 4, 256, 1e-4),
+        OpPoint(kern_op("reference", "head"), "decode", 4, 256, 5e-5),
+    ]
+    hwt.points.extend(kern)
+    path = str(tmp_path / "kern.json")
+    hwt.save(path)
+    doc = json.load(open(path))
+    assert doc["schema"] == "hwtrace/3"
+    (grid,) = doc["grids"]
+    assert {k["kernel"] for k in grid["kernels"]} == \
+        {"attention", "mlp", "head"}
+    # op-level points stay in "points" — kern rows never leak into them
+    assert not any(p["op"].startswith("kern:") for p in grid["points"])
+    loaded = HardwareTrace.load(path)
+    got = sorted((p for p in loaded.points if split_kern_op(p.op)),
+                 key=lambda p: (p.op, p.phase, p.tokens))
+    assert got == sorted(kern, key=lambda p: (p.op, p.phase, p.tokens))
+    assert loaded.kernel_backends() == ["pallas", "reference"]
+
+
+def test_hwtrace2_loads_without_kernels_and_migrates(tmp_path):
+    """An hwtrace/2 artifact (grids with no "kernels" key) loads as an
+    op-level-only trace — pricing unchanged — and re-saves as hwtrace/3."""
+    import dataclasses as dc
+    v3 = synthetic_trace(RTX3090, MODEL)
+    old = str(tmp_path / "old.json")
+    doc = {
+        "schema": "hwtrace/2", "device": v3.device, "model": v3.model,
+        "grids": [{"tp": 1, "points": [dc.asdict(p) for p in v3.points]}],
+        "interconnect": dc.asdict(v3.interconnect),
+        "spec": dc.asdict(v3.spec), "meta": v3.meta,
+    }
+    json.dump(doc, open(old, "w"))
+    loaded = HardwareRegistry().load_file(old)
+    assert loaded.kernel_backends() == []      # no kernel sub-buckets
+    icfg = InstanceCfg(name="i0", hw=RTX3090, model=MODEL)
+    pm_old = PerfModel(icfg, trace=loaded.to_trace())
+    pm_new = PerfModel(icfg, trace=v3.to_trace())
+    for items in _items():
+        assert pm_old.iteration_latency(items).total_s == pytest.approx(
+            pm_new.iteration_latency(items).total_s, rel=1e-12)
+    migrated = str(tmp_path / "migrated.json")
+    loaded.save(migrated)
+    assert json.load(open(migrated))["schema"] == "hwtrace/3"
+    re = HardwareTrace.load(migrated)
+    assert len(re.points) == len(v3.points)
 
 
 def test_hetero_instance_tp_prices_through_resolved_trace():
