@@ -149,7 +149,13 @@ class PrefixCacheCfg:
     enabled: bool = False
     block_tokens: int = 16           # radix-tree block granularity
     capacity_fraction: float = 0.5   # fraction of free HBM usable for cache
-    host_spill: bool = True
+    host_spill: bool = True          # device eviction spills HBM -> host RAM
+    ssd_spill: bool = False          # host eviction spills host -> SSD
+    # pluggable eviction-victim selection, resolved through the registry in
+    # repro.runtime.prefix_cache (register_eviction_policy adds names):
+    # "lru" | "lfu" | "priority" (priority-weighted LRU — low-priority
+    # tenants' blocks evict first)
+    eviction_policy: str = "lru"
     scope: str = "instance"          # instance | global
 
 
@@ -228,7 +234,9 @@ class InstanceCfg:
 
 @dataclasses.dataclass(frozen=True)
 class RouterCfg:
-    policy: str = "round_robin"      # round_robin | least_loaded | prefix_aware
+    # round_robin | least_loaded | prefix_aware | hardware_aware |
+    # kv_residency (prefix matches weighted by the tier the blocks live in)
+    policy: str = "round_robin"
     model_affinity: bool = True      # requests route to instances serving their model
 
 

@@ -100,6 +100,32 @@ class MemoryModel:
         self.cache_blocks_used -= take
         self.free_blocks += take
 
+    # ---- lower-tier pools (prefix-cache spill targets) ----
+    def tier(self, name: str) -> TierStats:
+        if name == "host":
+            return self.host
+        if name == "ssd":
+            return self.ssd
+        raise KeyError(f"unknown memory tier {name!r} (host | ssd)")
+
+    def tier_reserve(self, name: str, n_bytes: float) -> bool:
+        """Claim ``n_bytes`` in a lower tier; False when it would not fit."""
+        ts = self.tier(name)
+        if ts.used + n_bytes > ts.capacity:
+            return False
+        ts.used += n_bytes
+        return True
+
+    def tier_release(self, name: str, n_bytes: float):
+        ts = self.tier(name)
+        ts.used = max(0.0, ts.used - n_bytes)
+
+    def tier_stats(self) -> Dict[str, Dict[str, float]]:
+        return {
+            "host": {"capacity": self.host.capacity, "used": self.host.used},
+            "ssd": {"capacity": self.ssd.capacity, "used": self.ssd.used},
+        }
+
     # ---- tier transfers ----
     def transfer_time(self, n_bytes: float, src: str, dst: str) -> float:
         """device<->host<->ssd transfer latency (bandwidth-limited)."""

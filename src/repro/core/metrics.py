@@ -93,6 +93,32 @@ def merge_spec_decode(stats: List[Dict], timeline_len: int = 4096) -> Dict:
     }
 
 
+def merge_kv_tiers(stats: List[Dict]) -> Dict:
+    """Cluster-level KV-tier view: per-cache residency (deduplicated by
+    cache name — a ``scope="global"`` radix tree appears in every
+    instance's stats but must be counted once) plus summed hit-token and
+    transfer traffic over the distinct caches."""
+    by_cache: Dict[str, Dict] = {}
+    for s in stats:
+        by_cache.setdefault(s.get("cache", "cache"), s)
+    residency = {"device": 0, "host": 0, "ssd": 0}
+    hit_tokens = {"device": 0, "host": 0, "ssd": 0}
+    transfers: Dict[str, Dict[str, float]] = {}
+    for s in by_cache.values():
+        for tier, n in s.get("residency_blocks", {}).items():
+            residency[tier] = residency.get(tier, 0) + int(n)
+        for tier, n in s.get("hit_tokens", {}).items():
+            hit_tokens[tier] = hit_tokens.get(tier, 0) + int(n)
+        for path, t in s.get("transfers", {}).items():
+            agg = transfers.setdefault(path, {"blocks": 0, "bytes": 0.0})
+            agg["blocks"] += int(t.get("blocks", 0))
+            agg["bytes"] += float(t.get("bytes", 0.0))
+    return {"caches_merged": len(by_cache),
+            "residency_blocks": residency,
+            "hit_tokens": hit_tokens,
+            "transfers": transfers}
+
+
 def slo_met(r: SimRequest) -> bool:
     """A finished request meets its tenant SLO when TTFT and TPOT are
     within the class targets (TPOT is vacuous for single-token outputs)."""

@@ -48,6 +48,12 @@ class JaxBackend:
         # real work done outside execute() (prefix store, P/D export) is
         # wall-timed and charged to the next iteration
         self._carry_s = 0.0
+        # KV-tier accounting: restores counted at match time (mirrors
+        # SimBackend), tier moves measured as they execute on the store
+        self._restored_tokens = 0
+        self._restore_events = 0
+        self._tier_moves = 0
+        self._tier_move_s = 0.0
         # expert-load accounting for a replayed ExpertRoutingTrace: the
         # engine's replay hook forces every token's assignment in-graph
         # (ServingEngine(routing=trace)); this mirror maps the *executed
@@ -440,6 +446,9 @@ class JaxBackend:
             if restore is not None and req.cached_prefix > 0:
                 payload, length = restore
                 length = min(length, req.cached_prefix)
+                # SSD-tier stubs load here, inside execute()'s timed
+                # region, so the disk read lands on the virtual clock
+                payload = eng.radix.resolve(payload)
                 eng._restore_slot(slot, payload, length)
                 self._len[slot] = length
                 self._hist[slot] = list(toks[:length])
@@ -485,6 +494,11 @@ class JaxBackend:
         if payload is None or length <= 0:
             return 0
         self._restore[req.req_id] = (payload, length)
+        if match is not None:
+            # match is None on the preemption re-match path (on_preempt):
+            # that restore was already counted when the request first hit
+            self._restored_tokens += length
+            self._restore_events += 1
         return length
 
     def on_prefill_complete(self, req: SimRequest):
@@ -497,8 +511,42 @@ class JaxBackend:
         toks = self._prompt(req)
         blk = (len(toks) // self.eng.radix.block) * self.eng.radix.block
         if blk > 0:
-            self.eng.radix.insert(toks, self.eng._export_slot(slot, blk))
+            # device-resident entry (hot tier): the gathered jax arrays
+            # stay on device until the runtime demotes them
+            self.eng.radix.insert(
+                toks, self.eng._export_slot(slot, blk, to_host=False))
         self._carry_s += time.perf_counter() - t0
+
+    def on_tier_transfer(self, src: str, dst: str, n_bytes: float,
+                         prefix) -> None:
+        """Execute the runtime's tier decision on the real payload store:
+        demotions convert device entries to host numpy (then pickle to a
+        spill file for SSD), promotions ``device_put`` them back, drops
+        delete.  All of it is wall-timed into ``_carry_s`` — the same
+        carry discipline as prefix-store inserts — so tier traffic is
+        *measured* on this backend, matching the simulator's priced
+        ``transfer_time`` charge on the other."""
+        if self.eng.radix is None:
+            return
+        t0 = time.perf_counter()
+        if dst == "device":
+            self.eng.radix.promote(prefix)
+        elif dst in ("host", "ssd"):
+            self.eng.radix.demote(prefix, dst)
+        else:
+            self.eng.radix.drop(prefix)
+        self._carry_s += time.perf_counter() - t0
+        self._tier_move_s += time.perf_counter() - t0
+        self._tier_moves += 1
+
+    def kv_tier_stats(self) -> dict:
+        s = {"restored_tokens": self._restored_tokens,
+             "restore_events": self._restore_events,
+             "tier_moves": self._tier_moves,
+             "tier_move_s": self._tier_move_s}
+        if self.eng.radix is not None:
+            s["store_residency"] = self.eng.radix.residency()
+        return s
 
     def on_preempt(self, req: SimRequest) -> int:
         self.release(req)

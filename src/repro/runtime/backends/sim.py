@@ -89,8 +89,16 @@ class SimBackend:
                                         cfg.spec, enabled=False)),
                 trace=None)
         # prefix-cache restore / tier-fetch latency charged to the next
-        # iteration (the request that hit pays for its own fetch)
+        # iteration (the request that hit pays for its own fetch); spill
+        # traffic (device->host->ssd demotions) is priced the same way —
+        # the instance whose insert/admission forced the eviction pays
         self._pending_fetch_s = 0.0
+        self._restored_tokens = 0
+        self._restore_events = 0
+        self._fetch_bytes = 0.0
+        self._spill_bytes = 0.0
+        self._fetch_s = 0.0
+        self._spill_s = 0.0
         self._tput_hint = {}     # phase -> lazily priced reference tokens/s
         # ---- fast path (exact-mode opt-out: fast_path=False) ----
         # iteration-cost memo on the exact batch-shape signature.  Safe
@@ -282,15 +290,50 @@ class SimBackend:
 
     def on_prefix_hit(self, req: SimRequest, match: MatchResult,
                       usable: int) -> int:
-        if match.lower_tier_bytes > 0:
+        kb = self.memory.kv_bytes_per_token
+        host_b = match.host_tokens * kb
+        ssd_b = match.ssd_tokens * kb
+        if host_b > 0:
             # promote host-tier blocks: pay the fetch on this request
-            self._pending_fetch_s += self.memory.transfer_time(
-                match.lower_tier_bytes, "host", "device")
+            t = self.memory.transfer_time(host_b, "host", "device")
+            self._pending_fetch_s += t
+            self._fetch_s += t
+            self._fetch_bytes += host_b
+        if ssd_b > 0:
+            # SSD-resident blocks pay the (slower) SSD->device path
+            t = self.memory.transfer_time(ssd_b, "ssd", "device")
+            self._pending_fetch_s += t
+            self._fetch_s += t
+            self._fetch_bytes += ssd_b
         if usable > 0:
             # restoring the hit KV into the running cache is a real slot
             # copy (measured by the engine profiler as kv_export)
             self._pending_fetch_s += self.perf.kv_copy_cost(usable)
+            self._restored_tokens += usable
+            self._restore_events += 1
         return usable
+
+    def on_tier_transfer(self, src: str, dst: str, n_bytes: float,
+                         prefix) -> None:
+        """Settle one cache tier move.  Spills (dst is a lower tier) are
+        priced through ``transfer_time`` into the next iteration, same
+        carry discipline as prefix fetches.  Promotes (dst == device) were
+        already priced by ``on_prefix_hit`` from the match's lower-tier
+        bytes — pricing them again here would double-charge.  Drops move
+        no bytes."""
+        if dst in ("host", "ssd"):
+            t = self.memory.transfer_time(n_bytes, src, dst)
+            self._pending_fetch_s += t
+            self._spill_s += t
+            self._spill_bytes += n_bytes
+
+    def kv_tier_stats(self) -> dict:
+        return {"restored_tokens": self._restored_tokens,
+                "restore_events": self._restore_events,
+                "fetch_bytes": self._fetch_bytes,
+                "spill_bytes": self._spill_bytes,
+                "fetch_s": self._fetch_s,
+                "spill_s": self._spill_s}
 
     def on_prefill_complete(self, req: SimRequest):
         pass     # insert cost is modeled inside the perf trace (kv_export)

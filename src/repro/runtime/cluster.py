@@ -20,7 +20,8 @@ from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 from repro.core.config import ClusterCfg, InstanceCfg
 from repro.core.engine import EventQueue
 from repro.core.metrics import (aggregate, merge_expert_load,
-                                merge_spec_decode, tenant_rollup)
+                                merge_kv_tiers, merge_spec_decode,
+                                tenant_rollup)
 from repro.core.network import NetworkModel
 from repro.core.request import QUEUED, SimRequest
 from repro.core.trace import Trace, TraceRegistry
@@ -326,4 +327,10 @@ class ServingRuntime:
                  if "spec_decode" in s]
         if specs:
             m["spec_decode"] = merge_spec_decode(specs)
+        # KV-tier rollup: residency/traffic across the fleet's distinct
+        # caches (merge dedupes a shared global-scope cache by name)
+        tiers = [s["kv_tiers"] for s in m["instances"].values()
+                 if "kv_tiers" in s]
+        if tiers:
+            m["kv_tiers"] = merge_kv_tiers(tiers)
         return m

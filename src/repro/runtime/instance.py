@@ -91,7 +91,8 @@ class RuntimeInstance:
             req.prompt_tokens = list(req.prompt_tokens)[:max(cap, 1)]
         if self.cache is not None and req.state == QUEUED \
                 and req.prefill_done_tokens == 0:
-            m = self.cache.match(req.prompt_tokens, self.queue.now)
+            m = self.cache.match(req.prompt_tokens, self.queue.now,
+                                 getattr(req, "priority", 0))
             # never cache-skip the whole prompt: the last token must be
             # recomputed to produce the first output logits
             usable = min(m.tokens, req.prompt_len - 1)
@@ -103,6 +104,7 @@ class RuntimeInstance:
                 self.cache.promote(m.nodes, self.queue.now)
             self.cache.pin(m.nodes)
             req._pinned_nodes = m.nodes   # type: ignore[attr-defined]
+            self._settle_cache()
         self.scheduler.enqueue(req)
         self._kick()
 
@@ -305,8 +307,10 @@ class RuntimeInstance:
             req.token_times.append(now)
             req.generated = 1
         if self.cache is not None:
-            self.cache.insert(req.prompt_tokens, now)
+            self.cache.insert(req.prompt_tokens, now,
+                              getattr(req, "priority", 0))
             self.backend.on_prefill_complete(req)
+            self._settle_cache()
         if self.cfg.role == "prefill" and self.on_prefill_done is not None:
             req.state = TRANSFERRING
             self.scheduler.complete(req)
@@ -328,6 +332,30 @@ class RuntimeInstance:
 
     def _on_preempt(self, req: SimRequest):
         req.cached_prefix = max(0, self.backend.on_preempt(req))
+
+    def _settle_cache(self):
+        """Hand tier moves from the last cache mutation to the backend.
+
+        Called immediately after every mutating cache call (match+promote
+        in ``submit``, ``insert`` in ``_prefill_complete``,
+        ``release_pressure`` in ``admit_decode``) so — even with a shared
+        ``scope="global"`` cache — the pending list only ever holds moves
+        *this* instance caused, and this instance's backend is the one
+        that prices (sim) or performs (JaxBackend payload offload/restore)
+        them.  Tier moves never create standalone events: their cost rides
+        the instance's next iteration (``_pending_fetch_s`` /
+        ``_carry_s``), which keeps the decode fast-forward sound — spills
+        and promotes only happen at submit/prefill-complete/admit edges,
+        all of which are barriers already.
+        """
+        if self.cache is None:
+            return
+        transfers = self.cache.take_transfers()
+        fn = getattr(self.backend, "on_tier_transfer", None)
+        if fn is None:
+            return
+        for src, dst, n_bytes, prefix in transfers:
+            fn(src, dst, n_bytes, prefix)
 
     def _unpin(self, req: SimRequest):
         nodes = getattr(req, "_pinned_nodes", None)
@@ -357,6 +385,7 @@ class RuntimeInstance:
             # global-scope cache may be bound to a sibling's memory)
             self.cache.release_pressure(
                 self.mem.blocks_for(req.context_len + 1), self.queue.now)
+            self._settle_cache()
             ok = self.scheduler.admit_remote(req)
         if not ok and not self.scheduler.running:
             # idle instance: nothing will ever free memory, so a parked
@@ -456,5 +485,14 @@ class RuntimeInstance:
              "kv_watermark": list(self.kv_watermark)}
         if self.cache is not None:
             s["prefix_cache"] = self.cache.stats()
+            kv = {"cache": self.cache.name,
+                  "residency_blocks": self.cache.residency(),
+                  "hit_tokens": dict(self.cache.tier_hit_tokens),
+                  "transfers": {k: dict(v) for k, v in
+                                self.cache.tier_transfers.items()}}
+            extra = getattr(self.backend, "kv_tier_stats", None)
+            if extra is not None:
+                kv.update(extra())
+            s["kv_tiers"] = kv
         s.update(self.backend.stats())
         return s

@@ -8,6 +8,15 @@ Registered policies (``RouterCfg(policy=<name>)``):
   memory pressure).
 * ``prefix_aware``   — longest prefix-cache match wins (with a load guard);
   falls back to least-loaded.
+* ``kv_residency``   — prefix match discounted by where the matched blocks
+  actually live: device-resident tokens count full, host/SSD tokens are
+  docked the prefill-equivalent cost of restoring them, so a slow-tier hit
+  never beats recomputing on an idle sibling.
+
+All cache probes go through the read-only ``RadixPrefixCache.peek`` —
+routing candidates are *inspected*, never *accounted*: hit/miss counters
+and eviction recency move only when the chosen instance's ``submit`` runs
+the real ``match``.
 * ``hardware_aware`` — throughput-weighted least-loaded for heterogeneous
   clusters: queue depth is divided by each instance's measured (or
   trace-estimated) tokens/s, so faster accelerators receive proportionally
@@ -77,10 +86,49 @@ class PrefixAware(RoutingPolicy):
         for inst in candidates:
             if inst.cache is None:
                 continue
-            m = inst.cache.match(req.prompt_tokens, now)
+            # read-only probe: a routing scan must not bump hit/miss
+            # counters or LRU recency on instances that lose the vote
+            m = inst.cache.peek(req.prompt_tokens)
             if m.tokens > best_tokens:
                 best, best_tokens = inst, m.tokens
         if best is not None and best_tokens >= 32 and \
+                best.load() < 4 * min(c.load() for c in candidates) + 8:
+            return best
+        return min(candidates, key=lambda i: i.load())
+
+
+class KvResidency(RoutingPolicy):
+    """Residency-aware prefix routing: a match is worth its *device*
+    tokens plus lower-tier tokens discounted by what restoring them
+    costs.  The discount converts the tier-fetch time (``MemoryModel.
+    transfer_time`` over the matched host/SSD bytes) into prefill-token
+    equivalents via the instance's prefill throughput estimate — so a
+    3 GB/s SSD hit on a busy instance loses to plain recompute on an
+    idle one, while an HBM-resident match still wins outright.  Probes
+    are read-only (``peek``); the same load guard as ``prefix_aware``
+    keeps a hot cache from starving the rest of the fleet."""
+    name = "kv_residency"
+
+    def choose(self, req, candidates, now):
+        best, best_eff = None, 0.0
+        for inst in candidates:
+            if inst.cache is None:
+                continue
+            m = inst.cache.peek(req.prompt_tokens)
+            if m.tokens <= 0:
+                continue
+            kb = inst.mem.kv_bytes_per_token
+            restore_s = 0.0
+            if m.host_tokens:
+                restore_s += inst.mem.transfer_time(
+                    m.host_tokens * kb, "host", "device")
+            if m.ssd_tokens:
+                restore_s += inst.mem.transfer_time(
+                    m.ssd_tokens * kb, "ssd", "device")
+            eff = m.tokens - restore_s * inst.throughput_estimate("prefill")
+            if eff > best_eff:
+                best, best_eff = inst, eff
+        if best is not None and best_eff >= 32 and \
                 best.load() < 4 * min(c.load() for c in candidates) + 8:
             return best
         return min(candidates, key=lambda i: i.load())
@@ -113,7 +161,7 @@ class HardwareAware(RoutingPolicy):
 
 _POLICIES: Dict[str, Type[RoutingPolicy]] = {
     p.name: p for p in (RoundRobin, LeastLoaded, PrefixAware,
-                        HardwareAware)}
+                        KvResidency, HardwareAware)}
 
 
 def register_policy(cls: Type[RoutingPolicy]):

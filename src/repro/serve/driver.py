@@ -31,7 +31,9 @@ from repro.workload.sharegpt import Request
 def engine_instance_cfg(engine: ServingEngine,
                         scheduler: Optional[SchedulerCfg] = None,
                         trace_name: Optional[str] = None,
-                        moe=None, spec=None) -> InstanceCfg:
+                        moe=None, spec=None, hw=None,
+                        prefix_cache: Optional[PrefixCacheCfg] = None
+                        ) -> InstanceCfg:
     """Runtime InstanceCfg mirroring a live ``ServingEngine``.
 
     ``moe`` (a ``repro.core.MoECfg``) lets the simulated twin of a MoE
@@ -41,7 +43,10 @@ def engine_instance_cfg(engine: ServingEngine,
     comparable ``expert_load`` / ``spec_decode`` metrics.  A speculating
     engine always mirrors its draft length into the scheduler
     (``decode_tokens = k + 1``) so the KV ledger reserves the real
-    verification window.
+    verification window.  ``hw`` overrides the default ``ENGINE_HW``
+    spec and ``prefix_cache`` the derived ``PrefixCacheCfg`` — e.g. a
+    sim-vs-real KV-tier comparison shrinking tier capacities so both
+    backends walk the same spill chain (``tests/test_kv_tiers.py``).
     """
     from repro.core.config import MoECfg, SpecCfg
     from repro.profiler import model_spec_from_arch
@@ -58,15 +63,18 @@ def engine_instance_cfg(engine: ServingEngine,
     if engine.spec is not None:
         scheduler = dataclasses.replace(scheduler,
                                         decode_tokens=engine.spec.k + 1)
+    if prefix_cache is None:
+        prefix_cache = PrefixCacheCfg(
+            enabled=engine.radix is not None,
+            block_tokens=engine.radix.block if engine.radix else 16,
+            capacity_fraction=0.5)
     return InstanceCfg(
-        name=engine.name, hw=ENGINE_HW, model=model,
+        name=engine.name, hw=hw if hw is not None else ENGINE_HW,
+        model=model,
         n_devices=engine.tp, role=engine.role,
         parallelism=ParallelismCfg(tp=engine.tp),
         scheduler=scheduler,
-        prefix_cache=PrefixCacheCfg(
-            enabled=engine.radix is not None,
-            block_tokens=engine.radix.block if engine.radix else 16,
-            capacity_fraction=0.5),
+        prefix_cache=prefix_cache,
         moe=moe if moe is not None else MoECfg(),
         spec=spec if spec is not None else SpecCfg(),
         trace_name=trace_name)

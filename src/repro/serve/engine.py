@@ -65,15 +65,46 @@ def _bucket(n: int, lo: int = 16) -> int:
     return b
 
 
+#: hotter tiers have lower rank; demotion only moves entries downward
+_TIER_RANK = {"device": 0, "host": 1, "ssd": 2}
+
+
+def _payload_to_host(payload: dict) -> dict:
+    """Device -> host copy of a store entry (metadata keys pass through)."""
+    return {k: v if k.startswith("_")
+            else jax.tree_util.tree_map(np.asarray, v)
+            for k, v in payload.items()}
+
+
+def _payload_nbytes(payload: dict) -> float:
+    data = {k: v for k, v in payload.items() if not k.startswith("_")}
+    return float(sum(getattr(leaf, "nbytes", 0)
+                     for leaf in jax.tree_util.tree_leaves(data)))
+
+
 class RealRadixCache:
-    """Real prefix cache: token-prefix -> stored KV slices (numpy, host)."""
+    """Real prefix cache: token-prefix -> stored KV slices, tier-tagged.
+
+    Entries live on one of three tiers mirroring the runtime radix tree's
+    block accounting: ``device`` (jax arrays, accelerator-resident — the
+    insert default), ``host`` (numpy), ``ssd`` (pickled to a spill file;
+    a matched stub is only read back through :meth:`resolve`, so the disk
+    I/O lands inside the caller's wall-timed region).  Tier moves are
+    driven by the runtime's eviction decisions via
+    ``JaxBackend.on_tier_transfer`` — this class is mechanism only.
+    Moves are entry-granular: demoting one radix block demotes every
+    stored entry containing it (the payloads are whole-prefix slices,
+    not per-block pages)."""
 
     def __init__(self, block: int = 16, max_entries: int = 64):
         self.block = block
         self.store: "OrderedDict[tuple, dict]" = OrderedDict()
+        self.tier: Dict[tuple, str] = {}
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self._ssd_dir: Optional[str] = None
+        self._ssd_seq = 0
 
     def match(self, tokens,
               limit: Optional[int] = None) -> Tuple[int, Optional[dict]]:
@@ -95,7 +126,7 @@ class RealRadixCache:
             self.hits += 1
         return best_len, best
 
-    def insert(self, tokens, kv_slices: dict):
+    def insert(self, tokens, kv_slices: dict, tier: str = "device"):
         l = (len(tokens) // self.block) * self.block
         if l == 0:
             return
@@ -103,8 +134,94 @@ class RealRadixCache:
         if key in self.store:
             return
         self.store[key] = kv_slices
+        self.tier[key] = tier
         while len(self.store) > self.max_entries:
-            self.store.popitem(last=False)
+            old, payload = self.store.popitem(last=False)
+            self.tier.pop(old, None)
+            self._unlink(payload)
+
+    # ---- tier moves (entry-granular; see class docstring) ----
+    def _covering(self, prefix) -> list:
+        p = tuple(prefix)
+        n = len(p)
+        return [k for k in list(self.store) if len(k) >= n and k[:n] == p]
+
+    def demote(self, prefix, dst: str) -> float:
+        """Move entries containing ``prefix`` down to ``dst`` ("host" |
+        "ssd"); returns bytes actually moved."""
+        moved = 0.0
+        for k in self._covering(prefix):
+            if _TIER_RANK.get(self.tier.get(k, "host"), 1) \
+                    >= _TIER_RANK[dst]:
+                continue
+            host = _payload_to_host(self.resolve(self.store[k]))
+            moved += _payload_nbytes(host)
+            self._unlink(self.store[k])
+            self.store[k] = host if dst == "host" else self._to_ssd(host)
+            self.tier[k] = dst
+        return moved
+
+    def promote(self, prefix) -> float:
+        """Bring entries containing ``prefix`` back to device arrays."""
+        moved = 0.0
+        for k in self._covering(prefix):
+            if self.tier.get(k, "device") == "device":
+                continue
+            host = self.resolve(self.store[k])
+            moved += _payload_nbytes(host)
+            dev = {kk: v if kk.startswith("_")
+                   else jax.tree_util.tree_map(jax.device_put, v)
+                   for kk, v in host.items()}
+            self._unlink(self.store[k])
+            self.store[k] = dev
+            self.tier[k] = "device"
+        return moved
+
+    def drop(self, prefix):
+        for k in self._covering(prefix):
+            payload = self.store.pop(k)
+            self.tier.pop(k, None)
+            self._unlink(payload)
+
+    def resolve(self, payload: dict) -> dict:
+        """Materialize a matched payload: SSD stubs are unpickled here, so
+        call this inside the region whose wall time should absorb the
+        disk read (``JaxBackend._prefill_chunk`` does)."""
+        if isinstance(payload, dict) and "_ssd" in payload:
+            import pickle
+            with open(payload["_ssd"], "rb") as f:
+                return pickle.load(f)
+        return payload
+
+    def residency(self) -> Dict[str, int]:
+        out = {"device": 0, "host": 0, "ssd": 0}
+        for k in self.store:
+            out[self.tier.get(k, "device")] += 1
+        return out
+
+    def _to_ssd(self, host_payload: dict) -> dict:
+        import os
+        import pickle
+        import tempfile
+        if self._ssd_dir is None:
+            self._ssd_dir = tempfile.mkdtemp(prefix="kv-ssd-")
+        self._ssd_seq += 1
+        path = os.path.join(self._ssd_dir, f"kv{self._ssd_seq}.pkl")
+        with open(path, "wb") as f:
+            pickle.dump(host_payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        return {"_ssd": path,
+                "_length": host_payload.get("_length"),
+                "_length_bucket": host_payload.get("_length_bucket")}
+
+    @staticmethod
+    def _unlink(payload):
+        path = payload.get("_ssd") if isinstance(payload, dict) else None
+        if path:
+            import os
+            try:
+                os.remove(path)
+            except OSError:
+                pass
 
 
 class ServingEngine:
@@ -477,10 +594,12 @@ class ServingEngine:
                 impl, donate_argnums=(0,), static_argnums=(2,)))
         self.cache = fn(self.cache, sub_cache, slot, n)
 
-    def _export_slot(self, slot: int, length: int) -> dict:
-        """Copy a slot's KV out to host numpy (prefix cache / P/D).
-        Device-side gather is jitted per bucketed length; only the final
-        np.asarray is a host copy."""
+    def _export_slot(self, slot: int, length: int,
+                     to_host: bool = True) -> dict:
+        """Copy a slot's KV out (prefix cache / P/D).  Device-side gather
+        is jitted per bucketed length; ``to_host=True`` adds the final
+        np.asarray host copy, ``to_host=False`` keeps the gathered jax
+        arrays device-resident (the prefix store's hot tier)."""
         blen = _bucket(length)
         blen = min(blen, self.max_len)
         if self.paged:
@@ -509,7 +628,8 @@ class ServingEngine:
                 fn = self._put_jit("export_paged", blen,
                                    jax.jit(impl, static_argnums=(1,)))
             dev = fn(self.cache, slot)
-            out = jax.tree_util.tree_map(np.asarray, dev)
+            out = jax.tree_util.tree_map(np.asarray, dev) if to_host \
+                else dict(dev)
             out["_length"] = length
             out["_length_bucket"] = blen
             return out
@@ -528,7 +648,8 @@ class ServingEngine:
             fn = self._put_jit("export", blen,
                                jax.jit(impl, static_argnums=(1,)))
         dev = fn(self.cache, slot)
-        out = jax.tree_util.tree_map(np.asarray, dev)
+        out = jax.tree_util.tree_map(np.asarray, dev) if to_host \
+            else dict(dev)
         out["_length"] = length
         out["_length_bucket"] = blen
         return out

@@ -1,0 +1,338 @@
+"""Multi-tier KV offload: accounting invariants, eviction policies,
+read-only routing probes, and sim/real tier parity.
+
+The regression anchors here are the two accounting bugs this layer
+shipped with: ``promote`` leaking ``mem.host.used`` (the host pool filled
+with ghosts until ``host_spill`` permanently failed) and lower-tier nodes
+being unreclaimable (``_evict_one`` skipped every non-device node, so
+``host.used`` grew monotonically and spill silently degraded to drop).
+``RadixPrefixCache.check_invariants`` pins the repaired bookkeeping:
+per-tier node counts match the counters and every lower tier's pool holds
+exactly ``blocks * bytes_per_block``.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import ClusterCfg, RouterCfg, simulate
+from repro.core.cluster import Cluster
+from repro.core.config import (TPU_V5E, InstanceCfg, ModelSpec,
+                               ParallelismCfg, PrefixCacheCfg, SchedulerCfg)
+from repro.core.memory import MemoryModel
+from repro.runtime.prefix_cache import (RadixPrefixCache,
+                                        eviction_policies)
+from repro.serve import DriverCfg, ServeDriver, ServingEngine
+from repro.serve.driver import engine_instance_cfg, engine_scheduler_cfg
+from repro.workload import ShareGPTConfig, generate
+from repro.workload.sharegpt import Request
+
+TINY = ModelSpec(name="tiny", n_layers=2, d_model=64, n_heads=4,
+                 n_kv_heads=2, d_head=16, d_ff=128, vocab=256)
+BLOCK = 8
+BPB = TINY.kv_bytes_per_token * BLOCK      # bytes per radix/KV block
+
+
+def _cache(device_blocks=2, host_blocks=2, ssd_blocks=0, policy="lru",
+           host_spill=True, ssd_spill=False):
+    hw = dataclasses.replace(TPU_V5E, hbm_capacity=1e9,
+                             host_capacity=host_blocks * BPB,
+                             ssd_capacity=ssd_blocks * BPB)
+    pc = PrefixCacheCfg(enabled=True, block_tokens=BLOCK,
+                        host_spill=host_spill, ssd_spill=ssd_spill,
+                        eviction_policy=policy)
+    icfg = InstanceCfg(name="t", hw=hw, model=TINY, kv_block_tokens=BLOCK,
+                       prefix_cache=pc)
+    mem = MemoryModel(icfg)
+    assert mem.bytes_per_block == BPB
+    cache = RadixPrefixCache(pc, mem)
+    cache.capacity_blocks = device_blocks    # exact, tiny, test-controlled
+    return cache, mem
+
+
+def _prefix(seed: int, blocks: int):
+    return [seed * 1000 + j for j in range(blocks * BLOCK)]
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: promote must release the lower-tier bytes it vacates
+# ---------------------------------------------------------------------------
+
+def test_promote_spill_round_trip_releases_host_bytes():
+    cache, mem = _cache(device_blocks=2, host_blocks=4)
+    a, b, c = _prefix(1, 1), _prefix(2, 1), _prefix(3, 1)
+    cache.insert(a, 1.0)
+    cache.insert(b, 2.0)                 # device now at capacity
+    cache.insert(c, 3.0)                 # LRU victim (a) spills to host
+    cache.check_invariants()
+    assert cache.n_host_blocks == 1
+    assert mem.host.used == BPB
+    assert cache.tier_transfers["device->host"]["blocks"] == 1
+
+    m = cache.match(a, 4.0)
+    assert m.host_tokens == BLOCK and m.device_tokens == 0
+    assert m.lower_tier_bytes == BPB
+    cache.capacity_blocks = 3            # room to promote without evicting
+    cache.promote(m.nodes, 4.0)
+    cache.check_invariants()
+    # the regression: promote decremented n_host_blocks but left
+    # mem.host.used claimed, leaking the host pool one block per promote
+    assert cache.n_host_blocks == 0
+    assert mem.host.used == 0.0
+    assert cache.tier_transfers["host->device"]["blocks"] == 1
+    m2 = cache.match(a, 5.0)
+    assert m2.device_tokens == BLOCK and m2.lower_tier_bytes == 0.0
+
+
+def test_repeated_round_trips_never_leak():
+    cache, mem = _cache(device_blocks=2, host_blocks=2)
+    a, b = _prefix(1, 1), _prefix(2, 1)
+    cache.insert(a, 0.0)
+    cache.insert(b, 1.0)
+    for t in range(2, 22):
+        # alternate pressure so a and b keep swapping tiers
+        victim_prefix = a if t % 2 == 0 else b
+        m = cache.match(victim_prefix, float(t))
+        if m.lower_tier_bytes > 0:
+            cache.promote(m.nodes, float(t))
+        cache.release_pressure(1, float(t) + 0.5)
+        cache.check_invariants()
+        assert mem.host.used <= mem.host.capacity
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: lower tiers are reclaimable (host -> ssd -> drop)
+# ---------------------------------------------------------------------------
+
+def test_host_tier_evicts_to_ssd_then_drops_under_pressure():
+    cache, mem = _cache(device_blocks=2, host_blocks=2, ssd_blocks=2,
+                        ssd_spill=True)
+    for s in range(8):
+        cache.insert(_prefix(s, 1), float(s))
+        cache.check_invariants()
+    # cascaded demotion kept every tier at capacity instead of failing
+    assert cache.n_device_blocks == 2
+    assert cache.n_host_blocks == 2
+    assert cache.n_ssd_blocks == 2
+    assert mem.host.used == 2 * BPB <= mem.host.capacity
+    assert mem.ssd.used == 2 * BPB <= mem.ssd.capacity
+    assert cache.tier_transfers["host->ssd"]["blocks"] >= 1
+    assert cache.tier_transfers["ssd->drop"]["blocks"] >= 1
+
+
+def test_host_tier_drops_when_ssd_disabled():
+    cache, mem = _cache(device_blocks=2, host_blocks=2, ssd_spill=False)
+    for s in range(8):
+        cache.insert(_prefix(s, 1), float(s))
+        cache.check_invariants()
+    # the regression: host-tier nodes were never evicted, so host.used
+    # grew monotonically and device eviction degraded to silent drops
+    assert cache.n_host_blocks == 2
+    assert mem.host.used == 2 * BPB
+    assert cache.tier_transfers["host->drop"]["blocks"] >= 1
+    assert cache.n_ssd_blocks == 0 and mem.ssd.used == 0.0
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: routing probes are read-only
+# ---------------------------------------------------------------------------
+
+def test_peek_touches_no_state():
+    cache, _ = _cache(device_blocks=4, host_blocks=4)
+    a = _prefix(1, 2)
+    cache.insert(a, 1.0)
+    nodes = cache._walk(a)
+    before = [(nd.last_access, nd.accesses) for nd in nodes]
+    h, ms = cache.hits, cache.misses
+    for _ in range(5):
+        m = cache.peek(a)
+        assert m.tokens == 2 * BLOCK
+        assert cache.peek(_prefix(9, 1)).tokens == 0
+    assert (cache.hits, cache.misses) == (h, ms)
+    assert [(nd.last_access, nd.accesses) for nd in nodes] == before
+    # the accounting match still works and is the only thing that counts
+    cache.match(a, 2.0)
+    assert (cache.hits, cache.misses) == (h + 1, ms)
+
+
+DENSE = ModelSpec(name="dense-8b", n_layers=32, d_model=4096, n_heads=32,
+                  n_kv_heads=8, d_head=128, d_ff=14336, vocab=128256)
+
+
+def _inst(name, **kw):
+    base = dict(hw=TPU_V5E, model=DENSE, n_devices=8,
+                parallelism=ParallelismCfg(tp=8),
+                scheduler=SchedulerCfg(max_batch_size=32),
+                prefix_cache=PrefixCacheCfg(enabled=True))
+    base.update(kw)
+    return InstanceCfg(name=name, **base)
+
+
+@pytest.mark.parametrize("policy", ["prefix_aware", "kv_residency"])
+def test_dispatching_n_requests_produces_exactly_n_accounting_events(policy):
+    """Routing probes across M candidates must not inflate hit/miss
+    accounting: N dispatched requests -> exactly N match events."""
+    n = 40
+    reqs = generate(ShareGPTConfig(n_requests=n, rate=20.0, vocab=32000,
+                                   share_fraction=0.8, n_conversations=4,
+                                   seed=7))
+    m = simulate(ClusterCfg((_inst("a"), _inst("b"), _inst("c")),
+                            router=RouterCfg(policy)), reqs)
+    assert m["finished"] == n
+    events = sum(i["prefix_cache"]["hits"] + i["prefix_cache"]["misses"]
+                 for i in m["instances"].values())
+    assert events == n
+    # per-instance residency stats are part of the public metrics surface
+    for stats in m["instances"].values():
+        kv = stats["kv_tiers"]
+        assert set(kv["residency_blocks"]) == {"device", "host", "ssd"}
+    assert m["kv_tiers"]["caches_merged"] == 3
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: pinned prefixes survive pressure under every policy
+# ---------------------------------------------------------------------------
+
+def test_all_expected_policies_registered():
+    assert {"lru", "lfu", "priority"} <= set(eviction_policies())
+
+
+@pytest.mark.parametrize("policy", sorted(eviction_policies()))
+def test_pinned_prefix_survives_release_pressure(policy):
+    cache, _ = _cache(device_blocks=4, host_blocks=8, policy=policy)
+    shared = _prefix(1, 2)
+    cache.insert(shared, 1.0)
+    m = cache.match(shared, 2.0)
+    cache.pin(m.nodes)
+    sibling = _prefix(2, 2)
+    cache.insert(sibling, 3.0)
+    freed = cache.release_pressure(4, 4.0)
+    cache.check_invariants()
+    assert freed >= 1
+    # pinned shared prefix stays device-resident in full
+    assert all(nd.tier == "device" for nd in m.nodes)
+    # the unpinned sibling paid: its evictable leaf left the device tier
+    sib_nodes = cache._walk(sibling)
+    assert any(nd.tier != "device" for nd in sib_nodes) \
+        or len(sib_nodes) < 2
+    cache.unpin(m.nodes)
+    freed2 = cache.release_pressure(4, 5.0)
+    cache.check_invariants()
+    assert freed2 >= 1            # unpinning makes the prefix reclaimable
+
+
+def test_lfu_keeps_hot_prefix_lru_would_evict():
+    cache, _ = _cache(device_blocks=2, host_blocks=4, policy="lfu")
+    hot, cold = _prefix(1, 1), _prefix(2, 1)
+    cache.insert(hot, 1.0)
+    for t in (2.0, 3.0, 4.0):
+        cache.match(hot, t)
+    cache.insert(cold, 5.0)       # newer but never re-used
+    cache.insert(_prefix(3, 1), 6.0)
+    cache.check_invariants()
+    # LRU would have evicted hot (older last_access); LFU spills cold
+    assert cache._walk(hot)[0].tier == "device"
+    assert cache._walk(cold)[0].tier == "host"
+
+
+def test_priority_weighted_eviction_protects_high_priority_tenant():
+    cache, _ = _cache(device_blocks=2, host_blocks=4, policy="priority")
+    low, high = _prefix(1, 1), _prefix(2, 1)
+    cache.insert(high, 0.5, priority=5)   # older, high-priority tenant
+    cache.insert(low, 1.0, priority=0)
+    cache.insert(_prefix(3, 1), 2.0, priority=0)
+    cache.check_invariants()
+    assert cache._walk(high)[0].tier == "device"
+    assert cache._walk(low)[0].tier == "host"
+
+
+def test_unknown_eviction_policy_is_loud():
+    hw = dataclasses.replace(TPU_V5E, hbm_capacity=1e9)
+    icfg = InstanceCfg(name="t", hw=hw, model=TINY, kv_block_tokens=BLOCK,
+                       prefix_cache=PrefixCacheCfg(enabled=True,
+                                                   block_tokens=BLOCK))
+    mem = MemoryModel(icfg)
+    with pytest.raises(ValueError, match="nope"):
+        RadixPrefixCache(PrefixCacheCfg(enabled=True, block_tokens=BLOCK,
+                                        eviction_policy="nope"), mem)
+
+
+# ---------------------------------------------------------------------------
+# sim/real tier-accounting parity
+# ---------------------------------------------------------------------------
+
+ARCH = "llama3.1-8b-tiny"
+
+
+def _grouped_workload(vocab, n_groups=2, tail=8):
+    """Two-phase shared-prefix workload: phase A (t=0) populates the
+    cache, phase B (t=1e6, long after A finished on either time axis)
+    hits it.  Shared prefixes are exact block multiples (32 tokens) so
+    the runtime radix tree and the real KV store agree on restored
+    lengths token-for-token."""
+    reqs = []
+    rid = 0
+    for g in range(n_groups):
+        base = [(g * 977 + j * 13) % vocab for j in range(32)]
+        reqs.append(Request(req_id=rid, arrival=0.0,
+                            prompt_tokens=base + [(g * 31 + 1 + j) % vocab
+                                                  for j in range(tail)],
+                            output_len=4))
+        rid += 1
+    for g in range(n_groups):
+        base = [(g * 977 + j * 13) % vocab for j in range(32)]
+        for k in range(2):
+            reqs.append(Request(req_id=rid, arrival=1e6,
+                                prompt_tokens=base
+                                + [(g * 53 + k * 7 + 2 + j) % vocab
+                                   for j in range(tail)],
+                                output_len=4))
+            rid += 1
+    return reqs
+
+
+def test_sim_real_tier_hit_and_restore_accounting_parity():
+    """One shared workload, both backends: identical scheduling decisions
+    AND identical tier-hit / transfer / restore accounting.  Cache
+    capacity is pinned to 3 blocks so phase A's two 2-block prefixes
+    force a device->host spill, and phase B's hits restore through the
+    lower tier on both backends."""
+    cfg = get_config(ARCH)
+    reqs = _grouped_workload(cfg.vocab)
+    sched = engine_scheduler_cfg(2)
+
+    eng = ServingEngine(cfg, max_batch=2, max_len=256, prefix_cache=True,
+                        name="e0")
+    drv = ServeDriver([eng], DriverCfg(scheduler=sched))
+    for inst in drv.runtime.instances.values():
+        inst.cache.capacity_blocks = 3
+    real = drv.run(reqs, warmup=False)
+    real_dec = {n: i.decisions for n, i in drv.runtime.instances.items()}
+
+    icfg = engine_instance_cfg(eng, sched)
+    sim_cluster = Cluster(ClusterCfg(instances=(icfg,),
+                                     router=RouterCfg("round_robin")))
+    for inst in sim_cluster.instances.values():
+        inst.cache.capacity_blocks = 3
+    sim_cluster.submit_workload(reqs)
+    sim = sim_cluster.run()
+    sim_dec = {n: i.decisions for n, i in sim_cluster.instances.items()}
+
+    assert real["finished"] == sim["finished"] == len(reqs)
+    assert real_dec == sim_dec
+
+    rkv = real["instances"]["e0"]["kv_tiers"]
+    skv = sim["instances"]["e0"]["kv_tiers"]
+    for key in ("residency_blocks", "hit_tokens", "transfers"):
+        assert rkv[key] == skv[key], key
+    assert rkv["restored_tokens"] == skv["restored_tokens"] > 0
+    assert rkv["restore_events"] == skv["restore_events"] > 0
+    # the workload actually exercised the tier chain
+    assert rkv["transfers"].get("device->host", {}).get("blocks", 0) >= 1
+    assert rkv["hit_tokens"]["host"] + rkv["hit_tokens"]["ssd"] > 0
+    assert real["instances"]["e0"]["prefix_cache"] == \
+        sim["instances"]["e0"]["prefix_cache"]
+    for inst in sim_cluster.instances.values():
+        inst.cache.check_invariants()
+    for inst in drv.runtime.instances.values():
+        inst.cache.check_invariants()
