@@ -3,7 +3,8 @@ least-loaded router, diurnal / bursty arrivals, fast-path vs exact-path
 wall-clock.
 
   PYTHONPATH=src python -m benchmarks.fleet_scale \
-      [--instances 100] [--requests 1000] [--parity] [--out BENCH_simtime.json]
+      [--instances 100] [--requests 1000] [--parity] \
+      [--trace trace.json [--events events.json]] [--out BENCH_simtime.json]
 
 ``--autoscale`` switches to the multi-tenant SLO scenario: a two-class
 tenant mix (interactive: high priority / tight SLOs; batch: low priority /
@@ -93,8 +94,36 @@ def _run_mode(ccfg, reqs, fast: bool):
     return m
 
 
+def _sans_trace(metrics: dict) -> dict:
+    """Everything tracing must leave untouched: all metrics except the
+    wall clock and the attribution block tracing itself adds."""
+    m = dict(metrics)
+    m.pop("sim_wall_s", None)
+    m.pop("attribution", None)
+    return m
+
+
+def _run_traced(ccfg, reqs, trace_out: str, events_out: str | None,
+                baseline: dict) -> dict:
+    """One extra fast run with the event recorder attached.  Tracing must
+    be *invisible* to the simulation: every metric (decisions, per-instance
+    stats, even the event count) must match the untraced run bit-for-bit."""
+    from repro.obs import EventRecorder, write_chrome_trace
+    rec = EventRecorder()
+    m = simulate(ccfg, reqs, traces=_registry(), trace=rec)
+    assert _sans_trace(m) == _sans_trace(baseline), \
+        "tracing perturbed the simulation"
+    write_chrome_trace(rec, trace_out)
+    if events_out:
+        rec.save(events_out)
+    return {"wall_s": m["sim_wall_s"], "events_recorded": len(rec.events),
+            "trace": trace_out}
+
+
 def run(n_instances: int = 100, n_requests: int = 1000,
-        parity: bool = False, exact: bool = True) -> dict:
+        parity: bool = False, exact: bool = True,
+        trace_out: str | None = None,
+        events_out: str | None = None) -> dict:
     # arrival shapes: amplitude ~1 gives deep troughs (long decode-only
     # stretches, the fast-forward's best case) and sharp peaks (router and
     # admission stress); "bursty" layers cv=4 clumping on top
@@ -141,6 +170,9 @@ def run(n_instances: int = 100, n_requests: int = 1000,
             row["equiv_events_per_s"] = (m_exact["sim_events"]
                                          / m_fast["sim_wall_s"])
             row["parity"] = ok
+        if trace_out and config == "diurnal":
+            row["traced"] = _run_traced(ccfg, reqs, trace_out, events_out,
+                                        baseline=m_fast)
         rows.append(row)
         msg = (f"fleet,{config},inst={n_instances},reqs={n_requests},"
                f"fast={row['fast']['wall_s']:.3f}s/"
@@ -149,6 +181,9 @@ def run(n_instances: int = 100, n_requests: int = 1000,
             msg += (f",exact={row['exact']['wall_s']:.3f}s/"
                     f"{row['exact']['events']}ev,"
                     f"speedup={row['speedup']:.1f}x,parity={row['parity']}")
+        if "traced" in row:
+            msg += (f",traced={row['traced']['wall_s']:.3f}s/"
+                    f"{row['traced']['events_recorded']}rec")
         print(msg, flush=True)
     return {"rows": rows, "parity": all_parity if exact else None}
 
@@ -270,13 +305,28 @@ def main() -> None:
                     help="multi-tenant SLO scenario: fixed fleet vs the "
                          "SLO-aware autoscaler (goodput + instance-count "
                          "timeline; asserts the autoscaler wins)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="also run the diurnal shape once with event "
+                         "tracing and write a Perfetto-loadable Chrome "
+                         "trace JSON (asserts tracing changed nothing)")
+    ap.add_argument("--events", default=None, metavar="PATH",
+                    help="with --trace: also save the raw event log "
+                         "(re-exportable via python -m repro.obs)")
     ap.add_argument("--out", default="BENCH_simtime.json")
     args = ap.parse_args()
     if args.parity and args.fast_only:
         ap.error("--parity requires the exact runs (drop --fast-only)")
-    runner = run_autoscale if args.autoscale else run
-    out = runner(n_instances=args.instances, n_requests=args.requests,
-                 parity=args.parity, exact=not args.fast_only)
+    if args.autoscale:
+        if args.trace:
+            ap.error("--trace applies to the fleet benchmark, not "
+                     "--autoscale")
+        out = run_autoscale(n_instances=args.instances,
+                            n_requests=args.requests,
+                            parity=args.parity, exact=not args.fast_only)
+    else:
+        out = run(n_instances=args.instances, n_requests=args.requests,
+                  parity=args.parity, exact=not args.fast_only,
+                  trace_out=args.trace, events_out=args.events)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, default=float)
     print(f"fleet,wrote={args.out}", flush=True)

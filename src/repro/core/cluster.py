@@ -27,12 +27,13 @@ class Cluster(ServingRuntime):
     def __init__(self, cfg: ClusterCfg,
                  traces: Optional[TraceRegistry] = None,
                  hw: Optional["HardwareRegistry"] = None,
-                 fast_path: bool = True):
+                 fast_path: bool = True,
+                 recorder=None):
         super().__init__(
             cfg,
             backend_factory=lambda icfg, trace: SimBackend(
                 icfg, trace=trace, fast_path=fast_path),
-            traces=traces, hw=hw)
+            traces=traces, hw=hw, recorder=recorder)
 
 
 def simulate(cfg: ClusterCfg, requests: Sequence[Request],
@@ -40,12 +41,35 @@ def simulate(cfg: ClusterCfg, requests: Sequence[Request],
              hw: Optional["HardwareRegistry"] = None,
              until: Optional[float] = None,
              fast_path: bool = True,
-             autoscale=None) -> Dict:
+             autoscale=None,
+             trace=None) -> Dict:
     """Run the workload to completion.  ``autoscale`` optionally attaches
     an ``repro.runtime.autoscale.SLOAutoscaler`` (metrics land under
-    ``metrics()["autoscale"]``)."""
-    cluster = Cluster(cfg, traces=traces, hw=hw, fast_path=fast_path)
+    ``metrics()["autoscale"]``).
+
+    ``trace`` enables runtime event tracing (``docs/observability.md``):
+    pass a ``repro.obs.EventRecorder`` to keep the event log in hand, or
+    a path string to write a Perfetto-loadable Chrome trace JSON there.
+    Either way ``metrics()["attribution"]`` carries the per-request
+    latency waterfalls.  ``None`` (default) records nothing and costs
+    nothing.
+    """
+    recorder, trace_path = None, None
+    if trace is not None:
+        # lazy import: repro.core must not pull higher layers at load time
+        from repro.obs.record import EventRecorder
+        if isinstance(trace, EventRecorder):
+            recorder = trace
+        else:
+            trace_path = str(trace)
+            recorder = EventRecorder()
+    cluster = Cluster(cfg, traces=traces, hw=hw, fast_path=fast_path,
+                      recorder=recorder)
     if autoscale is not None:
         cluster.attach_autoscaler(autoscale)
     cluster.submit_workload(requests)
-    return cluster.run(until=until)
+    m = cluster.run(until=until)
+    if trace_path is not None:
+        from repro.obs.export import write_chrome_trace
+        write_chrome_trace(recorder, trace_path)
+    return m

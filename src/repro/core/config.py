@@ -230,6 +230,9 @@ class InstanceCfg:
     # adding-hardware.md).  When set, the trace's embedded spec overrides
     # ``hw`` so memory model and fallback pricing match the device.
     hw_name: Optional[str] = None
+    # KV watermark timeline window (samples kept); evictions beyond it
+    # are counted in stats()["kv_watermark_dropped"] — no silent caps
+    watermark_window: int = 4096
 
 
 @dataclasses.dataclass(frozen=True)

@@ -183,9 +183,12 @@ def aggregate(requests: List[SimRequest]) -> Dict:
         return {"finished": 0}
     ttft = np.array([r.ttft() for r in done if r.ttft() is not None])
     tpot = np.array([r.tpot() for r in done if r.tpot() is not None])
+    # no request produced inter-token latencies (e.g. every output was a
+    # single token): report None like the other empty-stat fields rather
+    # than fabricating a perfect 0.0 latency
     itls = np.concatenate([np.array(r.itl()) for r in done
                            if len(r.itl())]) if any(
-        len(r.itl()) for r in done) else np.array([0.0])
+        len(r.itl()) for r in done) else np.array([])
     t_end = max(r.t_finish for r in done)
     t_start = min(r.arrival for r in done)
     out_tokens = sum(r.generated for r in done)
@@ -194,8 +197,8 @@ def aggregate(requests: List[SimRequest]) -> Dict:
         "ttft_mean_s": float(ttft.mean()) if ttft.size else None,
         "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft.size else None,
         "tpot_mean_s": float(tpot.mean()) if tpot.size else None,
-        "itl_mean_s": float(itls.mean()),
-        "itl_p99_s": float(np.percentile(itls, 99)),
+        "itl_mean_s": float(itls.mean()) if itls.size else None,
+        "itl_p99_s": float(np.percentile(itls, 99)) if itls.size else None,
         "throughput_tok_s": out_tokens / max(t_end - t_start, 1e-9),
         "makespan_s": t_end - t_start,
         "preemptions": sum(r.n_preemptions for r in done),

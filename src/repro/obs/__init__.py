@@ -1,0 +1,17 @@
+"""Unified runtime event tracing: Perfetto timelines, per-request
+waterfalls, and simulated-time series on both backends.
+
+Enable by passing an :class:`EventRecorder` (or an output path) to
+``repro.core.simulate(..., trace=...)``, ``Cluster(...,
+recorder=...)``, or ``ServeDriver(..., recorder=...)``.  Disabled is
+the default and costs nothing: the runtime's ``obs`` attributes stay
+``None`` and every emission site is guarded.
+"""
+from repro.obs.attribution import SEGMENTS, attribution
+from repro.obs.events import Event
+from repro.obs.export import (chrome_trace, validate_chrome_trace,
+                              write_chrome_trace)
+from repro.obs.record import EventRecorder
+
+__all__ = ["Event", "EventRecorder", "attribution", "SEGMENTS",
+           "chrome_trace", "write_chrome_trace", "validate_chrome_trace"]

@@ -139,6 +139,13 @@ class SLOAutoscaler:
         verdict = self.decide(obs)
         if now - self._last_action_t < self.cfg.cooldown_s:
             verdict = None
+        rec = rt.obs
+        if rec is not None:
+            from repro.obs.events import AUTOSCALE
+            rec.emit(now, AUTOSCALE,
+                     payload={"verdict": verdict, "pool": n,
+                              "attainment": obs["attainment"],
+                              "queue_depth": obs["queue_depth"]})
         if verdict == "out" and n < self.cfg.max_instances:
             name = f"{self.cfg.name_prefix}{self._counter}"
             self._counter += 1

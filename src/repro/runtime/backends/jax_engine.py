@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.config import InstanceCfg
 from repro.core.memory import MemoryModel
 from repro.core.request import SimRequest
+from repro.obs.events import SPEC_STEP
 from repro.runtime.backend import KvHandoff
 from repro.runtime.prefix_cache import MatchResult
 from repro.runtime.scheduler import ScheduledWork
@@ -48,6 +49,11 @@ class JaxBackend:
         # real work done outside execute() (prefix store, P/D export) is
         # wall-timed and charged to the next iteration
         self._carry_s = 0.0
+        # event recorder, wired by RuntimeInstance.attach_obs.  The real
+        # engine emits the same schema as the sim; restore cost is folded
+        # into the wall-timed iteration, so kv_restore reports 0 seconds
+        self.obs = None
+        self.last_restore_s = 0.0
         # KV-tier accounting: restores counted at match time (mirrors
         # SimBackend), tier moves measured as they execute on the store
         self._restored_tokens = 0
@@ -409,6 +415,11 @@ class JaxBackend:
             self.out_tokens.setdefault(req.req_id, []).extend(emitted)
             self._emit[slot] += len(emitted)
             self._emitted[req.req_id] = len(emitted)
+            if self.obs is not None:
+                self.obs.emit(now, SPEC_STEP, inst=self.cfg.name,
+                              req=req.req_id, tenant=req.tenant,
+                              payload={"accepted": int(accepted),
+                                       "proposed": int(k_eff[slot])})
 
         # 5. restore authoritative lengths on both caches: verify bumped
         # scheduled slots to the full window; draft decodes bumped every

@@ -14,6 +14,7 @@ from repro.core.memory import MemoryModel
 from repro.core.perfmodel import BatchItem, PerfModel, batch_positions
 from repro.core.request import SimRequest
 from repro.core.trace import Trace
+from repro.obs.events import SPEC_STEP
 from repro.runtime.backend import KvHandoff
 from repro.runtime.prefix_cache import MatchResult
 from repro.runtime.scheduler import ScheduledWork, to_batch_items
@@ -93,6 +94,11 @@ class SimBackend:
         # traffic (device->host->ssd demotions) is priced the same way —
         # the instance whose insert/admission forced the eviction pays
         self._pending_fetch_s = 0.0
+        # last on_prefix_hit's total restore charge — the per-request
+        # seconds the kv_restore event (and latency attribution) reports
+        self.last_restore_s = 0.0
+        # event recorder, wired by RuntimeInstance.attach_obs
+        self.obs = None
         self._restored_tokens = 0
         self._restore_events = 0
         self._fetch_bytes = 0.0
@@ -271,6 +277,7 @@ class SimBackend:
         latency = self.perf.iteration_latency(verify_items).total_s \
             + (k_step + 1) * self.draft_perf.iteration_latency(
                 draft_items).total_s
+        obs = self.obs
         for w in decodes:
             req = w.request
             k_eff = max(0, min(k, req.output_len - req.generated - 1))
@@ -281,6 +288,11 @@ class SimBackend:
             self._emitted[req.req_id] = max(
                 1, min(accepted + 1, req.output_len - req.generated))
             self.spec_tracker.observe(pos, accepted, now, proposed=k_eff)
+            if obs is not None:
+                obs.emit(now, SPEC_STEP, inst=self.cfg.name,
+                         req=req.req_id, tenant=req.tenant,
+                         payload={"accepted": int(accepted),
+                                  "proposed": int(k_eff)})
         return latency
 
     def decode_emitted(self, req: SimRequest) -> int:
@@ -293,6 +305,7 @@ class SimBackend:
         kb = self.memory.kv_bytes_per_token
         host_b = match.host_tokens * kb
         ssd_b = match.ssd_tokens * kb
+        fetch0 = self._pending_fetch_s
         if host_b > 0:
             # promote host-tier blocks: pay the fetch on this request
             t = self.memory.transfer_time(host_b, "host", "device")
@@ -311,6 +324,7 @@ class SimBackend:
             self._pending_fetch_s += self.perf.kv_copy_cost(usable)
             self._restored_tokens += usable
             self._restore_events += 1
+        self.last_restore_s = self._pending_fetch_s - fetch0
         return usable
 
     def on_tier_transfer(self, src: str, dst: str, n_bytes: float,

@@ -25,6 +25,7 @@ from repro.core.metrics import (aggregate, merge_expert_load,
 from repro.core.network import NetworkModel
 from repro.core.request import QUEUED, SimRequest
 from repro.core.trace import Trace, TraceRegistry
+from repro.obs.events import ARRIVAL, FAIL, PD_EXPORT, PREEMPT, SCALE
 from repro.runtime.backend import ExecutionBackend
 from repro.runtime.instance import RuntimeInstance
 from repro.runtime.prefix_cache import RadixPrefixCache
@@ -49,9 +50,14 @@ class ServingRuntime:
 
     def __init__(self, cfg: ClusterCfg, backend_factory: BackendFactory,
                  traces: Optional[TraceRegistry] = None,
-                 hw: Optional["HardwareRegistry"] = None):
+                 hw: Optional["HardwareRegistry"] = None,
+                 recorder=None):
         self.cfg = cfg
         self.backend_factory = backend_factory
+        # event recorder (repro.obs.EventRecorder) — None disables tracing
+        # entirely: instances/router/backends keep obs=None and every
+        # emission site short-circuits on one attribute load
+        self.obs = recorder
         self.queue = EventQueue()
         self.network = NetworkModel(cfg.network)
         self.traces = traces or TraceRegistry()
@@ -76,6 +82,7 @@ class ServingRuntime:
         self._refresh_skippable()
         self.router = GlobalRouter(
             cfg.router, list(self.instances.values()))
+        self.router.obs = recorder
         self.finished: List[SimRequest] = []
         self._all_requests: List[SimRequest] = []
         self.autoscaler = None
@@ -131,6 +138,8 @@ class ServingRuntime:
                 cache = RadixPrefixCache(icfg.prefix_cache, backend.memory,
                                          name=f"{icfg.name}.cache")
         inst = RuntimeInstance(icfg, self.queue, backend, cache=cache)
+        if self.obs is not None:
+            inst.attach_obs(self.obs)
         inst.on_request_done = self._on_done
         if self.pd_map.get(icfg.name):
             inst.on_prefill_done = self._handoff
@@ -164,6 +173,12 @@ class ServingRuntime:
             kv_bytes = kv_bytes / max(src.cfg.model.n_layers, 1)
         done_t = self.network.kv_transfer_done(
             self.queue.now, src.name, tgt.name, kv_bytes)
+        obs = self.obs
+        if obs is not None:
+            obs.emit(self.queue.now, PD_EXPORT, inst=src.name,
+                     req=req.req_id, tenant=req.tenant,
+                     payload={"target": tgt.name, "bytes": float(kv_bytes),
+                              "arrive_t": done_t})
         self.queue.schedule_at(
             done_t, lambda: tgt.admit_decode(req, handoff),
             tag=f"kv:{src.name}->{tgt.name}")
@@ -187,9 +202,16 @@ class ServingRuntime:
                              slo_tpot_ms=getattr(r, "slo_tpot_ms", 200.0))
             self._all_requests.append(sim)
             self.queue.schedule_at(
-                r.arrival,
-                lambda s=sim: self.router.dispatch(s, self.queue.now),
-                tag="arrival")
+                r.arrival, lambda s=sim: self._arrive(s), tag="arrival")
+
+    def _arrive(self, req: SimRequest):
+        obs = self.obs
+        if obs is not None:
+            obs.emit(self.queue.now, ARRIVAL, req=req.req_id,
+                     tenant=req.tenant,
+                     payload={"prompt": req.prompt_len,
+                              "output": req.output_len})
+        self.router.dispatch(req, self.queue.now)
 
     # ---- failures / elastic scaling ----
     def inject_failure(self, t: float, instance: str,
@@ -197,22 +219,38 @@ class ServingRuntime:
         def fail():
             inst = self.instances[instance]
             orphans = inst.fail()
+            obs = self.obs
+            if obs is not None:
+                obs.emit(self.queue.now, FAIL, inst=instance,
+                         payload={"orphans": len(orphans)})
+                for req in orphans:
+                    obs.emit(self.queue.now, PREEMPT, inst=instance,
+                             req=req.req_id, tenant=req.tenant,
+                             payload={"reason": "failure"})
             for req in orphans:
                 req.state = QUEUED
                 req.cached_prefix = 0
                 self.router.dispatch(req, self.queue.now)
         self.queue.schedule_at(t, fail, tag=f"fail:{instance}")
         if recover_after is not None:
-            self.queue.schedule_at(
-                t + recover_after,
-                lambda: self.instances[instance].revive(),
-                tag=f"revive:{instance}")
+            def revive():
+                self.instances[instance].revive()
+                obs = self.obs
+                if obs is not None:
+                    obs.emit(self.queue.now, SCALE, inst=instance,
+                             payload={"action": "revive"})
+            self.queue.schedule_at(t + recover_after, revive,
+                                   tag=f"revive:{instance}")
 
     def add_instance(self, t: float, icfg: InstanceCfg):
         """Elastic scale-out at simulated time t (same wiring as init)."""
         def add():
             inst = self._build_instance(icfg)
             self.router.instances.append(inst)
+            obs = self.obs
+            if obs is not None:
+                obs.emit(self.queue.now, SCALE, inst=icfg.name,
+                         payload={"action": "scale_out"})
             # a scale-out instance can flip isolation (e.g. first global-
             # scope cache user): re-derive for the whole fleet.  Events
             # already in the heap keep their old flag; that is safe —
@@ -239,6 +277,13 @@ class ServingRuntime:
         orphans = inst.drain()
         if inst in self.router.instances:
             self.router.instances.remove(inst)
+        obs = self.obs
+        if obs is not None:
+            obs.emit(self.queue.now, SCALE, inst=name,
+                     payload={"action": "scale_in", "orphans": len(orphans)})
+            for req in orphans:
+                obs.emit(self.queue.now, PREEMPT, inst=name, req=req.req_id,
+                         tenant=req.tenant, payload={"reason": "drain"})
         self.retired[name] = inst
         # late P/D KV transfers already in flight toward this instance
         # restart from prefill elsewhere instead of parking forever
@@ -270,6 +315,10 @@ class ServingRuntime:
                 inst.on_prefill_done = (self._handoff
                                         if self.pd_map.get(name) else None)
             self._refresh_skippable()
+            obs = self.obs
+            if obs is not None:
+                obs.emit(self.queue.now, SCALE,
+                         payload={"action": "rebalance_pd"})
         self.queue.schedule_at(t, apply, tag="rebalance_pd")
 
     def attach_autoscaler(self, scaler):
@@ -333,4 +382,12 @@ class ServingRuntime:
                  if "kv_tiers" in s]
         if tiers:
             m["kv_tiers"] = merge_kv_tiers(tiers)
+        # routing introspection is always on (cheap per-arrival counters);
+        # the latency-attribution rollup needs the event log, so it only
+        # appears when a recorder is attached — keeping tracing-disabled
+        # metrics byte-identical to pre-tracing builds
+        m["routing"] = self.router.stats()
+        if self.obs is not None:
+            from repro.obs.attribution import attribution
+            m["attribution"] = attribution(self._all_requests, self.obs)
         return m

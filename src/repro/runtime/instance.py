@@ -21,6 +21,8 @@ from repro.core.config import InstanceCfg
 from repro.core.engine import EventQueue
 from repro.core.request import (DECODING, FINISHED, QUEUED,
                                 TRANSFERRING, SimRequest)
+from repro.obs.events import (ADMIT, FINISH, ITER, KV_RESTORE, KV_TIER,
+                              PD_ADMIT, PREEMPT)
 from repro.runtime.backend import ExecutionBackend, KvHandoff
 from repro.runtime.prefix_cache import RadixPrefixCache
 from repro.runtime.scheduler import BatchScheduler, ScheduledWork
@@ -65,9 +67,16 @@ class RuntimeInstance:
         self.decisions: Deque[Tuple[Tuple[int, str, int], ...]] = \
             deque(maxlen=65536)
         # KV-pool watermark timeline: (t, pool blocks in use, running reqs)
-        # sampled once per iteration — vLLM-style watermark plots
+        # sampled once per iteration — vLLM-style watermark plots.  The
+        # window is configurable (InstanceCfg.watermark_window) and the
+        # dropped-sample count is surfaced in stats() so timeline
+        # consumers know when the record is truncated
         self.kv_watermark: Deque[Tuple[float, int, int]] = \
-            deque(maxlen=4096)
+            deque(maxlen=max(int(cfg.watermark_window), 1))
+        self._wm_appended = 0
+        # event recorder (None = tracing disabled; every emission site is
+        # guarded so the disabled path costs one attribute load)
+        self.obs = None
         # callbacks wired by the cluster
         self.on_prefill_done: Optional[Callable] = None   # P/D handoff
         self.on_request_done: Optional[Callable] = None
@@ -79,6 +88,18 @@ class RuntimeInstance:
         # P/D arrivals that found no slot/memory; drained as capacity frees
         self._pending_decode: Deque[Tuple[SimRequest,
                                           Optional[KvHandoff]]] = deque()
+
+    # ---- observability ----
+    def attach_obs(self, recorder) -> None:
+        """Enable event tracing: wire the recorder into the instance, its
+        scheduler (admission hook) and its backend (spec-step events)."""
+        self.obs = recorder
+        self.scheduler.on_admit = self._emit_admit
+        self.backend.obs = recorder
+
+    def _emit_admit(self, req: SimRequest):
+        self.obs.emit(self.queue.now, ADMIT, inst=self.name,
+                      req=req.req_id, tenant=req.tenant)
 
     # ---- request entry ----
     def submit(self, req: SimRequest):
@@ -105,6 +126,15 @@ class RuntimeInstance:
             self.cache.pin(m.nodes)
             req._pinned_nodes = m.nodes   # type: ignore[attr-defined]
             self._settle_cache()
+            obs = self.obs
+            if obs is not None and m.tokens > 0:
+                obs.emit(self.queue.now, KV_RESTORE, inst=self.name,
+                         req=req.req_id, tenant=req.tenant,
+                         payload={"tokens": usable,
+                                  "seconds": getattr(self.backend,
+                                                     "last_restore_s", 0.0),
+                                  "host_tokens": m.host_tokens,
+                                  "ssd_tokens": m.ssd_tokens})
         self.scheduler.enqueue(req)
         self._kick()
 
@@ -137,17 +167,32 @@ class RuntimeInstance:
             if phase == "decode":
                 # rough per-step cost, feeding the fast-forward pre-gate
                 self._ff_latency_hint = latency
-        self.queue.schedule(latency, lambda: self._finish_iteration(work),
+        self.queue.schedule(latency,
+                            lambda: self._finish_iteration(work, latency),
                             tag=f"{self.name}.iter",
                             skippable=self.iter_skippable)
 
-    def _finish_iteration(self, work: List[ScheduledWork]):
+    def _finish_iteration(self, work: List[ScheduledWork],
+                          latency: float = 0.0):
         if not self.alive:
             return
         now = self.queue.now
         self.kv_watermark.append(
             (now, self.mem.total_blocks - self.mem.free_blocks,
              len(self.scheduler.running)))
+        self._wm_appended += 1
+        obs = self.obs
+        if obs is not None:
+            phases = {w.phase for w in work}
+            obs.emit(now, ITER, inst=self.name,
+                     phase=(phases.pop() if len(phases) == 1 else "mixed"),
+                     dur=latency,
+                     payload={"items": tuple((w.request.req_id, w.phase,
+                                              w.tokens) for w in work),
+                              "kv_used": self.mem.total_blocks
+                              - self.mem.free_blocks,
+                              "running": len(self.scheduler.running),
+                              "waiting": len(self.scheduler.waiting)})
         for w in work:
             req = w.request
             if w.phase == "prefill":
@@ -279,6 +324,19 @@ class RuntimeInstance:
                 (times[i], used0 + int(used_deltas[i]), nrun))
             self.busy_time += lat[i]
             self.phase_time["decode"] += lat[i]
+        self._wm_appended += n
+        obs = self.obs
+        if obs is not None:
+            # synthesize the per-step iteration events the stepped path
+            # would have emitted — same timestamps, durations and gauges
+            # (the waiting/running sets are provably frozen mid-window)
+            waiting = len(self.scheduler.waiting)
+            for i in range(n):
+                obs.emit(times[i], ITER, inst=self.name, phase="decode",
+                         dur=lat[i],
+                         payload={"items": decision,
+                                  "kv_used": used0 + int(used_deltas[i]),
+                                  "running": nrun, "waiting": waiting})
         self.iterations += n
         self.total_tokens += tokens * n
         self.phase_tokens["decode"] += tokens * n
@@ -324,6 +382,10 @@ class RuntimeInstance:
     def _finish_request(self, req: SimRequest):
         req.state = FINISHED
         req.t_finish = self.queue.now
+        obs = self.obs
+        if obs is not None:
+            obs.emit(req.t_finish, FINISH, inst=self.name, req=req.req_id,
+                     tenant=req.tenant, payload={"tokens": req.generated})
         self.scheduler.complete(req)
         self.backend.release(req)
         self._unpin(req)
@@ -332,6 +394,11 @@ class RuntimeInstance:
 
     def _on_preempt(self, req: SimRequest):
         req.cached_prefix = max(0, self.backend.on_preempt(req))
+        obs = self.obs
+        if obs is not None:
+            obs.emit(self.queue.now, PREEMPT, inst=self.name,
+                     req=req.req_id, tenant=req.tenant,
+                     payload={"reason": "memory"})
 
     def _settle_cache(self):
         """Hand tier moves from the last cache mutation to the backend.
@@ -352,10 +419,18 @@ class RuntimeInstance:
             return
         transfers = self.cache.take_transfers()
         fn = getattr(self.backend, "on_tier_transfer", None)
-        if fn is None:
-            return
-        for src, dst, n_bytes, prefix in transfers:
-            fn(src, dst, n_bytes, prefix)
+        if fn is not None:
+            for src, dst, n_bytes, prefix in transfers:
+                fn(src, dst, n_bytes, prefix)
+        obs = self.obs
+        if obs is not None and transfers:
+            now = self.queue.now
+            res = self.cache.residency()
+            for src, dst, n_bytes, _prefix in transfers:
+                obs.emit(now, KV_TIER, inst=self.name,
+                         payload={"src": src, "dst": dst,
+                                  "bytes": float(n_bytes),
+                                  "residency": res})
 
     def _unpin(self, req: SimRequest):
         nodes = getattr(req, "_pinned_nodes", None)
@@ -398,6 +473,11 @@ class RuntimeInstance:
             self._pending_decode.append((req, handoff))
             return
         self.backend.import_kv(req, handoff)
+        obs = self.obs
+        if obs is not None:
+            obs.emit(self.queue.now, PD_ADMIT, inst=self.name,
+                     req=req.req_id, tenant=req.tenant,
+                     payload={"parked": False})
         self._kick()
 
     def _drain_pending_decode(self):
@@ -410,6 +490,11 @@ class RuntimeInstance:
                 break
             self._pending_decode.popleft()
             self.backend.import_kv(req, handoff)
+            obs = self.obs
+            if obs is not None:
+                obs.emit(self.queue.now, PD_ADMIT, inst=self.name,
+                         req=req.req_id, tenant=req.tenant,
+                         payload={"parked": True})
 
     # ---- failures / elasticity ----
     def fail(self) -> List[SimRequest]:
@@ -482,7 +567,11 @@ class RuntimeInstance:
              # scheduler ledger exposure: per-request blocks held right now
              # plus the sampled pool watermark timeline (vLLM-style plots)
              "kv_occupancy": self.scheduler.occupancy(),
-             "kv_watermark": list(self.kv_watermark)}
+             "kv_watermark": list(self.kv_watermark),
+             # samples evicted by the bounded window — nonzero means the
+             # timeline above is truncated (raise watermark_window)
+             "kv_watermark_dropped": self._wm_appended
+             - len(self.kv_watermark)}
         if self.cache is not None:
             s["prefix_cache"] = self.cache.stats()
             kv = {"cache": self.cache.name,

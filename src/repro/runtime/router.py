@@ -35,6 +35,7 @@ from typing import TYPE_CHECKING, Dict, List, Type
 
 from repro.core.config import RouterCfg
 from repro.core.request import SimRequest
+from repro.obs.events import ROUTE
 
 if TYPE_CHECKING:   # instances are duck-typed: .alive/.cfg/.cache/.load()
     from repro.runtime.instance import RuntimeInstance as Instance
@@ -51,10 +52,23 @@ class RoutingPolicy:
     ``inst.cfg`` — the same signals on both execution backends.
     """
     name = "base"
+    #: outcome label of the last ``choose`` call — policies with a
+    #: fallback path overwrite it per decision ("prefix" vs "fallback");
+    #: ``None`` makes the router count the decision under the policy name
+    last_decision = None
 
     def choose(self, req: SimRequest, candidates: List["Instance"],
                now: float) -> "Instance":
         raise NotImplementedError
+
+    def scores(self, req: SimRequest, candidates: List["Instance"],
+               now: float):
+        """Per-candidate score map for observability (higher/lower need
+        not be comparable across policies — the event payload documents
+        intent, not a total order).  Read-only: probes must not bump any
+        counters.  ``None`` means the policy has no meaningful score
+        (e.g. round-robin).  Only called when event tracing is enabled."""
+        return None
 
 
 class RoundRobin(RoutingPolicy):
@@ -75,6 +89,9 @@ class LeastLoaded(RoutingPolicy):
     def choose(self, req, candidates, now):
         return min(candidates, key=lambda i: i.load())
 
+    def scores(self, req, candidates, now):
+        return {i.name: i.load() for i in candidates}
+
 
 class PrefixAware(RoutingPolicy):
     """Route to the instance whose prefix cache matches longest; fall back
@@ -93,8 +110,15 @@ class PrefixAware(RoutingPolicy):
                 best, best_tokens = inst, m.tokens
         if best is not None and best_tokens >= 32 and \
                 best.load() < 4 * min(c.load() for c in candidates) + 8:
+            self.last_decision = "prefix"
             return best
+        self.last_decision = "fallback"
         return min(candidates, key=lambda i: i.load())
+
+    def scores(self, req, candidates, now):
+        return {i.name: (float(i.cache.peek(req.prompt_tokens).tokens)
+                         if i.cache is not None else 0.0)
+                for i in candidates}
 
 
 class KvResidency(RoutingPolicy):
@@ -109,29 +133,38 @@ class KvResidency(RoutingPolicy):
     keeps a hot cache from starving the rest of the fleet."""
     name = "kv_residency"
 
+    @staticmethod
+    def _effective_tokens(inst, req) -> float:
+        if inst.cache is None:
+            return 0.0
+        m = inst.cache.peek(req.prompt_tokens)
+        if m.tokens <= 0:
+            return 0.0
+        kb = inst.mem.kv_bytes_per_token
+        restore_s = 0.0
+        if m.host_tokens:
+            restore_s += inst.mem.transfer_time(
+                m.host_tokens * kb, "host", "device")
+        if m.ssd_tokens:
+            restore_s += inst.mem.transfer_time(
+                m.ssd_tokens * kb, "ssd", "device")
+        return m.tokens - restore_s * inst.throughput_estimate("prefill")
+
     def choose(self, req, candidates, now):
         best, best_eff = None, 0.0
         for inst in candidates:
-            if inst.cache is None:
-                continue
-            m = inst.cache.peek(req.prompt_tokens)
-            if m.tokens <= 0:
-                continue
-            kb = inst.mem.kv_bytes_per_token
-            restore_s = 0.0
-            if m.host_tokens:
-                restore_s += inst.mem.transfer_time(
-                    m.host_tokens * kb, "host", "device")
-            if m.ssd_tokens:
-                restore_s += inst.mem.transfer_time(
-                    m.ssd_tokens * kb, "ssd", "device")
-            eff = m.tokens - restore_s * inst.throughput_estimate("prefill")
+            eff = self._effective_tokens(inst, req)
             if eff > best_eff:
                 best, best_eff = inst, eff
         if best is not None and best_eff >= 32 and \
                 best.load() < 4 * min(c.load() for c in candidates) + 8:
+            self.last_decision = "residency"
             return best
+        self.last_decision = "fallback"
         return min(candidates, key=lambda i: i.load())
+
+    def scores(self, req, candidates, now):
+        return {i.name: self._effective_tokens(i, req) for i in candidates}
 
 
 class HardwareAware(RoutingPolicy):
@@ -151,12 +184,17 @@ class HardwareAware(RoutingPolicy):
     """
     name = "hardware_aware"
 
+    @staticmethod
+    def _score(inst) -> float:
+        phase = "prefill" if inst.cfg.role == "prefill" else None
+        return (inst.load() + 1.0) / max(
+            inst.throughput_estimate(phase), 1e-9)
+
     def choose(self, req, candidates, now):
-        def score(inst):
-            phase = "prefill" if inst.cfg.role == "prefill" else None
-            return (inst.load() + 1.0) / max(
-                inst.throughput_estimate(phase), 1e-9)
-        return min(candidates, key=score)
+        return min(candidates, key=self._score)
+
+    def scores(self, req, candidates, now):
+        return {i.name: self._score(i) for i in candidates}
 
 
 _POLICIES: Dict[str, Type[RoutingPolicy]] = {
@@ -184,6 +222,11 @@ class GlobalRouter:
                 f"{sorted(_POLICIES)}")
         self.policy = _POLICIES[cfg.policy]()
         self.dispatched = 0
+        # per-outcome decision counts (always on: one dict bump per
+        # arrival) — surfaced as metrics()["routing"]
+        self.decision_counts: Dict[str, int] = {}
+        # event recorder (None = tracing disabled)
+        self.obs = None
 
     def candidates_for(self, req: SimRequest) -> List["Instance"]:
         cands = [i for i in self.instances if i.alive
@@ -199,7 +242,23 @@ class GlobalRouter:
         return cands
 
     def dispatch(self, req: SimRequest, now: float) -> "Instance":
-        inst = self.policy.choose(req, self.candidates_for(req), now)
+        policy = self.policy
+        policy.last_decision = None
+        cands = self.candidates_for(req)
+        inst = policy.choose(req, cands, now)
+        label = policy.last_decision or policy.name
+        self.decision_counts[label] = self.decision_counts.get(label, 0) + 1
         self.dispatched += 1
+        obs = self.obs
+        if obs is not None:
+            obs.emit(now, ROUTE, req=req.req_id, tenant=req.tenant,
+                     payload={"policy": policy.name, "chosen": inst.name,
+                              "decision": label,
+                              "scores": policy.scores(req, cands, now)})
         inst.submit(req)
         return inst
+
+    def stats(self) -> dict:
+        return {"policy": self.cfg.policy,
+                "dispatched": self.dispatched,
+                "decisions": dict(self.decision_counts)}

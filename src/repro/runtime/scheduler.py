@@ -147,6 +147,10 @@ class BatchScheduler:
         self.served_tokens: Dict[str, int] = {}
         # wired by the instance: free backend-side state on preemption
         self.on_preempt: Optional[Callable[[SimRequest], None]] = None
+        # wired by the instance only when event tracing is enabled:
+        # fires once per waiting->running admission (P/D remote admits
+        # are reported separately as pd_admit events)
+        self.on_admit: Optional[Callable[[SimRequest], None]] = None
 
     def enqueue(self, req: SimRequest):
         self.waiting.push(req)
@@ -317,6 +321,8 @@ class BatchScheduler:
             self.waiting.remove(req)
             req.state = PREFILLING
             self.running.append(req)
+            if self.on_admit is not None:
+                self.on_admit(req)
             chunk = min(req.remaining_prefill,
                         cfg.prefill_chunk if cfg.chunked_prefill
                         else req.remaining_prefill,
@@ -344,6 +350,8 @@ class BatchScheduler:
                 self.waiting.remove(req)
                 req.state = PREFILLING
                 self.running.append(req)
+                if self.on_admit is not None:
+                    self.on_admit(req)
                 n = req.remaining_prefill
                 if n > 0:
                     work = [ScheduledWork(req, n, "prefill")]

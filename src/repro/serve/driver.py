@@ -93,7 +93,8 @@ class DriverCfg:
 class ServeDriver:
     def __init__(self, engines: List[ServingEngine],
                  cfg: DriverCfg = DriverCfg(),
-                 pd_map: Optional[Dict[str, Tuple[str, ...]]] = None):
+                 pd_map: Optional[Dict[str, Tuple[str, ...]]] = None,
+                 recorder=None):
         self.cfg = cfg
         self.engines = {e.name: e for e in engines}
         ccfg = ClusterCfg(
@@ -103,10 +104,14 @@ class ServeDriver:
             network=NetworkCfg(inter_instance_bw=cfg.kv_transfer_bw,
                                inter_instance_latency=cfg.kv_transfer_latency),
             pd_map=pd_map)
+        # recorder: a repro.obs.EventRecorder — build it with
+        # wall_clock=True so the real engine's events carry wall-clock
+        # stamps alongside simulated time (same schema as the sim)
         self.runtime = ServingRuntime(
             ccfg,
             backend_factory=lambda icfg, trace: JaxBackend(
-                self.engines[icfg.name], icfg))
+                self.engines[icfg.name], icfg),
+            recorder=recorder)
 
     @property
     def finished(self) -> List[SimRequest]:

@@ -22,6 +22,7 @@ from repro.core.cluster import Cluster
 from repro.core.config import TPU_V5E, HardwareSpec, ModelSpec
 from repro.core.perfmodel import BatchItem, PerfModel
 from repro.core.trace import Trace
+from repro.obs import EventRecorder
 from repro.profiler import model_spec_from_arch, profile_arch
 from repro.workload import ShareGPTConfig, generate
 from repro.workload.sharegpt import Request
@@ -58,16 +59,26 @@ def _pair(ccfg, reqs, registry=None, setup=None):
     observable surface is identical; returns both metric dicts + clusters
     so tests can add scenario-specific assertions.  ``setup(cluster)``
     runs before workload submission — the hook scale/drain/autoscale
-    scenarios use to schedule their elastic events on both runs."""
+    scenarios use to schedule their elastic events on both runs.
+
+    Both runs carry an event recorder, so parity covers the traced
+    surface too: fast-forward must synthesize the same per-lane event
+    streams as exact stepping (and the attribution rollup derived from
+    them lands in the compared metrics)."""
     def one(fast):
-        cl = Cluster(ccfg, traces=registry, fast_path=fast)
+        rec = EventRecorder()
+        cl = Cluster(ccfg, traces=registry, fast_path=fast, recorder=rec)
         if setup is not None:
             setup(cl)
         cl.submit_workload([copy.deepcopy(r) for r in reqs])
-        return cl.run(), cl
+        return cl.run(), cl, rec
 
-    m_f, cl_f = one(True)
-    m_e, cl_e = one(False)
+    m_f, cl_f, rec_f = one(True)
+    m_e, cl_e, rec_e = one(False)
+    st_f, st_e = rec_f.streams(), rec_e.streams()
+    assert set(st_f) == set(st_e)
+    for lane in st_f:
+        assert st_f[lane] == st_e[lane], f"event stream diverges: {lane}"
     sf, se = dict(m_f), dict(m_e)
     for k in ("sim_wall_s", "sim_events"):
         sf.pop(k), se.pop(k)

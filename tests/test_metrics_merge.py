@@ -1,0 +1,133 @@
+"""Direct unit tests for the cluster-level metric mergers
+(``repro.core.metrics``): the dedup/anchoring rules are load-bearing for
+multi-instance rollups but were previously only exercised indirectly
+through end-to-end runs.
+"""
+import pytest
+
+from repro.core.metrics import (aggregate, merge_kv_tiers,
+                                merge_spec_decode)
+from repro.core.request import FINISHED, SimRequest
+
+
+# --------------------------------------------------------------------------
+# merge_kv_tiers: dedup by cache name
+# --------------------------------------------------------------------------
+
+def _tier_stats(cache, device=10, host=4, ssd=0, hit_dev=100,
+                transfers=None):
+    return {"cache": cache,
+            "residency_blocks": {"device": device, "host": host, "ssd": ssd},
+            "hit_tokens": {"device": hit_dev, "host": 0, "ssd": 0},
+            "transfers": transfers or {}}
+
+
+def test_merge_kv_tiers_dedups_shared_cache_by_name():
+    """A ``scope="global"`` radix tree shows up in every instance's stats
+    under one shared cache name — its residency must be counted ONCE."""
+    shared = [_tier_stats("global", device=10, host=4, hit_dev=100)
+              for _ in range(3)]
+    m = merge_kv_tiers(shared)
+    assert m["caches_merged"] == 1
+    assert m["residency_blocks"] == {"device": 10, "host": 4, "ssd": 0}
+    assert m["hit_tokens"]["device"] == 100
+
+
+def test_merge_kv_tiers_sums_distinct_caches():
+    stats = [
+        _tier_stats("i0", device=10, host=2, hit_dev=50,
+                    transfers={"device->host": {"blocks": 3, "bytes": 300.0}}),
+        _tier_stats("i1", device=7, host=0, ssd=5, hit_dev=20,
+                    transfers={"device->host": {"blocks": 1, "bytes": 100.0},
+                               "host->ssd": {"blocks": 5, "bytes": 500.0}}),
+    ]
+    m = merge_kv_tiers(stats)
+    assert m["caches_merged"] == 2
+    assert m["residency_blocks"] == {"device": 17, "host": 2, "ssd": 5}
+    assert m["hit_tokens"]["device"] == 70
+    assert m["transfers"]["device->host"] == {"blocks": 4, "bytes": 400.0}
+    assert m["transfers"]["host->ssd"] == {"blocks": 5, "bytes": 500.0}
+
+
+def test_merge_kv_tiers_mixed_shared_and_private():
+    """One global cache seen twice plus one private cache: the global
+    counts once, the private adds on top."""
+    stats = [_tier_stats("global", device=10),
+             _tier_stats("global", device=10),
+             _tier_stats("i1-private", device=3, host=1)]
+    m = merge_kv_tiers(stats)
+    assert m["caches_merged"] == 2
+    assert m["residency_blocks"]["device"] == 13
+    assert m["residency_blocks"]["host"] == 5
+
+
+# --------------------------------------------------------------------------
+# merge_spec_decode: most-common-k anchoring
+# --------------------------------------------------------------------------
+
+def _spec_stats(k, steps, accepted, proposed=None):
+    return {"k": k, "steps": steps,
+            "proposed_tokens": proposed if proposed is not None
+            else steps * k,
+            "accepted_tokens": accepted,
+            "accepted_hist": [0] * (k + 1),
+            "step_timeline": []}
+
+
+def test_merge_spec_decode_anchors_on_most_common_k():
+    """Mixed draft lengths cannot be summed: the rollup anchors on the
+    most common ``k`` (not dict/list order) and skips the rest."""
+    stats = [_spec_stats(4, steps=10, accepted=20),
+             _spec_stats(2, steps=99, accepted=99),   # first, but minority
+             _spec_stats(4, steps=30, accepted=60)]
+    stats = [stats[1], stats[0], stats[2]]            # minority k first
+    m = merge_spec_decode(stats)
+    assert m["k"] == 4
+    assert m["instances_merged"] == 2                 # undercount reported
+    assert m["steps"] == 40
+    assert m["accepted_tokens"] == 80
+    assert m["proposed_tokens"] == 160
+    assert m["acceptance_rate"] == pytest.approx(0.5)
+    assert m["mean_accepted_len"] == pytest.approx(2.0)
+    assert m["emitted_tokens"] == 80 + 40
+    assert m["wasted_draft_tokens"] == 80
+    assert len(m["accepted_hist"]) == 5               # k+1 bins for k=4
+
+
+def test_merge_spec_decode_uniform_k_merges_all():
+    stats = [_spec_stats(3, steps=5, accepted=10) for _ in range(4)]
+    m = merge_spec_decode(stats)
+    assert m["instances_merged"] == 4
+    assert m["steps"] == 20 and m["accepted_tokens"] == 40
+
+
+# --------------------------------------------------------------------------
+# aggregate: no-ITL regression (single-token outputs)
+# --------------------------------------------------------------------------
+
+def _finished_req(req_id, output_len, token_times):
+    r = SimRequest(req_id=req_id, arrival=0.0,
+                   prompt_tokens=list(range(8)), output_len=output_len)
+    r.state = FINISHED
+    r.generated = output_len
+    r.token_times = list(token_times)
+    r.t_first_token = token_times[0]
+    r.t_finish = token_times[-1]
+    r.kv_blocks_peak = 1
+    return r
+
+
+def test_aggregate_reports_none_itl_for_single_token_outputs():
+    """Every output is one token -> no inter-token latencies exist; the
+    aggregate must say None, not fabricate a perfect 0.0."""
+    m = aggregate([_finished_req(0, 1, [0.5]), _finished_req(1, 1, [0.7])])
+    assert m["finished"] == 2
+    assert m["itl_mean_s"] is None
+    assert m["itl_p99_s"] is None
+    assert m["ttft_mean_s"] > 0                # other stats still computed
+
+
+def test_aggregate_itl_present_with_multi_token_outputs():
+    m = aggregate([_finished_req(0, 3, [0.5, 0.6, 0.8])])
+    assert m["itl_mean_s"] == pytest.approx(0.15)
+    assert m["itl_p99_s"] == pytest.approx(0.2, rel=0.05)

@@ -1,0 +1,376 @@
+"""Observability-layer tests (``repro.obs``, docs/observability.md):
+
+* attribution exactness — per-request waterfall segments must telescope
+  to exactly ``t_finish - arrival`` (the segments are *defined* as a
+  partition of the request's lifetime, so equality is construction, and
+  these tests pin it);
+* trace invisibility — attaching a recorder must not change a single
+  metric of the simulation it observes;
+* Chrome-trace export validity + the ``python -m repro.obs`` CLI;
+* simulated-time-series sampling determinism;
+* routing introspection and the kv_watermark_dropped counter.
+"""
+import copy
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (ClusterCfg, InstanceCfg, PrefixCacheCfg, RouterCfg,
+                        SchedulerCfg, TraceRegistry, simulate)
+from repro.core.cluster import Cluster
+from repro.core.config import TPU_V5E, HardwareSpec, ModelSpec
+from repro.core.request import FINISHED
+from repro.obs import (SEGMENTS, EventRecorder, chrome_trace,
+                       validate_chrome_trace, write_chrome_trace)
+from repro.obs.events import (ADMIT, ARRIVAL, FINISH, PD_ADMIT, PD_EXPORT,
+                              ROUTE)
+from repro.profiler import model_spec_from_arch, profile_arch
+from repro.workload import ShareGPTConfig, generate
+from repro.workload.sharegpt import Request
+
+ARCH = "llama3.1-8b-tiny"
+
+
+@pytest.fixture(scope="module")
+def tiny_trace():
+    return profile_arch(ARCH, hardware="tpu-v5e", mode="analytical", tp=1)
+
+
+def _registry(trace):
+    r = TraceRegistry()
+    r.register(ARCH, trace)
+    return r
+
+
+def _inst(name="i0", **kw):
+    spec = model_spec_from_arch(get_config(ARCH))
+    base = dict(hw=TPU_V5E, model=spec, n_devices=1,
+                scheduler=SchedulerCfg(max_batch_size=8,
+                                       max_batch_tokens=2048),
+                trace_name=ARCH)
+    base.update(kw)
+    return InstanceCfg(name=name, **base)
+
+
+def _run(ccfg, reqs, registry=None, recorder=None):
+    cl = Cluster(ccfg, traces=registry, recorder=recorder)
+    cl.submit_workload([copy.deepcopy(r) for r in reqs])
+    return cl.run(), cl
+
+
+def _assert_waterfalls_exact(m, cl):
+    """Every finished request's segments must sum to its e2e latency
+    EXACTLY (1e-9 relative — float addition noise only, no model slack),
+    and ``total_s`` must match the request object's own timestamps."""
+    attr = m["attribution"]
+    reqs = {r.req_id: r for r in cl._all_requests}
+    finished = [r for r in cl._all_requests if r.state == FINISHED]
+    assert finished and len(attr["requests"]) == len(finished)
+    for rid, row in attr["requests"].items():
+        r = reqs[rid]
+        assert row["total_s"] == r.t_finish - r.arrival
+        assert set(row["segments"]) == set(SEGMENTS)
+        assert all(v >= 0.0 for v in row["segments"].values())
+        total = sum(row["segments"].values())
+        assert total == pytest.approx(row["total_s"], rel=1e-9, abs=1e-12)
+        # the timeline is contiguous and spans [arrival, finish]
+        tl = row["timeline"]
+        assert tl[0][0] == r.arrival and tl[-1][1] == r.t_finish
+        for (a0, a1, _), (b0, _, _) in zip(tl, tl[1:]):
+            assert a1 == b0
+    return attr
+
+
+# --------------------------------------------------------------------------
+# attribution: waterfall segments partition the request lifetime exactly
+# --------------------------------------------------------------------------
+
+def _pressure_cfg(n_inst=2):
+    """Tight-HBM instances (mid-decode preemption) with a prefix cache,
+    behind a least-loaded router — the segment mix this produces covers
+    queue_wait / prefill / decode / preempt_redo in one scenario."""
+    model = ModelSpec(name="m", n_layers=2, d_model=64, n_heads=2,
+                      n_kv_heads=1, d_head=16, d_ff=128, vocab=1000,
+                      param_bytes=1e6)
+    # 30 blocks of HBM with a sliver ceded to the prefix cache: one
+    # 22-block request fits (progress guaranteed), two concurrent don't
+    # (mid-decode preemption guaranteed)
+    hw = HardwareSpec(name="tiny", peak_flops=1e12, hbm_bw=1e11,
+                      hbm_capacity=(1e6 + 30 * 16 * model.kv_bytes_per_token)
+                      / 0.9 + 1, link_bw=1e9)
+    insts = tuple(
+        InstanceCfg(name=f"i{k}", hw=hw, model=model,
+                    scheduler=SchedulerCfg(max_batch_size=8,
+                                           max_batch_tokens=4096),
+                    prefix_cache=PrefixCacheCfg(enabled=True,
+                                                capacity_fraction=0.1))
+        for k in range(n_inst))
+    return ClusterCfg(insts, router=RouterCfg("least_loaded"))
+
+
+def _segment_totals(attr):
+    return {k: sum(r["segments"][k] for r in attr["requests"].values())
+            for k in SEGMENTS}
+
+
+def test_attribution_sums_to_e2e_under_pressure():
+    rng = np.random.default_rng(0)
+    # simultaneous arrivals: both of an instance's requests join the same
+    # first batch, then outgrow the pool together -> guaranteed preemption
+    reqs = [Request(req_id=i, arrival=0.0,
+                    prompt_tokens=rng.integers(0, 1000, 100).tolist(),
+                    output_len=250) for i in range(4)]
+    rec = EventRecorder()
+    m, cl = _run(_pressure_cfg(), reqs, recorder=rec)
+    assert m["finished"] == 4
+    assert m["preemptions"] > 0
+    attr = _assert_waterfalls_exact(m, cl)
+    tot = _segment_totals(attr)
+    assert tot["prefill"] > 0 and tot["decode"] > 0
+    # preemptions happened, so redone work must be attributed somewhere
+    assert tot["preempt_redo"] > 0
+    # tenant rollup covers every request and mirrors the totals
+    tens = attr["tenants"]
+    assert sum(t["requests"] for t in tens.values()) == m["finished"]
+    for t in tens.values():
+        assert t["bottleneck_counts"]
+        assert t["dominant"] in SEGMENTS
+
+
+def test_attribution_pd_transfer_segment(tiny_trace):
+    """P/D disaggregation: the prefill->decode handoff must show up as a
+    positive pd_transfer segment, and the waterfall still telescopes."""
+    reqs = generate(ShareGPTConfig(n_requests=16, rate=200.0, vocab=1000,
+                                   mean_prompt=40, max_prompt=80,
+                                   mean_output=30, max_output=60, seed=7))
+    ccfg = ClusterCfg((_inst("p0", role="prefill"),
+                       _inst("d0", role="decode")),
+                      pd_map={"p0": ("d0",)})
+    rec = EventRecorder()
+    m, cl = _run(ccfg, reqs, _registry(tiny_trace), recorder=rec)
+    assert m["finished"] == 16
+    attr = _assert_waterfalls_exact(m, cl)
+    assert _segment_totals(attr)["pd_transfer"] > 0
+    # every request crossed the wire: export on p0, admit on d0
+    kinds = {}
+    for e in rec.events:
+        kinds.setdefault(e.kind, []).append(e)
+    assert len(kinds[PD_EXPORT]) == 16 and len(kinds[PD_ADMIT]) == 16
+    assert all(e.inst == "p0" for e in kinds[PD_EXPORT])
+    assert all(e.inst == "d0" for e in kinds[PD_ADMIT])
+
+
+# --------------------------------------------------------------------------
+# trace invisibility: recording must not perturb the simulation
+# --------------------------------------------------------------------------
+
+def test_tracing_is_invisible_to_metrics(tiny_trace):
+    reqs = generate(ShareGPTConfig(n_requests=30, rate=150.0, vocab=1000,
+                                   share_fraction=0.8, n_conversations=3,
+                                   mean_prompt=50, max_prompt=100,
+                                   mean_output=40, max_output=80, seed=11))
+    ccfg = ClusterCfg(tuple(_inst(f"i{k}",
+                                  prefix_cache=PrefixCacheCfg(enabled=True))
+                            for k in range(2)),
+                      router=RouterCfg("least_loaded"))
+    m_off, _ = _run(ccfg, reqs, _registry(tiny_trace))
+    rec = EventRecorder()
+    m_on, _ = _run(ccfg, reqs, _registry(tiny_trace), recorder=rec)
+    assert rec.events
+    on, off = dict(m_on), dict(m_off)
+    assert on.pop("attribution")            # the only key tracing may add
+    for d in (on, off):
+        d.pop("sim_wall_s")
+    i_on, i_off = on.pop("instances"), off.pop("instances")
+    assert on == off                        # incl. sim_events: no sampler
+    assert i_on == i_off
+
+
+# --------------------------------------------------------------------------
+# exporters: Chrome trace JSON, raw event log, CLI
+# --------------------------------------------------------------------------
+
+def _small_traced_run(tiny_trace):
+    reqs = generate(ShareGPTConfig(n_requests=20, rate=150.0, vocab=1000,
+                                   mean_prompt=40, max_prompt=80,
+                                   mean_output=30, max_output=60, seed=3))
+    ccfg = ClusterCfg(tuple(_inst(f"i{k}") for k in range(2)),
+                      router=RouterCfg("least_loaded"))
+    rec = EventRecorder()
+    m, cl = _run(ccfg, reqs, _registry(tiny_trace), recorder=rec)
+    assert m["finished"] == 20
+    return m, cl, rec
+
+
+def test_chrome_trace_is_valid_and_complete(tiny_trace, tmp_path):
+    m, cl, rec = _small_traced_run(tiny_trace)
+    obj = chrome_trace(rec)
+    assert validate_chrome_trace(obj) == []
+    evs = obj["traceEvents"]
+    # per-instance lanes carry iteration slices...
+    slices = [e for e in evs if e["ph"] == "X"]
+    assert any(e["pid"] == 0 for e in slices)
+    # ...and waterfall slices land in the request process with the
+    # attribution segment names
+    wf = {e["name"] for e in slices if e["pid"] == 1}
+    assert wf & set(SEGMENTS)
+    counters = {e["name"] for e in evs if e["ph"] == "C"}
+    assert any(c.endswith("queue_depth") for c in counters)
+    assert any(c.endswith("batch") for c in counters)
+    assert any(c.endswith("kv_used") for c in counters)
+    # writer round-trips through JSON on disk
+    p = tmp_path / "trace.json"
+    write_chrome_trace(rec, str(p))
+    assert validate_chrome_trace(json.loads(p.read_text())) == []
+
+
+def test_simulate_trace_path_writes_chrome_json(tiny_trace, tmp_path):
+    """The one-argument spelling: ``simulate(..., trace=path)`` leaves a
+    Perfetto-loadable file behind."""
+    reqs = generate(ShareGPTConfig(n_requests=10, rate=100.0, vocab=1000,
+                                   mean_prompt=30, max_prompt=60,
+                                   mean_output=20, max_output=40, seed=5))
+    p = tmp_path / "out.json"
+    m = simulate(ClusterCfg((_inst(),)), reqs, traces=_registry(tiny_trace),
+                 trace=str(p))
+    assert m["finished"] == 10 and "attribution" in m
+    assert validate_chrome_trace(json.loads(p.read_text())) == []
+
+
+def test_event_log_roundtrip_and_cli_export(tiny_trace, tmp_path):
+    m, cl, rec = _small_traced_run(tiny_trace)
+    log = tmp_path / "events.json"
+    rec.save(str(log))
+    loaded = EventRecorder.load(str(log))
+    # equality is on the canonical (JSON) form: in-memory payloads may
+    # hold tuples where the round-trip holds lists
+    assert [e.to_dict() for e in loaded.events] \
+        == [e.to_dict() for e in rec.events]
+    assert set(loaded.streams()) == set(rec.streams())
+    # the CLI re-exports a valid trace from the saved log
+    out = tmp_path / "trace.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "export",
+         "--events", str(log), "--out", str(out)],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    assert validate_chrome_trace(json.loads(out.read_text())) == []
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "validate", str(out)],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+
+
+def test_validator_rejects_malformed_traces():
+    assert validate_chrome_trace({"traceEvents": None})
+    bad_slice = {"traceEvents": [
+        {"ph": "X", "pid": 0, "tid": 0, "ts": 1.0}]}       # X without dur
+    assert validate_chrome_trace(bad_slice)
+    regressing = {"traceEvents": [
+        {"ph": "C", "pid": 0, "tid": 0, "ts": 5.0, "name": "c",
+         "args": {"v": 1}},
+        {"ph": "C", "pid": 0, "tid": 0, "ts": 1.0, "name": "c",
+         "args": {"v": 2}}]}                               # ts regresses
+    assert validate_chrome_trace(regressing)
+
+
+# --------------------------------------------------------------------------
+# simulated-time series
+# --------------------------------------------------------------------------
+
+def test_series_sampling_is_deterministic_and_stateful(tiny_trace):
+    m, cl, rec = _small_traced_run(tiny_trace)
+    s1 = rec.series(interval=0.01)
+    s2 = rec.series(interval=0.01)
+    assert s1 == s2                         # derived, not sampled: replayable
+    t = s1["t"]
+    assert t == sorted(t) and len(t) >= 2
+    assert set(s1["instances"]) == {"i0", "i1"}
+    for tracks in s1["instances"].values():
+        assert set(tracks) == {"kv_used", "running", "queue_depth"}
+        assert all(len(v) == len(t) for v in tracks.values())
+    assert any(max(tr["kv_used"]) > 0 for tr in s1["instances"].values())
+    # tenant inflight rises above zero and drains back to zero
+    assert s1["tenants"]
+    for track in s1["tenants"].values():
+        assert len(track) == len(t)
+        assert max(track) > 0 and track[-1] == 0
+    with pytest.raises(ValueError):
+        rec.series(interval=0.0)
+
+
+# --------------------------------------------------------------------------
+# routing introspection + watermark drop counter (satellites)
+# --------------------------------------------------------------------------
+
+def test_routing_metrics_and_route_events(tiny_trace):
+    reqs = generate(ShareGPTConfig(n_requests=24, rate=150.0, vocab=1000,
+                                   share_fraction=0.8, n_conversations=3,
+                                   mean_prompt=50, max_prompt=100,
+                                   mean_output=20, max_output=40, seed=9))
+    ccfg = ClusterCfg(tuple(_inst(f"i{k}",
+                                  prefix_cache=PrefixCacheCfg(enabled=True))
+                            for k in range(2)),
+                      router=RouterCfg("prefix_aware"))
+    rec = EventRecorder()
+    m, cl = _run(ccfg, reqs, _registry(tiny_trace), recorder=rec)
+    routing = m["routing"]
+    assert routing["policy"] == "prefix_aware"
+    assert routing["dispatched"] == 24
+    assert sum(routing["decisions"].values()) == 24
+    # prefix_aware reports which branch chose: cache-guided vs fallback
+    assert set(routing["decisions"]) <= {"prefix", "fallback"}
+    assert routing["decisions"].get("prefix", 0) > 0
+    routes = [e for e in rec.events if e.kind == ROUTE]
+    assert len(routes) == 24
+    for e in routes:
+        assert e.payload["policy"] == "prefix_aware"
+        assert e.payload["chosen"] in ("i0", "i1")
+        assert set(e.payload["scores"]) == {"i0", "i1"}
+    # routing metrics are always on — no recorder required
+    m_off, _ = _run(ccfg, reqs, _registry(tiny_trace))
+    assert m_off["routing"] == routing
+
+
+def test_kv_watermark_window_and_drop_counter(tiny_trace):
+    reqs = generate(ShareGPTConfig(n_requests=12, rate=100.0, vocab=1000,
+                                   mean_prompt=40, max_prompt=80,
+                                   mean_output=30, max_output=60, seed=2))
+    wide, _ = _run(ClusterCfg((_inst(),)), reqs, _registry(tiny_trace))
+    w = wide["instances"]["i0"]
+    assert w["kv_watermark_dropped"] == 0
+    iters = w["iterations"]
+    small, _ = _run(ClusterCfg((_inst(watermark_window=8),)), reqs,
+                    _registry(tiny_trace))
+    s = small["instances"]["i0"]
+    assert len(s["kv_watermark"]) == 8
+    assert s["kv_watermark_dropped"] == iters - 8
+    # the kept tail matches the untruncated timeline's tail
+    assert s["kv_watermark"] == w["kv_watermark"][-8:]
+
+
+# --------------------------------------------------------------------------
+# event-stream plumbing details
+# --------------------------------------------------------------------------
+
+def test_request_lifecycle_event_order(tiny_trace):
+    """Per request: arrival -> route -> admit -> iters -> finish, with
+    nondecreasing timestamps, on the recorder's global order."""
+    m, cl, rec = _small_traced_run(tiny_trace)
+    by_req = {}
+    for e in rec.sorted_events():
+        if e.req is not None:
+            by_req.setdefault(e.req, []).append(e)
+    assert len(by_req) == 20
+    for rid, evs in by_req.items():
+        kinds = [e.kind for e in evs]
+        assert kinds[0] == ARRIVAL and kinds[1] == ROUTE
+        assert ADMIT in kinds and kinds[-1] == FINISH
+        ts = [e.t for e in evs]
+        assert ts == sorted(ts)
+        fin = evs[-1]
+        assert fin.payload["tokens"] > 0
